@@ -1,0 +1,81 @@
+"""Paper Fig. 7: cumulative average system cost/reward during DRL training,
+for discount factors gamma in {0.5, 0.7, 0.9} (paper: gamma=0.9 best)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, save_result
+from repro.core.marl import (DDPGConfig, act, env_reset, env_step,
+                             maddpg_init, maddpg_update, observe, ou_init,
+                             ou_step, replay_add, replay_init, replay_sample)
+from repro.core.marl.env import EnvConfig
+
+
+def train_curve(gamma: float, episodes: int, steps: int, cfg: EnvConfig,
+                seed: int = 0) -> list:
+    dcfg = DDPGConfig(gamma=gamma, batch_size=32)
+    key = jax.random.PRNGKey(seed)
+    agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
+    buf = replay_init(2048, cfg.state_dim, cfg.n_bs, cfg.action_dim)
+    step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+    cum = []
+    total = 0.0
+    n = 0
+    for ep in range(episodes):
+        key, ke = jax.random.split(key)
+        st = env_reset(cfg, ke)
+        obs = observe(cfg, st)
+        noise = ou_init((cfg.n_bs, cfg.action_dim))
+        for t in range(steps):
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            noise = ou_step(noise, k1,
+                            sigma=max(0.3 * (1 - ep / max(episodes - 1, 1)),
+                                      0.02))
+            a = jnp.clip(act(agent, obs) + noise, -1, 1)
+            st, r, _ = step_jit(st, a, k2)
+            obs2 = observe(cfg, st)
+            buf = replay_add(buf, obs, a, r, obs2)
+            obs = obs2
+            total += float(r.mean())
+            n += 1
+            if int(buf.size) > 64:
+                agent, _ = maddpg_update(dcfg, agent,
+                                         replay_sample(buf, k3,
+                                                       dcfg.batch_size))
+        cum.append(total / n)  # paper's R_n: cumulative average reward
+    return cum
+
+
+def run(episodes: int = 20, steps: int = 20, n_twins: int = 20,
+        gammas=(0.5, 0.7, 0.9)) -> dict:
+    cfg = EnvConfig(n_twins=n_twins, n_bs=5)
+    out = {"episodes": episodes,
+           "series": {str(g): train_curve(g, episodes, steps, cfg, seed=1)
+                      for g in gammas}}
+    out["final"] = {g: v[-1] for g, v in out["series"].items()}
+    save_result("fig7_reward", out)
+    return out
+
+
+def main(reduced: bool = True):
+    with Timer() as t:
+        out = run(episodes=14 if reduced else 60, steps=25 if reduced else 50,
+                  n_twins=15 if reduced else 100)
+    fin = out["final"]
+    print("fig7: final cumulative avg reward per gamma:",
+          {k: round(v, 2) for k, v in fin.items()}, f"({t.seconds:.0f}s)")
+    # convergence: cumulative average stabilizes (late delta << early delta)
+    for g, series in out["series"].items():
+        if len(series) > 4:
+            early = abs(series[1] - series[0]) + 1e-9
+            late = abs(series[-1] - series[-2])
+            print(f"  gamma={g}: early delta {early:.3f} late {late:.3f}")
+    return {"name": "fig7_reward",
+            "us_per_call": t.seconds * 1e6,
+            "derived": "|".join(f"g{k}/{v:.2f}" for k, v in fin.items())}
+
+
+if __name__ == "__main__":
+    main(reduced=False)

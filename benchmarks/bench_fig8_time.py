@@ -1,0 +1,86 @@
+"""Paper Fig. 8: wall time of the optimization algorithm itself —
+per-iteration DRL training time vs test (inference-only) time, for two
+discount factors."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, save_result
+from repro.core.marl import (DDPGConfig, act, env_reset, env_step,
+                             maddpg_init, maddpg_update, observe, ou_init,
+                             ou_step, replay_add, replay_init, replay_sample)
+from repro.core.marl.env import EnvConfig
+
+
+def run(iters: int = 30, n_twins: int = 20, gammas=(0.5, 0.9)) -> dict:
+    cfg = EnvConfig(n_twins=n_twins, n_bs=5)
+    out = {"series": {}}
+    for g in gammas:
+        dcfg = DDPGConfig(gamma=g, batch_size=32)
+        key = jax.random.PRNGKey(0)
+        agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
+        buf = replay_init(512, cfg.state_dim, cfg.n_bs, cfg.action_dim)
+        st = env_reset(cfg, key)
+        obs = observe(cfg, st)
+        noise = ou_init((cfg.n_bs, cfg.action_dim))
+        step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+        # warmup/fill
+        for i in range(40):
+            key, k1, k2 = jax.random.split(key, 3)
+            noise = ou_step(noise, k1)
+            a = jnp.clip(act(agent, obs) + noise, -1, 1)
+            st, r, _ = step_jit(st, a, k2)
+            obs2 = observe(cfg, st)
+            buf = replay_add(buf, obs, a, r, obs2)
+            obs = obs2
+        agent, _ = maddpg_update(dcfg, agent, replay_sample(buf, key, 32))
+
+        train_t, test_t = [], []
+        for i in range(iters):
+            key, k1, k2, k3 = jax.random.split(key, 4)
+            t0 = time.time()
+            a = jnp.clip(act(agent, obs) + ou_step(noise, k1), -1, 1)
+            st, r, _ = step_jit(st, a, k2)
+            obs = observe(cfg, st)
+            buf = replay_add(buf, obs, a, r, obs)
+            agent, _ = maddpg_update(dcfg, agent,
+                                     replay_sample(buf, k3, 32))
+            jax.block_until_ready(agent.actor)
+            train_t.append(time.time() - t0)
+            t0 = time.time()
+            a = act(agent, obs)
+            jax.block_until_ready(a)
+            test_t.append(time.time() - t0)
+        out["series"][str(g)] = {
+            "train_ms_per_iter": [t * 1e3 for t in train_t],
+            "test_ms_per_iter": [t * 1e3 for t in test_t],
+        }
+    out["mean"] = {
+        g: {"train_ms": float(jnp.mean(jnp.asarray(v["train_ms_per_iter"]))),
+            "test_ms": float(jnp.mean(jnp.asarray(v["test_ms_per_iter"])))}
+        for g, v in out["series"].items()}
+    save_result("fig8_time", out)
+    return out
+
+
+def main(reduced: bool = True):
+    with Timer() as t:
+        out = run(iters=15 if reduced else 100,
+                  n_twins=15 if reduced else 100)
+    for g, m in out["mean"].items():
+        ratio = m["train_ms"] / max(m["test_ms"], 1e-9)
+        print(f"fig8 gamma={g}: train {m['train_ms']:.1f}ms/iter vs test "
+              f"{m['test_ms']:.2f}ms/iter (train/test = {ratio:.0f}x)")
+    g0 = list(out["mean"])[0]
+    return {"name": "fig8_time",
+            "us_per_call": out["mean"][g0]["train_ms"] * 1e3,
+            "derived": "|".join(
+                f"g{g}/train{m['train_ms']:.0f}ms/test{m['test_ms']:.1f}ms"
+                for g, m in out["mean"].items())}
+
+
+if __name__ == "__main__":
+    main(reduced=False)

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs XLA reference wall time on
+CPU is NOT meaningful for TPU perf — this bench instead checks numerical
+parity at benchmark shapes and times the XLA-path ops that the models
+actually execute here."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, save_result
+from repro.kernels import ref
+from repro.models.layers import attention_chunked, attention_reference
+
+
+def time_call(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def main(reduced: bool = True):
+    key = jax.random.PRNGKey(0)
+    S = 512 if reduced else 2048
+    q = jax.random.normal(key, (1, S, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+
+    with Timer() as t:
+        chunked = jax.jit(lambda q, k, v: attention_chunked(
+            q, k, v, causal=True, block_q=128, block_k=128))
+        naive = jax.jit(lambda q, k, v: attention_reference(q, k, v,
+                                                            causal=True))
+        t_c = time_call(chunked, q, k, v)
+        t_n = time_call(naive, q, k, v)
+        err = float(jnp.max(jnp.abs(chunked(q, k, v) - naive(q, k, v))))
+
+        # ssd at model-realistic chunk
+        B, T, H, P, N = 1, 1024 if not reduced else 256, 4, 32, 32
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, T, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+        Bm = jax.random.normal(ks[3], (B, T, N))
+        Cm = jax.random.normal(ks[4], (B, T, N))
+        ssd = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=64))
+        t_s = time_call(ssd, x, dt, A, Bm, Cm)
+
+    out = {"attn_chunked_ms": t_c * 1e3, "attn_naive_ms": t_n * 1e3,
+           "attn_err": err, "ssd_ms": t_s * 1e3, "seq": S}
+    save_result("kernels", out)
+    print(f"kernels: chunked-attn {t_c*1e3:.1f}ms vs naive {t_n*1e3:.1f}ms "
+          f"(err {err:.1e}); ssd {t_s*1e3:.1f}ms @S={S}")
+    return {"name": "kernels", "us_per_call": t_c * 1e6,
+            "derived": f"attn_err/{err:.1e}|ssd_ms/{t_s*1e3:.1f}"}
+
+
+if __name__ == "__main__":
+    main(reduced=False)

@@ -1,0 +1,65 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and prints per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and HBM residency per device."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Timer
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh_filter: str | None = None) -> list:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            continue
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def print_table(recs: list) -> None:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} {'layout':7s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+           f"{'dominant':>12s} {'useful':>7s} {'HBM/dev':>8s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in recs:
+        rf = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        hbm = r["bytes"]["hbm_per_device"] / 1e9
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+              f"{r.get('layout','?'):7s} "
+              f"{rf['compute_s']:10.4f} {rf['memory_s']:10.4f} "
+              f"{rf['collective_s']:10.4f} {rf['dominant']:>12s} "
+              f"{(f'{u:.3f}' if u else '-'):>7s} {hbm:7.2f}G")
+
+
+def main(reduced: bool = True):
+    with Timer() as t:
+        recs = load_records()
+    if not recs:
+        print("roofline: no dry-run artifacts yet "
+              "(run `python -m repro.launch.dryrun --all` first)")
+        return {"name": "roofline", "us_per_call": t.seconds * 1e6,
+                "derived": "no-artifacts"}
+    print_table(recs)
+    n_ok = len(recs)
+    worst = max(recs, key=lambda r: r["roofline"]["roofline_step_s"])
+    return {"name": "roofline",
+            "us_per_call": t.seconds * 1e6,
+            "derived": f"combos/{n_ok}|worst/{worst['arch']}x{worst['shape']}"
+                       f"/{worst['roofline']['roofline_step_s']:.2f}s"}
+
+
+if __name__ == "__main__":
+    main(reduced=False)

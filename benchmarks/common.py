@@ -1,0 +1,25 @@
+"""Shared helpers for the per-figure benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(os.path.join(RESULTS_DIR, "bench"), exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "bench", f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

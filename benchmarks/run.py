@@ -1,0 +1,53 @@
+"""Benchmark harness: one entry per paper table/figure (+ beyond-paper
+roofline & hierarchy benches). Prints ``name,us_per_call,derived`` CSV.
+
+Default is the reduced (CI-scale) configuration; pass --full for
+paper-scale runs (hours on CPU).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig5,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_fig5_latency, bench_fig6_loss,
+                            bench_fig7_reward, bench_fig8_time,
+                            bench_hierarchy, bench_kernels, bench_roofline)
+
+    benches = {
+        "fig5": bench_fig5_latency.main,
+        "fig6": bench_fig6_loss.main,
+        "fig7": bench_fig7_reward.main,
+        "fig8": bench_fig8_time.main,
+        "kernels": bench_kernels.main,
+        "hierarchy": bench_hierarchy.main,
+        "roofline": bench_roofline.main,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    rows = []
+    failed = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            rows.append(fn(reduced=not args.full))
+        except Exception as e:
+            failed += 1
+            traceback.print_exc()
+            rows.append({"name": name, "us_per_call": -1,
+                         "derived": f"FAILED:{e}"})
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.0f},{r['derived']}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: one federated DTWN round end-to-end in ~a minute on CPU.
+
+Builds the full paper stack — digital twins on BSs, wireless OFDMA rates,
+DPoS blockchain, hierarchical Eq. 4/5 aggregation — runs two federated
+rounds of the paper's CNN on CIFAR-10(-sim), and prints the latency
+accounting (Eqs. 12-17).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import association as assoc_mod
+from repro.data import cifar10
+from repro.fl import DTWNSystem, FLConfig
+
+
+def main():
+    data = cifar10.load(max_train=3000, max_test=512)
+    print(f"dataset: {data[2]} ({data[0][0].shape[0]} train images)")
+
+    cfg = FLConfig(n_users=20, n_bs=5, local_iters=3)
+    system = DTWNSystem(cfg, data, seed=0)
+    print(f"DTWN: {cfg.n_users} twins on {cfg.n_bs} BSs @ "
+          f"{list(cfg.bs_freqs_ghz)} GHz; chain producers = "
+          f"{system.chain.elect_producers()}")
+
+    assoc = np.asarray(assoc_mod.greedy_association(
+        system.lat, system.data_sizes, system.freqs, np.full(cfg.n_bs, 1e8)))
+    print(f"greedy edge association (twin -> BS): {assoc.tolist()}")
+
+    for rnd in range(2):
+        info = system.run_round(assoc, participating_users=8)
+        print(f"round {info['round']}: latency={info['round_time_s']:.2f}s "
+              f"loss={info['loss']:.3f} verified={info['n_verified']}/"
+              f"{info['n_submitted']} chain_valid={info['chain_valid']}")
+    print(f"test accuracy: {system.test_accuracy():.3f}")
+    print(f"blockchain: {len(system.chain.blocks)} blocks, stakes = "
+          f"{[round(s, 2) for s in system.chain.stakes]}")
+
+
+if __name__ == "__main__":
+    main()

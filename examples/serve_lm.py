@@ -1,0 +1,25 @@
+"""Serving demo: batched prefill + greedy decode for any assigned arch
+(smoke-size on CPU). Thin wrapper over repro.launch.serve.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    args = ap.parse_args()
+    return serve.main(["--arch", args.arch, "--batch", str(args.batch),
+                       "--prompt-len", str(args.prompt_len),
+                       "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

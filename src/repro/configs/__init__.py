@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, smoke_reduce
+
+_ARCH_MODULES = {
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "gemma2-9b": "repro.configs.gemma2_9b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+# (arch, shape) combos excluded from long_500k per DESIGN.md §5: pure
+# full-attention architectures with no claimed sub-quadratic variant.
+LONG_CONTEXT_SKIPS = frozenset(
+    {"qwen1.5-4b", "command-r-plus-104b", "qwen2-vl-7b", "deepseek-v2-236b",
+     "seamless-m4t-large-v2"}
+)
+
+
+def supports_shape(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in LONG_CONTEXT_SKIPS:
+        return False
+    return True
+
+
+def get_arch_config(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).get_config()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).get_smoke_config()
+
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_NAMES",
+    "LONG_CONTEXT_SKIPS",
+    "get_arch_config",
+    "get_smoke_config",
+    "smoke_reduce",
+    "supports_shape",
+]

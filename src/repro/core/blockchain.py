@@ -1,0 +1,157 @@
+"""Permissioned blockchain with DPoS consensus (paper Section II-C).
+
+The BSs are the chain nodes. Three record kinds (paper): digital-twin model
+records, digital-twin data records, and training-model records. Stake
+("training coins") is initialized proportional to hosted twin data (Eq. 6)
+and adjusted by verification outcomes: a local model that passes the quality
+gate earns coins, one that fails earns nothing.
+
+The verification predicate (unspecified in the paper — DESIGN.md §9.4) is a
+holdout-loss quality gate: a submitted model is accepted iff its holdout loss
+is within ``tolerance`` of the median of the round's submissions (guards
+against poisoned/broken updates).
+
+Latency of broadcast/validation is *accounted* via repro.core.latency
+(Eqs. 15-16); this module implements the ledger mechanics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def hash_pytree(tree) -> str:
+    """SHA-256 of a parameter pytree's bytes (leaves in canonical order)."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Transaction:
+    kind: str          # dt_model | dt_data | train_model
+    sender: int        # BS index
+    payload_hash: str
+    round: int
+    meta: Tuple[Tuple[str, Any], ...] = ()
+
+    def digest(self) -> str:
+        return hashlib.sha256(json.dumps(
+            [self.kind, self.sender, self.payload_hash, self.round,
+             list(self.meta)], sort_keys=True).encode()).hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class Block:
+    index: int
+    prev_hash: str
+    producer: int
+    transactions: Tuple[Transaction, ...]
+    hash: str = ""
+
+    def compute_hash(self) -> str:
+        body = json.dumps(
+            [self.index, self.prev_hash, self.producer,
+             [t.digest() for t in self.transactions]]).encode()
+        return hashlib.sha256(body).hexdigest()
+
+
+GENESIS_HASH = "0" * 64
+
+
+class DPoSChain:
+    """Delegated-Proof-of-Stake permissioned ledger among M BS nodes."""
+
+    def __init__(self, n_nodes: int, twin_data_per_node: Sequence[float],
+                 s_ini: float = 100.0, n_producers: int = 3,
+                 reward: float = 1.0, tolerance: float = 0.5):
+        self.n_nodes = n_nodes
+        self.n_producers = min(n_producers, n_nodes)
+        self.reward = reward
+        self.tolerance = tolerance
+        total = float(sum(twin_data_per_node)) or 1.0
+        # Eq. 6: initial coins proportional to hosted twin data
+        self.stakes = [s_ini * float(d) / total for d in twin_data_per_node]
+        self.blocks: List[Block] = []
+        self.pending: List[Transaction] = []
+        self._round = 0
+
+    # ---- stake / producers -------------------------------------------------
+    def elect_producers(self) -> List[int]:
+        """Stake-weighted vote: every node votes its coins; in the permission
+        model each node backs candidates proportionally to candidate stake,
+        so the elected set is the top-M_p by stake (deterministic ties)."""
+        order = sorted(range(self.n_nodes),
+                       key=lambda i: (-self.stakes[i], i))
+        return order[: self.n_producers]
+
+    def current_producer(self) -> int:
+        producers = self.elect_producers()
+        return producers[len(self.blocks) % len(producers)]
+
+    # ---- transactions ------------------------------------------------------
+    def submit_model(self, sender: int, params, round_: int,
+                     holdout_loss: float) -> Transaction:
+        tx = Transaction("train_model", sender, hash_pytree(params), round_,
+                         meta=(("holdout_loss", float(holdout_loss)),))
+        self.pending.append(tx)
+        return tx
+
+    def submit_twin_update(self, sender: int, payload_hash: str,
+                           round_: int, kind: str = "dt_data") -> Transaction:
+        tx = Transaction(kind, sender, payload_hash, round_)
+        self.pending.append(tx)
+        return tx
+
+    # ---- verification gate -------------------------------------------------
+    def verify_round(self) -> Dict[int, bool]:
+        """Quality-gate all pending train_model txs of the current round:
+        accepted iff holdout loss <= median + tolerance. Winners earn coins
+        (paper: 'coins will be awarded'), losers 'get no pay'."""
+        model_txs = [t for t in self.pending if t.kind == "train_model"]
+        losses = {t.sender: dict(t.meta)["holdout_loss"] for t in model_txs}
+        if not losses:
+            return {}
+        med = float(np.median(list(losses.values())))
+        verdicts = {s: (l <= med + self.tolerance) for s, l in losses.items()}
+        for s, ok in verdicts.items():
+            if ok:
+                self.stakes[s] += self.reward
+        return verdicts
+
+    # ---- block production --------------------------------------------------
+    def produce_block(self) -> Block:
+        producer = self.current_producer()
+        prev = self.blocks[-1].hash if self.blocks else GENESIS_HASH
+        blk = Block(index=len(self.blocks), prev_hash=prev, producer=producer,
+                    transactions=tuple(self.pending))
+        blk = dataclasses.replace(blk, hash=blk.compute_hash())
+        self.blocks.append(blk)
+        self.pending = []
+        self._round += 1
+        return blk
+
+    # ---- audit ---------------------------------------------------------------
+    def validate_chain(self) -> bool:
+        prev = GENESIS_HASH
+        for i, blk in enumerate(self.blocks):
+            if blk.index != i or blk.prev_hash != prev:
+                return False
+            if blk.compute_hash() != blk.hash:
+                return False
+            prev = blk.hash
+        return True
+
+    def verified_senders(self, round_: int) -> List[int]:
+        out = []
+        for blk in self.blocks:
+            for t in blk.transactions:
+                if t.kind == "train_model" and t.round == round_:
+                    out.append(t.sender)
+        return out

@@ -1,0 +1,85 @@
+"""Wireless communication model (paper Section II-D, Eqs. 7-8).
+
+OFDMA with C shared sub-channels between the M BSs and the MBS. Uplink rate
+(Eq. 7) is time-fraction weighted Shannon capacity with co-channel
+interference from other BSs; downlink (Eq. 8) is the MBS broadcast rate.
+
+This substrate is *simulation* (DESIGN.md §3): the paper's radio hardware has
+no TPU analogue, so rates feed the latency model / MARL env, not real links.
+All functions are vectorized jnp and jit/grad-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) * 1e-3
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    n_bs: int = 5
+    n_subchannels: int = 8
+    subchannel_bw_hz: float = 30e6       # "bandwidth of the subchannel is 30MHz"
+    p_uplink_dbm: float = 34.0           # RSU/BS transmit power
+    p_downlink_dbm: float = 42.0         # MBS transmit power
+    noise_dbm_per_hz: float = -174.0     # N_0
+    path_loss_exp: float = 3.0           # alpha
+    min_dist_m: float = 50.0
+    max_dist_m: float = 500.0
+    channel_corr: float = 0.9            # AR(1) fading memory across steps
+
+
+def sample_distances(cfg: WirelessConfig, key) -> jnp.ndarray:
+    """BS<->MBS distances r_{i,m}, uniform in [min, max] meters."""
+    return jax.random.uniform(key, (cfg.n_bs,), minval=cfg.min_dist_m,
+                              maxval=cfg.max_dist_m)
+
+
+def sample_channel(cfg: WirelessConfig, key) -> jnp.ndarray:
+    """Rayleigh-fading power gains h_{i,c} ~ Exp(1), shape (M, C)."""
+    return jax.random.exponential(key, (cfg.n_bs, cfg.n_subchannels))
+
+
+def evolve_channel(cfg: WirelessConfig, h, key) -> jnp.ndarray:
+    """Gauss-Markov (AR-1) fading evolution used by the MARL env dynamics."""
+    fresh = sample_channel(cfg, key)
+    rho = cfg.channel_corr
+    return rho * h + (1.0 - rho) * fresh
+
+
+def _noise_watt(cfg: WirelessConfig) -> float:
+    return dbm_to_watt(cfg.noise_dbm_per_hz) * cfg.subchannel_bw_hz
+
+
+def uplink_rate(cfg: WirelessConfig, tau, h, dist) -> jnp.ndarray:
+    """Eq. 7. tau: (M, C) time fractions; h: (M, C) gains; dist: (M,).
+    Returns per-BS achievable uplink rate, bits/s.
+
+    Interference on sub-channel c at the MBS = expected co-channel power from
+    the other BSs weighted by their time shares tau_{j,c}.
+    """
+    P = dbm_to_watt(cfg.p_uplink_dbm)
+    pl = dist[:, None] ** (-cfg.path_loss_exp)  # (M,1)
+    sig = P * h * pl  # (M, C) received power
+    tot = jnp.sum(tau * sig, axis=0, keepdims=True)  # (1, C)
+    interf = tot - tau * sig  # leave-one-out co-channel interference
+    sinr = sig / (interf + _noise_watt(cfg))
+    per_ch = cfg.subchannel_bw_hz * jnp.log2(1.0 + sinr)
+    return jnp.sum(tau * per_ch, axis=1)  # (M,)
+
+
+def downlink_rate(cfg: WirelessConfig, h_down, dist) -> jnp.ndarray:
+    """Eq. 8: MBS broadcast of the global model. h_down: (M, C)."""
+    P = dbm_to_watt(cfg.p_downlink_dbm)
+    pl = dist[:, None] ** (-cfg.path_loss_exp)
+    sig = P * h_down * pl
+    tot = jnp.sum(sig, axis=0, keepdims=True)
+    interf = tot - sig
+    sinr = sig / (interf + _noise_watt(cfg))
+    per_ch = cfg.subchannel_bw_hz * jnp.log2(1.0 + sinr)
+    return jnp.sum(per_ch, axis=1)

@@ -1,0 +1,100 @@
+"""System latency model (paper Section III, Eqs. 11-18).
+
+One federated round (Eq. 17) =
+    max_i T_cmp(i)   local twin training on BS i          (Eq. 12)
+  [ + T_la(i)        local aggregation — neglected per paper text (Eq. 14) ]
+  + max_i T_pt(i)    transaction broadcast of local models (Eq. 15)
+  + T_bv             block production + validation         (Eq. 16)
+
+Total learning time (objective of Eq. 18) = T_round / (1 - theta_G), using
+the convergence bound T(theta_G) = 1/(1-theta_G) global rounds (Eq. 11 with
+fixed local accuracy theta_L, following [17]).
+
+Units note (DESIGN.md §9.5): Eq. 12 reuses the symbol f^C for both
+cycles/sample and CPU frequency; we implement
+    T_cmp_i = (sum_j b_j * D_j) * cycles_per_sample / freq_i
+with b_j in [b_min, b_max] interpreted as the per-round sampled fraction of
+twin j's dataset (the paper's "training batch size of digital twin j").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyParams:
+    cycles_per_sample: float = 2e7       # f^C in Eq. 12
+    cycles_per_agg_byte: float = 1e3     # f_b in Eq. 13
+    cycles_per_val_byte: float = 5e3     # f^v in Eq. 16
+    model_size_bits: float = 1.6e6 * 32  # |w_g|: paper CNN ~1.6M fp32 params
+    block_size_bits: float = 8e6         # S_B
+    xi: float = 1.0                      # transmission time factor (Eq. 15)
+    n_producers: int = 3                 # M_p
+    theta_g: float = 0.7                 # global accuracy target
+    b_min: float = 0.05
+    b_max: float = 1.0
+
+
+def t_cmp(params: LatencyParams, assoc, b, data_sizes, freqs) -> jnp.ndarray:
+    """Eq. 12 per BS. assoc: (N,) twin->BS index; b: (N,) batch fractions;
+    data_sizes: (N,) samples; freqs: (M,) Hz. Returns (M,)."""
+    M = freqs.shape[0]
+    onehot = jnp.eye(M)[assoc]  # (N, M)
+    work = jnp.sum(onehot * (b * data_sizes)[:, None], axis=0)  # samples per BS
+    return work * params.cycles_per_sample / freqs
+
+
+def t_local_agg(params: LatencyParams, assoc, freqs) -> jnp.ndarray:
+    """Eq. 14 (kept for completeness; the paper neglects it in Eq. 17)."""
+    M = freqs.shape[0]
+    k_i = jnp.sum(jnp.eye(M)[assoc], axis=0)  # twins per BS
+    bytes_ = params.model_size_bits / 8.0
+    return k_i * bytes_ * params.cycles_per_agg_byte / freqs
+
+
+def t_broadcast(params: LatencyParams, assoc, uplink, n_bs: int) -> jnp.ndarray:
+    """Eq. 15: xi * log2(M) * K_i * |w_g| / R_i^U per BS."""
+    k_i = jnp.sum(jnp.eye(n_bs)[assoc], axis=0)
+    return (params.xi * jnp.log2(jnp.maximum(n_bs, 2))
+            * k_i * params.model_size_bits / jnp.maximum(uplink, 1.0))
+
+
+def t_block_validation(params: LatencyParams, downlink, freqs) -> jnp.ndarray:
+    """Eq. 16: block propagation among producers + slowest validation."""
+    prop = (params.xi * jnp.log2(jnp.maximum(params.n_producers, 2))
+            * params.block_size_bits / jnp.maximum(downlink, 1.0))
+    val = jnp.max(params.block_size_bits / 8.0 * params.cycles_per_val_byte
+                  / freqs)
+    return jnp.max(prop) + val
+
+
+def round_time_per_bs(params: LatencyParams, assoc, b, data_sizes, freqs,
+                      uplink, downlink) -> jnp.ndarray:
+    """Per-BS round time T_i — the MARL per-agent cost (reward = -T_i)."""
+    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs)
+    bc = t_broadcast(params, assoc, uplink, freqs.shape[0])
+    bv = t_block_validation(params, downlink, freqs)
+    return cmp_ + bc + bv
+
+
+def round_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
+               downlink) -> jnp.ndarray:
+    """Eq. 17: max-composed system round time T."""
+    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs)
+    bc = t_broadcast(params, assoc, uplink, freqs.shape[0])
+    bv = t_block_validation(params, downlink, freqs)
+    return jnp.max(cmp_) + jnp.max(bc) + bv
+
+
+def global_rounds(theta_g: float) -> float:
+    """Eq. 11 simplified (theta_L fixed): T(theta_G) = 1 / (1 - theta_G)."""
+    return 1.0 / (1.0 - theta_g)
+
+
+def total_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
+               downlink) -> jnp.ndarray:
+    """Objective of problem (18)."""
+    return global_rounds(params.theta_g) * round_time(
+        params, assoc, b, data_sizes, freqs, uplink, downlink)

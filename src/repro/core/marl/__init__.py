@@ -1,0 +1,4 @@
+from repro.core.marl.ddpg import DDPGConfig, MADDPGState, act, maddpg_init, maddpg_update
+from repro.core.marl.env import EnvConfig, EnvState, env_reset, env_step, observe, decode_actions
+from repro.core.marl.ou_noise import ou_init, ou_step
+from repro.core.marl.replay import Replay, replay_add, replay_init, replay_sample

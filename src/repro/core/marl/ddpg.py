@@ -1,0 +1,142 @@
+"""Multi-agent DDPG (MADDPG-style) for edge association — paper Section IV-B.
+
+Each BS agent i has actor pi_i(s) and critic Q_i(s, a_1..a_M); critics see the
+joint action (the blockchain shares states/actions among agents — paper
+Section IV-A). Updates follow Eqs. 22-25: deterministic policy gradient for
+actors, TD(0) targets from the target networks for critics, polyak soft
+target updates (Eq. 24-25 as theta_T = beta*theta + (1-beta)*theta_T).
+
+All agents share network *structure*, so parameters are stacked with a
+leading agent axis and every update is a single vmapped, jitted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.marl import networks as nets
+from repro.utils.tree import tree_scale
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    gamma: float = 0.9          # paper Fig. 7: gamma=0.9 performs best
+    actor_lr: float = 1e-4
+    critic_lr: float = 1e-3
+    polyak: float = 0.01        # beta in Eq. 24-25
+    batch_size: int = 64
+    hidden: tuple = (256, 256)
+    noise_sigma: float = 0.2
+    noise_theta: float = 0.15
+
+
+class MADDPGState(NamedTuple):
+    actor: object          # stacked (n_agents, ...) pytrees
+    critic: object
+    target_actor: object
+    target_critic: object
+    actor_opt: object      # SGD-with-momentum state
+    critic_opt: object
+
+
+def _opt_init(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _clip_by_global_norm(grads, max_norm: float = 1.0):
+    sq = sum(jnp.sum(jnp.square(g))
+             for g in jax.tree_util.tree_leaves(grads))
+    norm = jnp.sqrt(sq + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / norm)
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def _opt_update(params, grads, mom, lr, beta=0.9):
+    grads = _clip_by_global_norm(grads)
+    new_mom = jax.tree_util.tree_map(lambda m, g: beta * m + g, mom, grads)
+    new_params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params,
+                                        new_mom)
+    return new_params, new_mom
+
+
+def maddpg_init(cfg: DDPGConfig, key, n_agents: int, state_dim: int,
+                act_dim: int) -> MADDPGState:
+    def one(key):
+        ka, kc = jax.random.split(key)
+        actor = nets.actor_init(ka, state_dim, act_dim, cfg.hidden)
+        critic = nets.critic_init(kc, state_dim, n_agents * act_dim,
+                                  cfg.hidden)
+        return actor, critic
+
+    keys = jax.random.split(key, n_agents)
+    actors, critics = zip(*(one(k) for k in keys))
+    stack = lambda ts: jax.tree_util.tree_map(lambda *x: jnp.stack(x), *ts)
+    actor, critic = stack(actors), stack(critics)
+    return MADDPGState(
+        actor=actor, critic=critic,
+        target_actor=jax.tree_util.tree_map(jnp.copy, actor),
+        target_critic=jax.tree_util.tree_map(jnp.copy, critic),
+        actor_opt=_opt_init(actor), critic_opt=_opt_init(critic),
+    )
+
+
+def act(state: MADDPGState, obs: jnp.ndarray) -> jnp.ndarray:
+    """obs (state_dim,) -> joint actions (n_agents, act_dim), Eq. 21 w/o noise."""
+    return jax.vmap(lambda a: nets.actor_apply(a, obs))(state.actor)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def maddpg_update(cfg: DDPGConfig, st: MADDPGState, batch) -> tuple:
+    """One gradient step for all agents. batch = (s, a, r, s2) with
+    s: (B, S), a: (B, M, A), r: (B, M), s2: (B, S)."""
+    s, a, r, s2 = batch
+    B, M, A = a.shape
+
+    # target joint action a' = (pi'_1(s'), ..., pi'_M(s'))  (B, M, A)
+    a2 = jax.vmap(
+        lambda ap: jax.vmap(lambda o: nets.actor_apply(ap, o))(s2),
+        out_axes=1)(st.target_actor)
+    a2_flat = a2.reshape(B, M * A)
+    a_flat = a.reshape(B, M * A)
+
+    def critic_loss_i(cp, tcp, r_i):
+        q_t = jax.vmap(lambda o, ja: nets.critic_apply(tcp, o, ja))(s2, a2_flat)
+        y = r_i + cfg.gamma * q_t  # Eq. 23 target
+        q = jax.vmap(lambda o, ja: nets.critic_apply(cp, o, ja))(s, a_flat)
+        return jnp.mean((q - jax.lax.stop_gradient(y)) ** 2)
+
+    closs, cgrads = jax.vmap(
+        jax.value_and_grad(critic_loss_i), in_axes=(0, 0, 1))(
+            st.critic, st.target_critic, r)
+    critic, c_opt = _opt_update(st.critic, cgrads, st.critic_opt,
+                                cfg.critic_lr)
+
+    # actor update (Eq. 22): ascend Q_i(s, a_1..pi_i(s)..a_M)
+    agent_ids = jnp.arange(M)
+
+    def actor_loss_i(ap, cp, i):
+        my_a = jax.vmap(lambda o: nets.actor_apply(ap, o))(s)  # (B, A)
+        joint = a.at[:, i, :].set(my_a).reshape(B, M * A)
+        q = jax.vmap(lambda o, ja: nets.critic_apply(cp, o, ja))(s, joint)
+        return -jnp.mean(q)
+
+    aloss, agrads = jax.vmap(
+        jax.value_and_grad(actor_loss_i), in_axes=(0, 0, 0))(
+            st.actor, critic, agent_ids)
+    actor, a_opt = _opt_update(st.actor, agrads, st.actor_opt, cfg.actor_lr)
+
+    # Eq. 24-25 soft target updates
+    beta = cfg.polyak
+    soft = lambda t, p: jax.tree_util.tree_map(
+        lambda tt, pp: (1.0 - beta) * tt + beta * pp, t, p)
+    new = MADDPGState(
+        actor=actor, critic=critic,
+        target_actor=soft(st.target_actor, actor),
+        target_critic=soft(st.target_critic, critic),
+        actor_opt=a_opt, critic_opt=c_opt,
+    )
+    return new, {"critic_loss": jnp.mean(closs), "actor_loss": jnp.mean(aloss)}

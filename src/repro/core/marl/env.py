@@ -1,0 +1,146 @@
+"""DTWN edge-association environment — the MDP of paper Section IV-A.
+
+State  s(t) = (f^C, K, D, h): BS CPU frequencies, twins-per-BS counts, twin
+data sizes, channel gains (flattened, normalized).
+Action a_i(t) = (K_i, b_i, tau_i) per BS agent: association scores over the
+N twins, a batch-size control, and per-sub-channel bandwidth bids. Joint
+actions are projected onto the feasible set of problem (18): argmax
+association (18b), softmax bandwidth (18c), clipped batch (18d).
+Reward R_i = -T_i(t) (Eq. 19) with the shared system cost max_i T_i
+(Eq. 17) also exposed.
+
+Dynamics: channels follow Gauss-Markov fading; CPU frequencies jitter around
+their nominal values (the paper's "dynamic network states").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import association as assoc_mod
+from repro.core import comms, latency
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    n_twins: int = 100
+    n_bs: int = 5
+    wireless: comms.WirelessConfig = dataclasses.field(
+        default_factory=lambda: comms.WirelessConfig())
+    lat: latency.LatencyParams = dataclasses.field(
+        default_factory=lambda: latency.LatencyParams())
+    # paper Section V: five BSs at these max CPU frequencies (GHz)
+    bs_freqs_ghz: Tuple[float, ...] = (2.6, 1.8, 3.6, 2.4, 2.4)
+    data_min: float = 200.0   # samples per twin (CIFAR10: 50000/100 users avg)
+    data_max: float = 800.0
+    freq_jitter: float = 0.05
+    episode_len: int = 50
+    reward_scale: float = 0.02  # keeps |R| ~ O(1) so Q targets stay tame
+    shared_reward: bool = True  # paper: "each DRL agent shares the same
+    #                             reward function" (-max_i T_i, Eqs. 17/19)
+
+    @property
+    def wl(self) -> comms.WirelessConfig:
+        """Wireless config with n_bs synced to the env's BS count."""
+        if self.wireless.n_bs == self.n_bs:
+            return self.wireless
+        return dataclasses.replace(self.wireless, n_bs=self.n_bs)
+
+    @property
+    def action_dim(self) -> int:
+        # per agent: N association scores + 1 batch control + C bandwidth bids
+        return self.n_twins + 1 + self.wireless.n_subchannels
+
+    @property
+    def state_dim(self) -> int:
+        # f^C (M) + K (M) + D (N) + h (M*C)
+        return (self.n_bs * 2 + self.n_twins
+                + self.n_bs * self.wireless.n_subchannels)
+
+
+class EnvState(NamedTuple):
+    freqs: jnp.ndarray       # (M,) Hz
+    data_sizes: jnp.ndarray  # (N,)
+    h_up: jnp.ndarray        # (M, C)
+    h_down: jnp.ndarray      # (M, C)
+    dist: jnp.ndarray        # (M,)
+    assoc: jnp.ndarray       # (N,) current association (for K in the state)
+    t: jnp.ndarray           # step counter
+
+
+def observe(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
+    """Flatten + normalize the system state (blockchain-shared, so every
+    agent observes the global state — paper Section IV-A)."""
+    k_counts = jnp.sum(jnp.eye(cfg.n_bs)[st.assoc], axis=0)
+    return jnp.concatenate([
+        st.freqs / 3.6e9,
+        k_counts / cfg.n_twins,
+        st.data_sizes / cfg.data_max,
+        (st.h_up / 2.0).reshape(-1),
+    ]).astype(jnp.float32)
+
+
+def env_reset(cfg: EnvConfig, key) -> EnvState:
+    ks = jax.random.split(key, 5)
+    freqs = jnp.asarray(cfg.bs_freqs_ghz[: cfg.n_bs]) * 1e9
+    data = jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
+                              maxval=cfg.data_max)
+    return EnvState(
+        freqs=freqs,
+        data_sizes=data,
+        h_up=comms.sample_channel(cfg.wl, ks[1]),
+        h_down=comms.sample_channel(cfg.wl, ks[2]),
+        dist=comms.sample_distances(cfg.wl, ks[3]),
+        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        t=jnp.int32(0),
+    )
+
+
+def decode_actions(cfg: EnvConfig, actions: jnp.ndarray):
+    """actions: (M, action_dim) in [-1,1] -> (assoc (N,), b (N,), tau (M,C))."""
+    N, C = cfg.n_twins, cfg.wl.n_subchannels
+    scores = actions[:, :N]                      # (M, N)
+    b_ctl = actions[:, N]                        # (M,)
+    tau_logits = actions[:, N + 1:]              # (M, C)
+    assoc = assoc_mod.assoc_from_scores(scores)
+    # each twin uses its chosen BS's batch control
+    b = assoc_mod.project_batch(cfg.lat, b_ctl)[assoc]  # (N,)
+    # softmax over the BS axis -> each sub-channel's time shares sum to 1 (18c)
+    tau = assoc_mod.project_bandwidth(tau_logits * 4.0)  # (M, C)
+    return assoc, b, tau
+
+
+def env_step(cfg: EnvConfig, st: EnvState, actions: jnp.ndarray, key):
+    """Returns (next_state, per_agent_reward (M,), info dict)."""
+    assoc, b, tau = decode_actions(cfg, actions)
+    up = comms.uplink_rate(cfg.wl, tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    per_bs = latency.round_time_per_bs(cfg.lat, assoc, b, st.data_sizes,
+                                       st.freqs, up, down)
+    system_t = latency.round_time(cfg.lat, assoc, b, st.data_sizes, st.freqs,
+                                  up, down)
+    if cfg.shared_reward:
+        # Eq. 17/19: the system cost is max_i T_i and every agent shares it
+        reward = jnp.full((cfg.n_bs,), -system_t) * cfg.reward_scale
+    else:
+        reward = -per_bs * cfg.reward_scale  # per-agent variant (ablation)
+
+    ks = jax.random.split(key, 3)
+    freqs = st.freqs * (1.0 + cfg.freq_jitter
+                        * jax.random.normal(ks[0], st.freqs.shape))
+    freqs = jnp.clip(freqs, 0.5e9, 4.0e9)
+    nxt = EnvState(
+        freqs=freqs,
+        data_sizes=st.data_sizes,
+        h_up=comms.evolve_channel(cfg.wl, st.h_up, ks[1]),
+        h_down=comms.evolve_channel(cfg.wl, st.h_down, ks[2]),
+        dist=st.dist,
+        assoc=assoc,
+        t=st.t + 1,
+    )
+    info = {"system_time": system_t, "assoc": assoc, "b": b, "tau": tau,
+            "uplink": up}
+    return nxt, reward, info

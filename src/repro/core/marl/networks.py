@@ -1,0 +1,42 @@
+"""Actor / critic MLPs for the multi-agent DDPG (paper Section IV)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, sizes, dtype=jnp.float32):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = jax.random.fold_in(key, i)
+        w = jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((b,), dtype)})
+    return params
+
+
+def mlp_apply(params, x, *, final_tanh: bool = False):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return jnp.tanh(x) if final_tanh else x
+
+
+def actor_init(key, state_dim: int, action_dim: int, hidden=(256, 256)):
+    return mlp_init(key, (state_dim, *hidden, action_dim))
+
+
+def actor_apply(params, state):
+    """pi(s) in [-1, 1]^action_dim (Eq. 21 before exploration noise)."""
+    return mlp_apply(params, state, final_tanh=True)
+
+
+def critic_init(key, state_dim: int, joint_action_dim: int, hidden=(256, 256)):
+    """MADDPG critic: Q(s, a_1..a_M) sees the joint action (paper Eq. 22-23,
+    following Lowe et al. [22])."""
+    return mlp_init(key, (state_dim + joint_action_dim, *hidden, 1))
+
+
+def critic_apply(params, state, joint_action):
+    x = jnp.concatenate([state, joint_action], axis=-1)
+    return mlp_apply(params, x)[..., 0]

@@ -1,0 +1,17 @@
+"""Ornstein-Uhlenbeck exploration noise (paper Eq. 21, ref [23])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ou_init(shape, mu: float = 0.0):
+    return jnp.full(shape, mu, jnp.float32)
+
+
+def ou_step(state, key, *, mu: float = 0.0, theta: float = 0.15,
+            sigma: float = 0.2, dt: float = 1.0):
+    """x' = x + theta (mu - x) dt + sigma sqrt(dt) N(0,1)."""
+    noise = jax.random.normal(key, state.shape)
+    new = state + theta * (mu - state) * dt + sigma * (dt ** 0.5) * noise
+    return new

@@ -1,0 +1,50 @@
+"""Replay memory as preallocated jnp arrays with jitted add/sample."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Replay(NamedTuple):
+    state: jnp.ndarray       # (cap, state_dim)
+    action: jnp.ndarray      # (cap, n_agents, act_dim)
+    reward: jnp.ndarray      # (cap, n_agents)
+    next_state: jnp.ndarray  # (cap, state_dim)
+    ptr: jnp.ndarray         # scalar int32
+    size: jnp.ndarray        # scalar int32
+
+
+def replay_init(capacity: int, state_dim: int, n_agents: int,
+                act_dim: int) -> Replay:
+    return Replay(
+        state=jnp.zeros((capacity, state_dim), jnp.float32),
+        action=jnp.zeros((capacity, n_agents, act_dim), jnp.float32),
+        reward=jnp.zeros((capacity, n_agents), jnp.float32),
+        next_state=jnp.zeros((capacity, state_dim), jnp.float32),
+        ptr=jnp.int32(0),
+        size=jnp.int32(0),
+    )
+
+
+@jax.jit
+def replay_add(buf: Replay, s, a, r, s2) -> Replay:
+    cap = buf.state.shape[0]
+    i = buf.ptr % cap
+    return Replay(
+        state=buf.state.at[i].set(s),
+        action=buf.action.at[i].set(a),
+        reward=buf.reward.at[i].set(r),
+        next_state=buf.next_state.at[i].set(s2),
+        ptr=buf.ptr + 1,
+        size=jnp.minimum(buf.size + 1, cap),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def replay_sample(buf: Replay, key, batch: int):
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    return (buf.state[idx], buf.action[idx], buf.reward[idx],
+            buf.next_state[idx])

@@ -1,0 +1,2 @@
+from repro.fl.partition import dirichlet_partition, iid_partition
+from repro.fl.server import DTWNSystem, FLConfig

@@ -1,0 +1,43 @@
+"""FL client (digital twin) local training — paper Section II-B.
+
+A twin trains the shared model on its own shard with SGD for
+``local_iters`` iterations (the paper runs multiple local iterations per
+block interval T, Section II-C) and returns the updated parameters."""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import make_optimizer
+
+
+def make_local_trainer(loss_fn: Callable, lr: float = 0.05,
+                       momentum: float = 0.9):
+    opt = make_optimizer("sgd", lr=lr, momentum=momentum)
+
+    @jax.jit
+    def one_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    def train_local(params, data_x, data_y, *, batch_size: int,
+                    local_iters: int, seed: int):
+        rng = np.random.RandomState(seed)
+        opt_state = opt.init(params)
+        losses = []
+        n = data_x.shape[0]
+        bs = int(min(batch_size, n))
+        for _ in range(local_iters):
+            idx = rng.choice(n, size=bs, replace=n < bs)
+            batch = {"images": jnp.asarray(data_x[idx]),
+                     "labels": jnp.asarray(data_y[idx])}
+            params, opt_state, loss = one_step(params, opt_state, batch)
+            losses.append(float(loss))
+        return params, losses
+
+    return train_local

@@ -1,0 +1,135 @@
+"""Pallas TPU flash-attention kernel.
+
+Block-wise softmax(Q·Kᵀ)·V with online max/sum rescaling, supporting the
+union of the assigned architectures' attention flavors:
+  - causal masking (decoder LMs) / non-causal (seamless encoder)
+  - sliding-window masking (mixtral / h2o-danube / gemma2-local)
+  - logit soft-capping (gemma2)
+  - GQA via a grouped query block (G query heads share one KV head)
+
+Tiling: the grid is (batch*kv_heads, n_q_blocks, n_kv_blocks); the kv-block
+axis is the minor (sequential) grid dimension, so the fp32 accumulator lives
+in VMEM scratch across kv steps — the standard TPU flash pattern. Block sizes
+default to 128/256 — MXU-aligned (multiples of 128 in the contracting and
+lane dimensions).
+
+TARGET is TPU (pl.pallas_call + BlockSpec); CPU validation runs interpret=True
+against ``repro.kernels.ref.flash_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  logit_softcap, q_offset: int, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (G, block_q, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)  # (block_k, hd)
+
+    s = jax.lax.dot_general(
+        q, k, (((2,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (G, bq, bk)
+    if logit_softcap is not None:
+        s = jnp.tanh(s / logit_softcap) * logit_softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    ok = k_pos < seq_k  # k-padding
+    if causal:
+        ok &= k_pos <= q_pos
+    if window > 0:
+        ok &= k_pos > q_pos - window
+    s = jnp.where(ok[None], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-37)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    logit_softcap=None, q_offset: int = 0, scale=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, Sq, Hq, hd); k/v: (B, Sk, Hkv, hd). Returns (B, Sq, Hq, hd)."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, vd = v.shape
+    assert k.shape == (B, Sk, Hkv, hd)
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Sk, 8))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    # (B*Hkv, G, Sq, hd) / (B*Hkv, Sk, hd) layouts
+    qh = jnp.moveaxis(q, 2, 1).reshape(B, Hkv, G, Sq, hd)
+    qh = qh.reshape(B * Hkv, G, Sq, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Sk, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Sk, vd)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    nq = (Sq + pad_q) // block_q
+    nk = (Sk + pad_k) // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        logit_softcap=logit_softcap, q_offset=q_offset, block_q=block_q,
+        block_k=block_k, seq_q=Sq, seq_k=Sk, n_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, G, block_q, hd), lambda bh, qi, ki: (bh, 0, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, vd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, block_q, vd),
+                               lambda bh, qi, ki: (bh, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, G, Sq + pad_q, vd), q.dtype),
+        scratch_shapes=[
+            # fp32 online-softmax state in VMEM, persistent across the kv axis
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q), jnp.float32),
+            pltpu.VMEM((G, block_q, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out.reshape(B, Hkv, G, Sq + pad_q, vd)[:, :, :, :Sq]
+    return jnp.moveaxis(out.reshape(B, Hq, Sq, vd), 1, 2)

@@ -1,0 +1,45 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True; on a real
+TPU set ``REPRO_PALLAS_INTERPRET=0`` (or rely on the default platform check)
+to compile them natively.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import fedavg_reduce as _fr
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "q_offset", "scale", "block_q",
+    "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, logit_softcap=None,
+                    q_offset=0, scale=None, block_q=128, block_k=128):
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        q_offset=q_offset, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fedavg_reduce(stacked, weights, *, block=65536):
+    return _fr.fedavg_reduce(stacked, weights, block=block,
+                             interpret=_interpret())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_reference
+from repro.models.mamba import ssd_chunked_ref
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, logit_softcap=None,
+                        q_offset=0, scale=None):
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, q_offset=q_offset,
+                               scale=scale)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    return ssd_chunked_ref(x, dt, A, Bm, Cm, chunk)
+
+
+def fedavg_reduce_ref(stacked, weights):
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    return jnp.tensordot(w, stacked.astype(jnp.float32), axes=1).astype(
+        stacked.dtype)

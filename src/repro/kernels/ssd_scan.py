@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan [arXiv:2405.21060].
+
+Grid is (batch, n_chunks) with the chunk axis minor (sequential), so the
+inter-chunk SSM state h (H, N, P) lives in VMEM scratch and is carried across
+chunk iterations — the TPU-native replacement for the paper's GPU warp-level
+chunk pipeline. Within a chunk the quadratic intra-chunk term runs on the MXU
+(C·Bᵀ is a (Q,N)x(N,Q) matmul; Q and P default to 128/64 — lane-aligned).
+
+Validated on CPU with interpret=True against ``ref.ssd_scan_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _reset():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # (Q, H, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q, H)
+    A = a_ref[...].astype(jnp.float32)  # (H,)
+    Bm = b_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)  # (Q, N)
+    Q = chunk
+
+    dA = dt * A[None, :]                       # (Q, H) negative
+    cum = jnp.cumsum(dA, axis=0)               # (Q, H)
+    total = cum[-1]                            # (H,)
+
+    # intra-chunk quadratic term
+    diff = cum[:, None, :] - cum[None, :, :]   # (Q, Q, H)
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >=
+            jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1))[:, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, 0.0)) * mask
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    att = cb[:, :, None] * decay               # (Q, Q, H)
+    xdt = x * dt[:, :, None]                   # (Q, H, P)
+    y_intra = jnp.einsum("qkh,khp->qhp", att, xdt)
+
+    # inter-chunk contribution from the carried state
+    h_in = h_scr[...]                          # (H, N, P)
+    y_inter = jnp.einsum("qh,qn,hnp->qhp", jnp.exp(cum), Cm, h_in)
+
+    y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(total) * h + sum_k exp(total - cum_k) B_k xdt_k
+    dec_k = jnp.exp(total[None, :] - cum)      # (Q, H)
+    states = jnp.einsum("kh,kn,khp->hnp", dec_k, Bm, xdt)
+    h_scr[...] = h_in * jnp.exp(total)[:, None, None] + states
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H)
+    bc = Bm.reshape(B, nc, chunk, N)
+    cc = Cm.reshape(B, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, H, P), lambda b, c: (b, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, H), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, H, P),
+                               lambda b, c: (b, c, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nc, chunk, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A, bc, cc)
+    return out.reshape(B, S, H, P)

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod : (16, 16)      axes ("data", "model")   — 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16)   axes ("pod", "data", "model") — 512 chips
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants for the roofline model (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s/link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Small mesh over whatever devices exist (tests use 8 host devices)."""
+    n = n_devices or len(jax.devices())
+    if multi_pod:
+        assert n % 2 == 0
+        return jax.make_mesh((2, n // 4, 2), ("pod", "data", "model"))
+    return jax.make_mesh((n // 2, 2), ("data", "model"))

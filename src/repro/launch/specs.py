@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) combination.
+
+``input_specs`` returns exactly what ``train_step`` / ``serve_step`` consume
+— weak-type-correct, shardable, no device allocation — for the dry-run and
+roofline analysis. Modality frontends are stubbed here per DESIGN.md §5:
+VLM specs carry merged patch/text embeddings + M-RoPE position triplets;
+audio specs carry encoder frame embeddings (seq_len//4 frames).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _act_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def train_inputs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.modality == "vision_stub":
+        return {
+            "embeds": SDS((B, S, cfg.d_model), _act_dtype(cfg)),
+            "positions": SDS((B, S, 3), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+    if cfg.is_encoder_decoder:
+        return {
+            "frames": SDS((B, max(S // 4, 8), cfg.d_model), _act_dtype(cfg)),
+            "tokens": SDS((B, S), jnp.int32),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig) -> Dict:
+    """One-token decode batch; the KV cache spec comes from ``cache_shapes``."""
+    B = shape.global_batch
+    if cfg.modality == "vision_stub":
+        return {
+            "embed": SDS((B, 1, cfg.d_model), _act_dtype(cfg)),
+            "positions": SDS((B, 1, 3), jnp.int32),
+        }
+    return {"token": SDS((B, 1), jnp.int32)}
+
+
+def cache_shapes(model, cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct pytree of the decode cache (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: model.init_cache(B, S, max(S // 4, 8)))
+    return jax.eval_shape(lambda: model.init_cache(B, S))
+
+
+def params_shapes(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,70 @@
+"""Step factories: train / prefill / decode, plus the hierarchical-FL
+(local-SGD) pair used for the beyond-paper collective-reduction measurement."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.optimizers import Optimizer
+
+
+def make_train_step(model: Model, opt: Optimizer) -> Callable:
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step
+
+
+def make_forward_step(model: Model) -> Callable:
+    """Prefill: full-sequence forward, LM head on the last position only
+    (serving-prefill semantics — no (B, S, V) logits materialization)."""
+    def step(params, batch):
+        logits, _ = model.forward(params, batch, last_only=True)
+        return logits
+
+    return step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """Decode: one new token against a seq_len KV cache / SSM state."""
+    def step(params, cache, batch, pos):
+        return model.decode_step(params, cache, batch, pos)
+
+    return step
+
+
+def make_pod_local_train_step(model: Model, opt: Optimizer,
+                              n_pods: int) -> Callable:
+    """Hierarchical-FL inner step (paper Eq. 4 on the mesh, DESIGN.md §3).
+
+    Parameters and optimizer state carry an explicit leading pod axis
+    (sharded over "pod"), so each pod trains on its own batch shard with NO
+    cross-pod collectives — gradient reduction spans only the intra-pod
+    ("data") axis. Executed via shard_map over the pod axis with data/model
+    left to GSPMD."""
+    base = make_train_step(model, opt)
+
+    def step(params_stack, opt_stack, batch):
+        # vmap over the pod axis: batch dim 0 is (pods, per_pod_batch, ...)
+        return jax.vmap(base)(params_stack, opt_stack, batch)
+
+    return step
+
+
+def make_cross_pod_sync(n_pods: int) -> Callable:
+    """Hierarchical-FL outer step (paper Eq. 5): average pod-local params —
+    the only cross-pod collective, amortized over H inner steps."""
+    def sync(params_stack):
+        mean = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0,
+                               keepdims=True).astype(x.dtype), params_stack)
+        return jax.tree_util.tree_map(
+            lambda m, x: jnp.broadcast_to(m, x.shape).astype(x.dtype),
+            mean, params_stack)
+
+    return sync

@@ -1,0 +1,147 @@
+"""End-to-end trainer CLI.
+
+Trains any assigned architecture (smoke variant by default; pass --full for
+the production config — requires a real TPU slice) on the synthetic token
+pipeline, with sharded jit, checkpointing, and optionally the paper's
+hierarchical local-SGD mode (--hierarchical H syncs across the pod axis
+every H steps instead of every step).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --steps 50 --batch 8 --seq 128
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x22b \
+      --steps 20 --hierarchical 4 --devices 8
+"""
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full production config (TPU only)")
+    ap.add_argument("--hierarchical", type=int, default=0, metavar="H",
+                    help="local-SGD: sync across pods every H steps")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (debug mesh); set BEFORE jax")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override smoke d_model (e.g. scale to ~100M params)")
+    ap.add_argument("--layers", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count={args.devices}").strip()
+
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import save_checkpoint
+    from repro.configs import get_arch_config, get_smoke_config
+    from repro.data.tokens import batches, synthetic_tokens
+    from repro.launch.mesh import make_debug_mesh, make_production_mesh
+    from repro.launch.steps import (make_cross_pod_sync,
+                                    make_pod_local_train_step,
+                                    make_train_step)
+    from repro.models import build_model
+    from repro.optim import linear_warmup_cosine, make_optimizer
+    from repro.sharding import batch_pspec, param_pspecs, to_shardings
+
+    cfg = get_arch_config(args.arch) if args.full else get_smoke_config(args.arch)
+    overrides = {}
+    if args.d_model:
+        overrides.update(d_model=args.d_model,
+                         d_ff=0 if cfg.d_ff == 0 else args.d_model * 3)
+    if args.layers:
+        overrides["n_layers"] = args.layers
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+
+    n_dev = len(jax.devices())
+    hier = args.hierarchical
+    if n_dev > 1:
+        mesh = (make_production_mesh(multi_pod=hier > 0) if args.full
+                else make_debug_mesh(n_dev, multi_pod=hier > 0))
+    else:
+        mesh = None
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M devices={n_dev} "
+          f"hierarchical={hier or 'off'}")
+
+    opt = make_optimizer(cfg.optimizer, lr=args.lr)
+    sched = linear_warmup_cosine(args.lr, warmup=min(20, args.steps // 5 + 1),
+                                 total_steps=args.steps)
+
+    data = synthetic_tokens(cfg.vocab_size, 2_000_000, seed=0)
+    it = batches(data, args.batch, args.seq, seed=1)
+
+    if hier > 0 and mesh is not None and "pod" in mesh.axis_names:
+        n_pods = mesh.shape["pod"]
+        inner = jax.jit(make_pod_local_train_step(model, opt, n_pods))
+        sync = jax.jit(make_cross_pod_sync(n_pods))
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_pods,) + x.shape).copy(), t)
+        params_s, opt_s = stack(params), stack(opt.init(params))
+        t0 = time.time()
+        for step in range(args.steps):
+            b = next(it)
+            toks = jnp.asarray(b["tokens"]).reshape(
+                n_pods, args.batch // n_pods, args.seq)
+            params_s, opt_s, loss = inner(params_s, opt_s, {"tokens": toks})
+            if (step + 1) % hier == 0:
+                params_s = sync(params_s)  # Eq. 5: cross-pod average
+            if step % args.log_every == 0:
+                print(f"step {step} loss {float(loss.mean()):.4f} "
+                      f"({time.time()-t0:.1f}s)")
+        params = jax.tree_util.tree_map(lambda x: x[0], params_s)
+    else:
+        opt_state = opt.init(params)
+        step_fn = make_train_step(model, opt)
+        if mesh is not None:
+            p_shard = to_shardings(param_pspecs(params, mesh), mesh)
+            params = jax.device_put(params, p_shard)
+            opt_state = jax.device_put(
+                opt_state,
+                to_shardings(param_pspecs(opt_state, mesh), mesh))
+            b_sh = jax.NamedSharding(mesh, batch_pspec(mesh, 2))
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        else:
+            b_sh = None
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+        t0 = time.time()
+        for step in range(args.steps):
+            b = next(it)
+            toks = jnp.asarray(b["tokens"])
+            if b_sh is not None:
+                toks = jax.device_put(toks, b_sh)
+            params, opt_state, loss = jitted(params, opt_state,
+                                             {"tokens": toks})
+            if step % args.log_every == 0:
+                print(f"step {step} loss {float(loss):.4f} "
+                      f"({time.time()-t0:.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % 50 == 0:
+                save_checkpoint(args.ckpt_dir, step + 1,
+                                {"params": params, "step": step + 1})
+    print("final loss:", float(loss if hier == 0 else loss.mean()))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,194 @@
+"""Attention blocks: GQA (with SWA / softcap / QKV-bias / M-RoPE) and
+DeepSeek-V2 MLA (multi-head latent attention with compressed KV cache)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.act import constrain, unshard
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def _rope(cfg, x, positions):
+    if cfg.mrope:
+        return L.apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return L.apply_rope(x, positions, cfg.rope_theta)
+
+
+def gqa_forward(cfg, p, x, positions, *, is_global=True, use_pallas=False):
+    """Full-sequence (train/prefill) forward. Returns (out, (k, v)) so callers
+    can stash the KV cache. ``is_global`` toggles gemma2 local/global layers."""
+    B, S, _ = x.shape
+    q = x @ unshard(p["wq"], None, "model") + (p["bq"] if cfg.qkv_bias else 0.0)
+    k = x @ unshard(p["wk"], None, "model") + (p["bk"] if cfg.qkv_bias else 0.0)
+    v = x @ unshard(p["wv"], None, "model") + (p["bv"] if cfg.qkv_bias else 0.0)
+    q = constrain(q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    k = constrain(k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    v = constrain(v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    window = 0
+    if cfg.attn_pattern == "swa" or (cfg.attn_pattern == "local_global" and not is_global):
+        window = cfg.sliding_window
+    o = L.attend(q, k, v, causal=True, window=window,
+                 logit_softcap=cfg.attn_logit_softcap, use_pallas=use_pallas)
+    o = constrain(o, "batch", None, "model", None)
+    return o.reshape(B, S, cfg.q_dim) @ unshard(p["wo"], "model", None), (k, v)
+
+
+def gqa_decode(cfg, p, x, cache_k, cache_v, pos, positions, *, is_global=True):
+    """One-token decode. x: (B,1,d); caches (B,S,Hkv,hd); pos: scalar index of
+    the new token. Returns (out, new_k_entry, new_v_entry)."""
+    B = x.shape[0]
+    q = x @ unshard(p["wq"], None, "model") + (p["bq"] if cfg.qkv_bias else 0.0)
+    k = x @ unshard(p["wk"], None, "model") + (p["bk"] if cfg.qkv_bias else 0.0)
+    v = x @ unshard(p["wv"], None, "model") + (p["bv"] if cfg.qkv_bias else 0.0)
+    q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    k_all = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+    v_all = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+    window = 0
+    if cfg.attn_pattern == "swa" or (cfg.attn_pattern == "local_global" and not is_global):
+        window = cfg.sliding_window
+    elif cfg.attn_pattern == "local_global" and is_global:
+        # gemma2 long-context variant (DESIGN.md §5): global layers fall back
+        # to windowed attention beyond the trained context
+        if cache_k.shape[1] > 32768:
+            window = cfg.sliding_window
+    if window > 0 and cache_k.shape[1] > window:
+        # static window slice: decode position is seq_len-1 (dry-run decode
+        # shapes), so the live window is the cache tail — O(window) reads.
+        k_w = jax.lax.dynamic_slice_in_dim(k_all, pos - (window - 1), window, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(v_all, pos - (window - 1), window, axis=1)
+        o = L.attention_decode(q, k_w, v_w, kv_len=window,
+                               logit_softcap=cfg.attn_logit_softcap)
+    else:
+        o = L.attention_decode(q, k_all, v_all, kv_len=pos + 1,
+                               logit_softcap=cfg.attn_logit_softcap)
+    return o.reshape(B, 1, cfg.q_dim) @ unshard(p["wo"], "model", None), k_all, v_all
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA
+# ---------------------------------------------------------------------------
+
+
+def mla_init(cfg, key, dtype):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "q_down": L.dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm_scale": jnp.ones((cfg.q_lora_rank,), dtype),
+        "q_up": L.dense_init(ks[1], cfg.q_lora_rank, H * qk, dtype),
+        "kv_down": L.dense_init(ks[2], cfg.d_model,
+                                cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm_scale": jnp.ones((cfg.kv_lora_rank,), dtype),
+        "kv_up": L.dense_init(ks[3], cfg.kv_lora_rank,
+                              H * (cfg.qk_nope_head_dim + cfg.v_head_dim), dtype),
+        "wo": L.dense_init(ks[4], H * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    """Shared q/kv projection math. Returns q_nope,q_rope,c_kv,k_rope."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    q = L.rmsnorm(x @ unshard(p["q_down"], None, None), p["q_norm_scale"], cfg.norm_eps)
+    q = (q @ unshard(p["q_up"], None, "model")).reshape(B, S, H, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = x @ unshard(p["kv_down"], None, None)  # (B,S,r+qk_r)
+    c_kv = L.rmsnorm(ckv[..., : cfg.kv_lora_rank], p["kv_norm_scale"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:].reshape(B, S, 1, qk_r)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_eff_qkv(cfg, p, q_nope, q_rope, c_kv, k_rope_flat, seq_part=None):
+    """Build the *effective* GQA problem MLA reduces to.
+
+    With the kv_up nope-projection absorbed into the query, MLA attention is
+    exactly GQA with Hkv=1: effective query (B,Sq,H, r+qk_r) =
+    (q_nope @ w_kc) ⊕ q_rope; effective key (B,Skv,1, r+qk_r) = c_kv ⊕ k_rope;
+    effective value (B,Skv,1, r) = c_kv. The cache therefore stays compressed
+    (kv_lora + rope dims) — the MLA trick [arXiv:2405.04434 §2.1.2].
+    """
+    B, Sq, H, _ = q_nope.shape
+    qk_n = cfg.qk_nope_head_dim
+    r = cfg.kv_lora_rank
+    w_kc = unshard(p["kv_up"], None, "model")[:, : H * qk_n].reshape(r, H, qk_n)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_kc.astype(jnp.float32)).astype(q_nope.dtype)
+    q_eff = constrain(jnp.concatenate([q_lat, q_rope], axis=-1),
+                      "batch", None, "model", None)  # (B,Sq,H,r+qk_r)
+    # decode passes seq_part="model": the KV cache's seq dim stays sharded
+    # (constraining it to None would all-gather 32k x r per layer per token).
+    k_eff = constrain(jnp.concatenate([c_kv, k_rope_flat], axis=-1)[:, :, None, :],
+                      "batch", seq_part, None, None)
+    v_eff = constrain(c_kv[:, :, None, :], "batch", seq_part, None, None)
+    scale = 1.0 / math.sqrt(qk_n + cfg.qk_rope_head_dim)
+    return q_eff, k_eff, v_eff, scale
+
+
+def _mla_out(cfg, p, o_lat):
+    """o_lat: (B,Sq,H,r) latent attention output -> (B,Sq,H*v_dim)."""
+    B, Sq, H, r = o_lat.shape
+    qk_n = cfg.qk_nope_head_dim
+    w_vc = unshard(p["kv_up"], None, "model")[:, H * qk_n:].reshape(r, H, cfg.v_head_dim)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(jnp.float32),
+                   w_vc.astype(jnp.float32))
+    return o.reshape(B, Sq, H * cfg.v_head_dim).astype(o_lat.dtype)
+
+
+def mla_forward(cfg, p, x, positions, **_):
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    k_rope_flat = k_rope.reshape(B, S, -1)
+    q_eff, k_eff, v_eff, scale = _mla_eff_qkv(cfg, p, q_nope, q_rope, c_kv,
+                                              k_rope_flat)
+    o_lat = L.attend(q_eff, k_eff, v_eff, causal=True, scale=scale)
+    return _mla_out(cfg, p, o_lat) @ unshard(p["wo"], "model", None), (c_kv, k_rope_flat)
+
+
+def mla_decode(cfg, p, x, cache_ckv, cache_krope, pos, positions, **_):
+    """cache_ckv: (B,S,kv_lora); cache_krope: (B,S,qk_rope)."""
+    B = x.shape[0]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    ckv_all = jax.lax.dynamic_update_slice_in_dim(cache_ckv, c_kv, pos, axis=1)
+    kr_all = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, k_rope.reshape(B, 1, -1), pos, axis=1)
+    q_eff, k_eff, v_eff, scale = _mla_eff_qkv(cfg, p, q_nope, q_rope, ckv_all,
+                                              kr_all, seq_part="model")
+    o_lat = L.attention_decode(q_eff, k_eff, v_eff, kv_len=pos + 1, scale=scale)
+    return _mla_out(cfg, p, o_lat) @ unshard(p["wo"], "model", None), ckv_all, kr_all

@@ -1,0 +1,60 @@
+"""The paper's federated-learning model (Section V): a CNN with two 5x5
+convolutions (32, 64 channels), each followed by 2x2 max-pooling, then a
+512-unit fully-connected layer and a 10-way classifier head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(key, num_classes: int = 10, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    he = lambda k, shape, fan_in: (
+        jax.random.normal(k, shape) * (2.0 / fan_in) ** 0.5
+    ).astype(dtype)
+    return {
+        "conv1_w": he(ks[0], (5, 5, 3, 32), 5 * 5 * 3),
+        "conv1_b": jnp.zeros((32,), dtype),
+        "conv2_w": he(ks[1], (5, 5, 32, 64), 5 * 5 * 32),
+        "conv2_b": jnp.zeros((64,), dtype),
+        # after two 2x2 pools: 32 -> 16 -> 8 spatial, 64 channels
+        "fc1_w": he(ks[2], (8 * 8 * 64, 512), 8 * 8 * 64),
+        "fc1_b": jnp.zeros((512,), dtype),
+        "fc2_w": he(ks[3], (512, num_classes), 512),
+        "fc2_b": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def forward(params, images):
+    """images: (B, 32, 32, 3) float -> logits (B, 10)."""
+    x = jax.nn.relu(_conv(images, params["conv1_w"], params["conv1_b"]))
+    x = _maxpool2(x)
+    x = jax.nn.relu(_conv(x, params["conv2_w"], params["conv2_b"]))
+    x = _maxpool2(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1_w"] + params["fc1_b"])
+    return x @ params["fc2_w"] + params["fc2_b"]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(params, batch):
+    logits = forward(params, batch["images"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["labels"])

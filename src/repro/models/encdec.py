@@ -1,0 +1,244 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+The speech frontend is stubbed per DESIGN.md §5: the encoder consumes
+precomputed frame embeddings (batch, frames, d_model). Frames are seq_len//4
+of the shape's seq_len (conv-codec 4x downsampling realism); decoder length is
+the shape's seq_len.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.sharding.act import constrain, unshard
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _norm(cfg, x, scale, bias):
+    return L.layernorm(x, scale, bias, cfg.norm_eps)
+
+
+def _xattn_init(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype),
+        "norm_scale": jnp.ones((cfg.d_model,), dtype),
+        "norm_bias": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _enc_layer_init(cfg, key, dtype):
+    k1, k2 = jax.random.split(key)
+    attn = A.gqa_init(cfg, k1, dtype)
+    attn["norm_scale"] = jnp.ones((cfg.d_model,), dtype)
+    attn["norm_bias"] = jnp.zeros((cfg.d_model,), dtype)
+    ffn = L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    ffn["norm_scale"] = jnp.ones((cfg.d_model,), dtype)
+    ffn["norm_bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return {"attn": attn, "ffn": ffn}
+
+
+def _dec_layer_init(cfg, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = _enc_layer_init(cfg, jax.random.fold_in(k1, 0), dtype)
+    p["xattn"] = _xattn_init(cfg, k2, dtype)
+    del k3
+    return p
+
+
+def init_params(cfg, key):
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    enc = [_enc_layer_init(cfg, jax.random.fold_in(ks[0], i), dtype)
+           for i in range(cfg.n_enc_layers)]
+    dec = [_dec_layer_init(cfg, jax.random.fold_in(ks[1], i), dtype)
+           for i in range(cfg.n_layers)]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *x: jnp.stack(x), *blocks)
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_blocks": stack(enc),
+        "dec_blocks": stack(dec),
+        "enc_norm_scale": jnp.ones((cfg.d_model,), dtype),
+        "enc_norm_bias": jnp.zeros((cfg.d_model,), dtype),
+        "final_norm_scale": jnp.ones((cfg.d_model,), dtype),
+        "final_norm_bias": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[3], cfg.d_model, cfg.vocab_padded, dtype,
+                                scale=0.02),
+    }
+
+
+def _self_attn(cfg, p, x, positions, *, causal, use_pallas=False):
+    h = _norm(cfg, x, p["norm_scale"], p["norm_bias"])
+    B, S, _ = h.shape
+    q = constrain((h @ unshard(p["wq"], None, "model"))
+                  .reshape(B, S, cfg.n_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    k = constrain((h @ unshard(p["wk"], None, "model"))
+                  .reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    v = constrain((h @ unshard(p["wv"], None, "model"))
+                  .reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    o = L.attend(q, k, v, causal=causal, use_pallas=use_pallas)
+    return x + o.reshape(B, S, cfg.q_dim) @ unshard(p["wo"], "model", None), (k, v)
+
+
+def _cross_attn(cfg, p, x, enc_k, enc_v):
+    h = _norm(cfg, x, p["norm_scale"], p["norm_bias"])
+    B, S, _ = h.shape
+    q = constrain((h @ unshard(p["wq"], None, "model"))
+                  .reshape(B, S, cfg.n_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    o = L.attend(q, enc_k, enc_v, causal=False)
+    return x + o.reshape(B, S, cfg.q_dim) @ unshard(p["wo"], "model", None)
+
+
+def _ffn(cfg, p, x):
+    h = _norm(cfg, x, p["norm_scale"], p["norm_bias"])
+    return x + L.mlp_apply(p, h, activation="gelu")
+
+
+def encode(cfg, params, frames, *, use_pallas=False):
+    """frames: (B, S_enc, d) stub embeddings -> encoder hidden states."""
+    B, S, _ = frames.shape
+    x = frames.astype(_dtype(cfg))
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, bp):
+        x, _ = _self_attn(cfg, bp["attn"], x, positions, causal=False,
+                          use_pallas=use_pallas)
+        x = _ffn(cfg, bp["ffn"], x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_blocks"])
+    return _norm(cfg, x, params["enc_norm_scale"], params["enc_norm_bias"])
+
+
+def _enc_kv(cfg, p, enc_out):
+    B, S, _ = enc_out.shape
+    k = constrain((enc_out @ unshard(p["wk"], None, "model"))
+                  .reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    v = constrain((enc_out @ unshard(p["wv"], None, "model"))
+                  .reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+                  "batch", None, "model", None)
+    return k, v
+
+
+def forward_hidden(cfg, params, batch, *, use_pallas=False):
+    """Decoder trunk up to final norm. Returns (x, aux=0.0)."""
+    from repro.sharding.act import constrain
+
+    enc_out = encode(cfg, params, batch["frames"], use_pallas=use_pallas)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = constrain(unshard(params["embed"], None, "model")[tokens],
+                  "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, bp):
+        x = constrain(x, "batch", None, None)
+        x, _ = _self_attn(cfg, bp["attn"], x, positions, causal=True,
+                          use_pallas=use_pallas)
+        ek, ev = _enc_kv(cfg, bp["xattn"], enc_out)
+        x = _cross_attn(cfg, bp["xattn"], x, ek, ev)
+        x = _ffn(cfg, bp["ffn"], x)
+        return constrain(x, "batch", None, None), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"])
+    return _norm(cfg, x, params["final_norm_scale"],
+                 params["final_norm_bias"]), 0.0
+
+
+def forward(cfg, params, batch, *, use_pallas=False, last_only=False):
+    """Train/prefill. batch: {frames (B,Senc,d), tokens (B,Sdec)}.
+    Returns (logits, aux=0.0)."""
+    x, aux = forward_hidden(cfg, params, batch, use_pallas=use_pallas)
+    if last_only:
+        x = x[:, -1:]
+    head = unshard(params["lm_head"], None, "model")
+    return (x @ head).astype(jnp.float32), aux
+
+
+def init_cache(cfg, batch: int, seq: int, enc_frames: int, dtype=None):
+    dtype = dtype or _dtype(cfg)
+    kv = lambda s: {
+        "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+    Ld = cfg.n_layers
+    stack = lambda tree: jax.tree_util.tree_map(
+        lambda a: jnp.zeros((Ld,) + a.shape, a.dtype), tree)
+    return {
+        "self": stack(kv(seq)),
+        "cross": stack(kv(enc_frames)),  # precomputed at prefill
+    }
+
+
+def prefill_cross_cache(cfg, params, enc_out):
+    """Compute per-decoder-layer cross K/V from encoder output once."""
+    def body(_, bp):
+        k, v = _enc_kv(cfg, bp["xattn"], enc_out)
+        return None, {"k": k, "v": v}
+
+    _, cross = jax.lax.scan(body, None, params["dec_blocks"])
+    return cross
+
+
+def decode_step(cfg, params, cache, batch, pos):
+    """One-token decode. batch: {token (B,1)}. cache from ``init_cache`` with
+    cross K/V already filled. Returns (logits, new_cache)."""
+    tokens = batch["token"]
+    B = tokens.shape[0]
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    def body(x, scan_in):
+        bp, self_c, cross_c = scan_in
+        h = _norm(cfg, x, bp["attn"]["norm_scale"], bp["attn"]["norm_bias"])
+        q = (h @ bp["attn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ bp["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ bp["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k_all = jax.lax.dynamic_update_slice_in_dim(self_c["k"], k, pos, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(self_c["v"], v, pos, axis=1)
+        o = L.attention_decode(q, k_all, v_all, kv_len=pos + 1)
+        x = x + o.reshape(B, 1, cfg.q_dim) @ bp["attn"]["wo"]
+        # cross attention against the precomputed encoder cache
+        hx = _norm(cfg, x, bp["xattn"]["norm_scale"], bp["xattn"]["norm_bias"])
+        qx = (hx @ bp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        ox = L.attention_decode(qx, cross_c["k"], cross_c["v"])
+        x = x + ox.reshape(B, 1, cfg.q_dim) @ bp["xattn"]["wo"]
+        x = _ffn(cfg, bp["ffn"], x)
+        return x, {"k": k_all, "v": v_all}
+
+    x, new_self = jax.lax.scan(body, x,
+                               (params["dec_blocks"], cache["self"],
+                                cache["cross"]))
+    x = _norm(cfg, x, params["final_norm_scale"], params["final_norm_bias"])
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    return logits, {"self": new_self, "cross": cache["cross"]}
+
+
+def loss_fn(cfg, params, batch, *, use_pallas=False):
+    from repro.models.transformer import chunked_xent
+
+    x, _ = forward_hidden(cfg, params, batch, use_pallas=use_pallas)
+    labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                     constant_values=-1)
+    return chunked_xent(cfg, params, x, labels)

@@ -1,0 +1,302 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Parameters are plain dicts of jnp arrays; layer stacks carry a leading
+``(n_layers, ...)`` axis and are consumed via ``jax.lax.scan`` so compile time
+is O(1) in depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, *, gemma_style: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    mult = (1.0 + scale.astype(jnp.float32)) if gemma_style else scale.astype(jnp.float32)
+    return (x * mult).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg, x, params, prefix: str):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, params[f"{prefix}_scale"], params.get(f"{prefix}_bias"),
+                         cfg.norm_eps)
+    return rmsnorm(x, params[f"{prefix}_scale"], cfg.norm_eps,
+                   gemma_style=(cfg.name.startswith("gemma")))
+
+
+def norm_params(cfg, d: int, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    init = jnp.zeros if cfg.name.startswith("gemma") else jnp.ones
+    return {"scale": init((d,), dtype)}
+
+
+# ----------------------------------------------------------------------------
+# RoPE (standard + Qwen2-VL M-RoPE)
+# ----------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (B, S, 3) — temporal / height / width position ids. Each of
+    the ``sections`` (t_sec, h_sec, w_sec) — summing to head_dim//2 — takes its
+    angle from the corresponding position axis [arXiv:2409.12191 §2.1].
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    sec = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )  # (hd/2,) in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),  # (B,S,3)
+        jnp.broadcast_to(sec[None, None, :], positions3.shape[:2] + sec.shape),
+        axis=-1,
+    )  # (B,S,hd/2): per-frequency position choice
+    ang = pos * freqs  # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, ff, dtype),
+        "w_up": dense_init(k2, d, ff, dtype),
+        "w_down": dense_init(k3, ff, d, dtype),
+    }
+
+
+def mlp_apply(p, x, activation: str = "silu"):
+    from repro.sharding.act import constrain, unshard
+
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    h = act(x @ unshard(p["w_gate"], None, "model")) \
+        * (x @ unshard(p["w_up"], None, "model"))
+    h = constrain(h, "batch", None, "model")
+    return h @ unshard(p["w_down"], "model", None)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------------------
+# Attention core: chunked online-softmax (the XLA twin of the Pallas kernel)
+# ----------------------------------------------------------------------------
+
+NEG_INF = -2.0e38
+
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """(Sq, Sk) additive bias from position vectors. window<=0 => no window."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention_reference(q, k, v, *, causal=True, window=0, logit_softcap=None,
+                        q_offset=0, scale=None):
+    """Naive (materialized-scores) GQA attention. q: (B,Sq,Hq,hd),
+    k/v: (B,Sk,Hkv,hd). Used for short sequences and as the oracle."""
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    vd = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = softcap(s, logit_softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(Sk)
+    s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, vd).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal=True, window=0, logit_softcap=None,
+                      q_offset=0, scale=None, block_q=512, block_k=512):
+    """Flash-style attention in pure XLA: double lax.scan over q/k blocks with
+    online max/sum rescaling. Memory is O(block_q * block_k) per step instead
+    of O(Sq * Sk); this is the default path for long sequences and the
+    structural twin of ``repro.kernels.flash_attention``.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    vd = v.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    # pad to block multiples
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+
+    qb = qp.reshape(B, nq, block_q, Hkv, G, hd).astype(jnp.float32)
+    kb = kp.reshape(B, nk, block_k, Hkv, hd).astype(jnp.float32)
+    vb = vp.reshape(B, nk, block_k, Hkv, vd).astype(jnp.float32)
+    k_valid = (jnp.arange(kp.shape[1]) < Sk).reshape(nk, block_k)
+
+    def q_block(carry, qi):
+        # checkpointed: backward recomputes this block's online softmax instead
+        # of saving (bq x bk) probability tiles for every (q,k) block pair —
+        # the flash-attention memory property, kept in the XLA path too.
+        return carry, _q_block_inner(qi)
+
+    @jax.checkpoint
+    def _q_block_inner(qi):
+        q_i = qb[:, qi]  # (B, bq, Hkv, G, hd)
+        q_pos = qi * block_q + jnp.arange(block_q) + q_offset
+
+        def k_block(state, ki):
+            m, l, acc = state
+            k_i, v_i = kb[:, ki], vb[:, ki]
+            k_pos = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, k_i) * scale
+            s = softcap(s, logit_softcap)
+            bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+            bias = jnp.where(k_valid[ki][None, :], bias, NEG_INF)
+            s = s + bias
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, v_i)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(k_block, (m0, l0, a0), jnp.arange(nk))
+        o = acc / jnp.maximum(l[..., None], 1e-37)
+        # (B,Hkv,G,bq,hd) -> (B,bq,Hkv,G,hd)
+        return jnp.transpose(o, (0, 3, 1, 2, 4))
+
+    _, blocks = jax.lax.scan(q_block, (), jnp.arange(nq))
+    # blocks: (nq, B, bq, Hkv, G, vd)
+    out = jnp.transpose(blocks, (1, 0, 2, 3, 4, 5)).reshape(
+        B, nq * block_q, Hq, vd
+    )[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, *, kv_len=None, window=0,
+                     logit_softcap=None, scale=None):
+    """Single-token decode attention. q: (B,1,Hq,hd); caches (B,S,Hkv,hd).
+
+    ``kv_len``: number of valid cache positions (the new token is at
+    kv_len-1). For sliding-window archs the caller should pass a cache
+    already truncated to the window (static slice), keeping reads O(window).
+    """
+    from repro.sharding.act import constrain
+
+    B, _, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    vd = v_cache.shape[-1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kv_len = S if kv_len is None else kv_len
+    qg = q.reshape(B, Hkv, G, hd)
+    # keep the cache in its storage dtype (bf16): any resharding the
+    # partitioner inserts moves half the bytes; accumulate in f32 via
+    # preferred_element_type instead of upcasting the operands.
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, logit_softcap)
+    # scores sharded over the seq dim -> distributed (flash-style) softmax
+    # with scalar-sized reductions instead of an S-length cache all-gather.
+    s = constrain(s, "batch", None, None, "model")
+    pos = jnp.arange(S)
+    ok = pos < kv_len
+    if window > 0:
+        ok &= pos > (kv_len - 1 - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, Hq, vd).astype(q.dtype)
+
+
+def attend(q, k, v, *, causal=True, window=0, logit_softcap=None, q_offset=0,
+           scale=None, use_pallas: bool = False):
+    """Dispatch: Pallas kernel (TPU) / chunked XLA (long) / naive (short)."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+            q_offset=q_offset, scale=scale)
+    if q.shape[1] * k.shape[1] > 2048 * 2048:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 logit_softcap=logit_softcap, q_offset=q_offset,
+                                 scale=scale)
+    return attention_reference(q, k, v, causal=causal, window=window,
+                               logit_softcap=logit_softcap, q_offset=q_offset,
+                               scale=scale)

@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Forward (train/prefill) uses the chunked SSD algorithm: quadratic attention-
+like compute inside chunks of length Q, linear state passing between chunks —
+O(S·Q) instead of O(S²). Decode is the O(1) recurrent update.
+
+Layout follows the reference Mamba-2: in_proj emits [z | x | B | C | dt] with
+a causal depthwise conv over [x|B|C]; single B/C group shared across heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding.act import constrain, unshard
+
+
+def mamba_init(cfg, key, dtype):
+    d, dI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    conv_dim = dI + 2 * N
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * dI + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, cfg.ssm_conv)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm_scale": jnp.ones((dI,), dtype),  # gated output RMSNorm
+        "out_proj": L.dense_init(ks[2], dI, d, dtype),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along seq. xBC: (B,S,Cd), w: (Cd,K)."""
+    K = w.shape[-1]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # w[:, K-1] multiplies the current timestep, w[:, 0] the oldest — matching
+    # the decode-path einsum over the rolling window.
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[None, None, :, i]
+        for i in range(K)
+    )
+    return out + b
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, chunk: int):
+    """SSD scan, pure-jnp oracle (also used as the XLA path).
+
+    x:  (B, S, H, P) head inputs
+    dt: (B, S, H)    discretization steps (post-softplus)
+    A:  (H,)         negative decay rates (A < 0)
+    Bm: (B, S, N)    input projection (shared across heads, 1 group)
+    Cm: (B, S, N)    output projection
+    returns y: (B, S, H, P)
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log decay
+    total = cum[:, :, -1, :]  # (B,nc,H)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # decay(q,k) = exp(cum_q - cum_k) for k <= q. Mask BEFORE exp: masked
+    # (future) entries have diff > 0, whose exp can overflow and poison the
+    # backward pass via 0 * inf = NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, 0.0)) * mask
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (B,nc,Q,Q)
+    att = cb[..., None] * decay  # (B,nc,Q,Q,H)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att, xdt)
+
+    # ---- chunk boundary states ----
+    # state_c = sum_k exp(total_c - cum_k) * B_k (outer) xdt_k : (B,nc,H,N,P)
+    dec_k = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bckh,bckn,bckhp->bchnp", dec_k, Bc, xdt)
+
+    # ---- inter-chunk recurrence ----
+    def step(h, inp):
+        st, tot = inp  # (B,H,N,P), (B,H)
+        h_new = h * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((Bsz, H, N, P), x.dtype)
+    _, h_in = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,nc,H,N,P): state entering each chunk
+
+    # y_inter(q) = exp(cum_q) * C_q . h_in
+    y_inter = jnp.einsum("bcqh,bcqn,bchnp->bcqhp", jnp.exp(cum), Cc, h_in)
+    return (y_intra + y_inter).reshape(Bsz, S, H, P)
+
+
+def _split_proj(cfg, zxbcdt):
+    dI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :dI]
+    xBC = zxbcdt[..., dI : 2 * dI + 2 * N]
+    dt = zxbcdt[..., 2 * dI + 2 * N :]
+    return z, xBC, dt
+
+
+def mamba_forward(cfg, p, u, *, use_pallas: bool = False):
+    """Full-sequence forward. u: (B,S,d) -> (B,S,d)."""
+    Bsz, S, _ = u.shape
+    dI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(cfg, u @ unshard(p["in_proj"], None, "model"))
+    xBC = constrain(xBC, "batch", None, "model")
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    x = constrain(xBC[..., :dI].reshape(Bsz, S, H, P),
+                  "batch", None, "model", None)
+    Bm = xBC[..., dI : dI + N]
+    Cm = xBC[..., dI + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        y = kops.ssd_scan(x.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_chunked_ref(x.astype(jnp.float32), dt, A,
+                            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                            chunk=min(cfg.ssm_chunk, S))
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, S, dI).astype(u.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gate_norm_scale"], cfg.norm_eps)
+    return y @ unshard(p["out_proj"], "model", None)
+
+
+def mamba_state_init(cfg, batch: int, dtype):
+    dI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, dI + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def mamba_decode(cfg, p, u, state):
+    """One-token recurrent step. u: (B,1,d); returns (y, new_state)."""
+    Bsz = u.shape[0]
+    dI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(cfg, u @ p["in_proj"])
+    # conv over (state window + current)
+    window = jnp.concatenate([state["conv"], xBC], axis=1)  # (B,K,conv_dim)
+    conv_out = jnp.einsum("bkc,ck->bc", window, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv_out)[:, None, :]  # (B,1,conv_dim)
+    new_conv = window[:, 1:, :]
+    x = xBC_t[..., :dI].reshape(Bsz, H, P)
+    Bm = xBC_t[:, 0, dI : dI + N]  # (B,N)
+    Cm = xBC_t[:, 0, dI + N :]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt_t * A[None, :])  # (B,H)
+    h = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhnp", Bm.astype(jnp.float32), x.astype(jnp.float32), dt_t)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), h)
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, dI).astype(u.dtype)
+    y = L.rmsnorm(y * jax.nn.silu(z), p["gate_norm_scale"], cfg.norm_eps)
+    return y @ unshard(p["out_proj"], "model", None), {"conv": new_conv, "ssm": h}

@@ -1,0 +1,56 @@
+"""Uniform Model facade dispatching to the decoder-only / enc-dec assemblies.
+
+Every architecture exposes:
+    init(key) -> params
+    loss(params, batch) -> scalar            (train step objective)
+    forward(params, batch) -> (logits, aux)  (prefill)
+    init_cache(batch, seq) -> cache
+    decode_step(params, cache, batch, pos) -> (logits, cache)
+    input_spec(shape_cfg) via repro.launch.specs (ShapeDtypeStruct stand-ins)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable
+    decode_step: Callable
+
+
+def build_model(cfg: ArchConfig, *, use_pallas: bool = False) -> Model:
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=lambda p, b: encdec.loss_fn(cfg, p, b, use_pallas=use_pallas),
+            forward=lambda p, b, **kw: encdec.forward(cfg, p, b,
+                                                      use_pallas=use_pallas,
+                                                      **kw),
+            init_cache=lambda batch, seq, enc_frames=None, dtype=None:
+                encdec.init_cache(cfg, batch, seq,
+                                  enc_frames or max(seq // 4, 8), dtype),
+            decode_step=lambda p, c, b, pos: encdec.decode_step(cfg, p, c, b, pos),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: transformer.init_params(cfg, key),
+        loss=lambda p, b: transformer.loss_fn(cfg, p, b, use_pallas=use_pallas),
+        forward=lambda p, b, **kw: transformer.forward(cfg, p, b,
+                                                       use_pallas=use_pallas,
+                                                       **kw),
+        init_cache=lambda batch, seq, dtype=None:
+            transformer.init_cache(cfg, batch, seq, dtype),
+        decode_step=lambda p, c, b, pos: transformer.decode_step(cfg, p, c, b,
+                                                                 pos),
+    )

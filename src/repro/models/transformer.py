@@ -1,0 +1,548 @@
+"""Decoder-only LM assembly for all non-enc-dec architectures.
+
+Layers are organized into the smallest repeating *block pattern* so the whole
+trunk is one ``jax.lax.scan`` (compile time O(1) in depth):
+
+  uniform      — every layer identical (mixtral, qwen*, h2o, command-r,
+                 mamba2, deepseek layers 1..L-1)
+  pair_lg      — gemma2: (local, global) attention pairs, scanned 21x
+  jamba8       — jamba: period-8 block = 7 mamba + 1 attn mixers,
+                 alternating dense/MoE FFNs, scanned 9x
+
+Caches are pytrees with a leading block axis, scanned alongside the params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models.moe import moe_apply, moe_init
+from repro.sharding.act import constrain, unshard
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# sub-layer wrappers (norm + mixer/ffn + residual)
+# ---------------------------------------------------------------------------
+
+
+def _mixer_init(cfg, key, dtype, kind: str):
+    if kind == "mamba":
+        p = M.mamba_init(cfg, key, dtype)
+    elif kind == "mla":
+        p = A.mla_init(cfg, key, dtype)
+    else:
+        p = A.gqa_init(cfg, key, dtype)
+    p["norm_scale"] = L.norm_params(cfg, cfg.d_model, dtype)["scale"]
+    if cfg.norm_type == "layernorm":
+        p["norm_bias"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.post_attn_norm:
+        p["post_norm_scale"] = L.norm_params(cfg, cfg.d_model, dtype)["scale"]
+    return p
+
+
+def _ffn_init(cfg, key, dtype, kind: str):
+    if kind == "moe":
+        p = moe_init(cfg, key, dtype)
+    else:
+        p = L.mlp_init(key, cfg.d_model, cfg.d_ff, dtype)
+    p["norm_scale"] = L.norm_params(cfg, cfg.d_model, dtype)["scale"]
+    if cfg.norm_type == "layernorm":
+        p["norm_bias"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.post_attn_norm:
+        p["post_norm_scale"] = L.norm_params(cfg, cfg.d_model, dtype)["scale"]
+    return p
+
+
+def _pre_norm(cfg, p, x):
+    if cfg.norm_type == "layernorm":
+        return L.layernorm(x, p["norm_scale"], p.get("norm_bias"), cfg.norm_eps)
+    return L.rmsnorm(x, p["norm_scale"], cfg.norm_eps,
+                     gemma_style=cfg.name.startswith("gemma"))
+
+
+def _post_norm(cfg, p, y):
+    if cfg.post_attn_norm:
+        return L.rmsnorm(y, p["post_norm_scale"], cfg.norm_eps,
+                         gemma_style=cfg.name.startswith("gemma"))
+    return y
+
+
+def _apply_mixer(cfg, p, x, positions, kind, *, is_global=True, use_pallas=False):
+    """Full-seq mixer. Returns (residual_out, cache_entry)."""
+    h = _pre_norm(cfg, p, x)
+    if kind == "mamba":
+        y, cache = M.mamba_forward(cfg, p, h, use_pallas=use_pallas), None
+    elif kind == "mla":
+        y, cache = A.mla_forward(cfg, p, h, positions)
+    else:
+        y, cache = A.gqa_forward(cfg, p, h, positions, is_global=is_global,
+                                 use_pallas=use_pallas)
+    return x + _post_norm(cfg, p, y), cache
+
+
+def _apply_mixer_decode(cfg, p, x, cache, pos, positions, kind, *, is_global=True):
+    h = _pre_norm(cfg, p, x)
+    if kind == "mamba":
+        y, new_state = M.mamba_decode(cfg, p, h, cache)
+        return x + _post_norm(cfg, p, y), new_state
+    if kind == "mla":
+        y, ckv, kr = A.mla_decode(cfg, p, h, cache["ckv"], cache["krope"], pos,
+                                  positions)
+        return x + _post_norm(cfg, p, y), {"ckv": ckv, "krope": kr}
+    y, k, v = A.gqa_decode(cfg, p, h, cache["k"], cache["v"], pos, positions,
+                           is_global=is_global)
+    return x + _post_norm(cfg, p, y), {"k": k, "v": v}
+
+
+def _apply_ffn(cfg, p, x, kind):
+    h = _pre_norm(cfg, p, x)
+    if kind == "moe":
+        y, aux = moe_apply(cfg, p, h)
+    else:
+        act = "gelu" if cfg.name.startswith("gemma") else "silu"
+        y, aux = L.mlp_apply(p, h, activation=act), 0.0
+    return x + _post_norm(cfg, p, y), aux
+
+
+# ---------------------------------------------------------------------------
+# block patterns
+# ---------------------------------------------------------------------------
+
+
+def block_layout(cfg):
+    """Returns (pattern, n_blocks, prologue_layers). pattern in
+    {uniform, pair_lg, jamba8}; prologue covers deepseek's dense layer 0."""
+    if cfg.attn_every:  # jamba hybrid
+        assert cfg.n_layers % cfg.attn_every == 0
+        return "jamba8", cfg.n_layers // cfg.attn_every, 0
+    if cfg.attn_pattern == "local_global":
+        assert cfg.n_layers % 2 == 0
+        return "pair_lg", cfg.n_layers // 2, 0
+    if cfg.first_layer_dense and cfg.n_experts:
+        return "uniform", cfg.n_layers - 1, 1
+    return "uniform", cfg.n_layers, 0
+
+
+def _layer_kinds(cfg):
+    """(mixer_kind, ffn_kind) for the uniform pattern."""
+    if cfg.family == "ssm":
+        return "mamba", None
+    mixer = "mla" if cfg.use_mla else "attn"
+    ffn = "moe" if cfg.n_experts else "mlp"
+    return mixer, ffn
+
+
+def _block_init(cfg, key, dtype, pattern):
+    if pattern == "uniform":
+        mixer, ffn = _layer_kinds(cfg)
+        k1, k2 = jax.random.split(key)
+        p = {"mixer": _mixer_init(cfg, k1, dtype, mixer)}
+        if ffn:
+            p["ffn"] = _ffn_init(cfg, k2, dtype, ffn)
+        return p
+    if pattern == "pair_lg":
+        ks = jax.random.split(key, 4)
+        return {
+            "local_mixer": _mixer_init(cfg, ks[0], dtype, "attn"),
+            "local_ffn": _ffn_init(cfg, ks[1], dtype, "mlp"),
+            "global_mixer": _mixer_init(cfg, ks[2], dtype, "attn"),
+            "global_ffn": _ffn_init(cfg, ks[3], dtype, "mlp"),
+        }
+    if pattern == "jamba8":
+        period = cfg.attn_every
+        n_mamba = period - 1
+        ks = jax.random.split(key, 2 * period + 1)
+        mamba_stack = [
+            _mixer_init(cfg, ks[i], dtype, "mamba") for i in range(n_mamba)
+        ]
+        ffns = []
+        for i in range(period):
+            kind = "moe" if (i % cfg.moe_every == cfg.moe_offset) else "mlp"
+            ffns.append((kind, _ffn_init(cfg, ks[period + i], dtype, kind)))
+        return {
+            "mamba": jax.tree_util.tree_map(
+                lambda *x: jnp.stack(x), *mamba_stack),
+            "attn": _mixer_init(cfg, ks[n_mamba], dtype, "attn"),
+            "ffn_mlp": jax.tree_util.tree_map(
+                lambda *x: jnp.stack(x),
+                *[p for k, p in ffns if k == "mlp"]),
+            "ffn_moe": jax.tree_util.tree_map(
+                lambda *x: jnp.stack(x),
+                *[p for k, p in ffns if k == "moe"]),
+        }
+    raise ValueError(pattern)
+
+
+def _block_apply(cfg, bp, x, positions, pattern, *, use_pallas=False):
+    """One block, full-sequence. Returns (x, cache_entry, aux_loss)."""
+    aux = 0.0
+    if pattern == "uniform":
+        mixer, ffn = _layer_kinds(cfg)
+        x, cache = _apply_mixer(cfg, bp["mixer"], x, positions, mixer,
+                                use_pallas=use_pallas)
+        if ffn:
+            x, aux = _apply_ffn(cfg, bp["ffn"], x, ffn)
+        return x, cache, aux
+    if pattern == "pair_lg":
+        x, c_l = _apply_mixer(cfg, bp["local_mixer"], x, positions, "attn",
+                              is_global=False, use_pallas=use_pallas)
+        x, _ = _apply_ffn(cfg, bp["local_ffn"], x, "mlp")
+        x, c_g = _apply_mixer(cfg, bp["global_mixer"], x, positions, "attn",
+                              is_global=True, use_pallas=use_pallas)
+        x, _ = _apply_ffn(cfg, bp["global_ffn"], x, "mlp")
+        return x, {"local": c_l, "global": c_g}, aux
+    if pattern == "jamba8":
+        period = cfg.attn_every
+        n_mamba = period - 1
+        mlp_i = moe_i = 0
+        cache = None
+        mix_i = 0
+        for i in range(period):
+            if i == cfg.attn_offset:
+                x, cache = _apply_mixer(cfg, bp["attn"], x, positions, "attn",
+                                        use_pallas=use_pallas)
+            else:
+                mp = jax.tree_util.tree_map(lambda a, j=mix_i: a[j], bp["mamba"])
+                x, _ = _apply_mixer(cfg, mp, x, positions, "mamba",
+                                    use_pallas=use_pallas)
+                mix_i += 1
+            if i % cfg.moe_every == cfg.moe_offset:
+                fp = jax.tree_util.tree_map(lambda a, j=moe_i: a[j], bp["ffn_moe"])
+                x, a = _apply_ffn(cfg, fp, x, "moe")
+                aux = aux + a
+                moe_i += 1
+            else:
+                fp = jax.tree_util.tree_map(lambda a, j=mlp_i: a[j], bp["ffn_mlp"])
+                x, _ = _apply_ffn(cfg, fp, x, "mlp")
+                mlp_i += 1
+        del n_mamba
+        return x, cache, aux
+    raise ValueError(pattern)
+
+
+def _block_decode(cfg, bp, x, bcache, pos, positions, pattern):
+    """One block, one-token decode. Returns (x, new_block_cache)."""
+    if pattern == "uniform":
+        mixer, ffn = _layer_kinds(cfg)
+        x, cache = _apply_mixer_decode(cfg, bp["mixer"], x, bcache, pos,
+                                       positions, mixer)
+        if ffn:
+            x, _ = _apply_ffn(cfg, bp["ffn"], x, ffn)
+        return x, cache
+    if pattern == "pair_lg":
+        x, c_l = _apply_mixer_decode(cfg, bp["local_mixer"], x, bcache["local"],
+                                     pos, positions, "attn", is_global=False)
+        x, _ = _apply_ffn(cfg, bp["local_ffn"], x, "mlp")
+        x, c_g = _apply_mixer_decode(cfg, bp["global_mixer"], x,
+                                     bcache["global"], pos, positions, "attn",
+                                     is_global=True)
+        x, _ = _apply_ffn(cfg, bp["global_ffn"], x, "mlp")
+        return x, {"local": c_l, "global": c_g}
+    if pattern == "jamba8":
+        period = cfg.attn_every
+        mlp_i = moe_i = mix_i = 0
+        new_mamba = []
+        attn_cache = None
+        for i in range(period):
+            if i == cfg.attn_offset:
+                x, attn_cache = _apply_mixer_decode(
+                    cfg, bp["attn"], x, bcache["attn"], pos, positions, "attn")
+            else:
+                mp = jax.tree_util.tree_map(lambda a, j=mix_i: a[j], bp["mamba"])
+                mc = jax.tree_util.tree_map(lambda a, j=mix_i: a[j],
+                                            bcache["mamba"])
+                x, st = _apply_mixer_decode(cfg, mp, x, mc, pos, positions,
+                                            "mamba")
+                new_mamba.append(st)
+                mix_i += 1
+            if i % cfg.moe_every == cfg.moe_offset:
+                fp = jax.tree_util.tree_map(lambda a, j=moe_i: a[j], bp["ffn_moe"])
+                x, _ = _apply_ffn(cfg, fp, x, "moe")
+                moe_i += 1
+            else:
+                fp = jax.tree_util.tree_map(lambda a, j=mlp_i: a[j], bp["ffn_mlp"])
+                x, _ = _apply_ffn(cfg, fp, x, "mlp")
+                mlp_i += 1
+        return x, {
+            "mamba": jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_mamba),
+            "attn": attn_cache,
+        }
+    raise ValueError(pattern)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def _mixer_cache_init(cfg, kind, batch, seq, dtype):
+    if kind == "mamba":
+        return M.mamba_state_init(cfg, batch, dtype)
+    if kind == "mla":
+        return {
+            "ckv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, seq, cfg.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def init_cache(cfg, batch: int, seq: int, dtype=None):
+    """Stacked-block KV/state cache pytree (leading axis = n_blocks)."""
+    dtype = dtype or _dtype(cfg)
+    pattern, n_blocks, prologue = block_layout(cfg)
+
+    def one_block():
+        if pattern == "uniform":
+            mixer, _ = _layer_kinds(cfg)
+            return _mixer_cache_init(cfg, mixer, batch, seq, dtype)
+        if pattern == "pair_lg":
+            return {
+                "local": _mixer_cache_init(cfg, "attn", batch, seq, dtype),
+                "global": _mixer_cache_init(cfg, "attn", batch, seq, dtype),
+            }
+        if pattern == "jamba8":
+            n_mamba = cfg.attn_every - 1
+            m = _mixer_cache_init(cfg, "mamba", batch, seq, dtype)
+            return {
+                "mamba": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n_mamba,) + a.shape).copy(), m),
+                "attn": _mixer_cache_init(cfg, "attn", batch, seq, dtype),
+            }
+        raise ValueError(pattern)
+
+    blk = one_block()
+    stacked = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((n_blocks,) + a.shape, a.dtype), blk)
+    out = {"blocks": stacked}
+    if prologue:
+        out["prologue"] = _mixer_cache_init(cfg, "mla" if cfg.use_mla else "attn",
+                                            batch, seq, dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg, key):
+    dtype = _dtype(cfg)
+    pattern, n_blocks, prologue = block_layout(cfg)
+    keys = jax.random.split(key, n_blocks + 3)
+    blocks = [
+        _block_init(cfg, keys[i], dtype, pattern) for i in range(n_blocks)
+    ]
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(keys[-1], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": jax.tree_util.tree_map(lambda *x: jnp.stack(x), *blocks),
+        "final_norm_scale": L.norm_params(cfg, cfg.d_model, dtype)["scale"],
+    }
+    if cfg.norm_type == "layernorm":
+        params["final_norm_bias"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[-2], cfg.d_model, cfg.vocab_padded,
+                                         dtype, scale=0.02)
+    if prologue:  # deepseek dense layer 0
+        k1, k2 = jax.random.split(keys[-3])
+        params["prologue"] = {
+            "mixer": _mixer_init(cfg, k1, dtype, "mla" if cfg.use_mla else "attn"),
+            "ffn": _ffn_init(cfg, k2, dtype, "mlp"),
+        }
+    return params
+
+
+def _final_norm(cfg, params, x):
+    if cfg.norm_type == "layernorm":
+        return L.layernorm(x, params["final_norm_scale"],
+                           params.get("final_norm_bias"), cfg.norm_eps)
+    return L.rmsnorm(x, params["final_norm_scale"], cfg.norm_eps,
+                     gemma_style=cfg.name.startswith("gemma"))
+
+
+def _lm_head(cfg, params):
+    """LM head with vocab sharded over "model", d_model gathered (so the
+    contraction never spans an fsdp-sharded dim)."""
+    if cfg.tie_embeddings:
+        return unshard(params["embed"], "model", None).T
+    return unshard(params["lm_head"], None, "model")
+
+
+def _logits(cfg, params, x):
+    logits = (x @ _lm_head(cfg, params)).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "model")
+    return L.softcap(logits, cfg.final_logit_softcap)
+
+
+def _embed_inputs(cfg, params, batch):
+    if "embeds" in batch:  # vlm / audio stub frontends
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = unshard(params["embed"], None, "model")[batch["tokens"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B, S = x.shape[:2]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    return x, positions
+
+
+def forward(cfg, params, batch, *, return_cache: bool = False,
+            use_pallas: bool = False, last_only: bool = False):
+    """Full-sequence forward. batch: {tokens | embeds [, positions]}.
+    Returns (logits, aux_loss[, cache]). ``last_only`` applies the LM head to
+    the final position only (serving-prefill semantics — avoids materializing
+    (B, S, V) logits)."""
+    pattern, n_blocks, prologue = block_layout(cfg)
+    x, positions = _embed_inputs(cfg, params, batch)
+
+    pro_cache = None
+    if prologue:
+        pp = params["prologue"]
+        x, pro_cache = _apply_mixer(cfg, pp["mixer"], x, positions,
+                                    "mla" if cfg.use_mla else "attn",
+                                    use_pallas=use_pallas)
+        x, _ = _apply_ffn(cfg, pp["ffn"], x, "mlp")
+
+    x = constrain(x, "batch", None, None)
+
+    def body(carry, bp):
+        x, aux = carry
+        x = constrain(x, "batch", None, None)
+        x, cache, a = _block_apply(cfg, bp, x, positions, pattern,
+                                   use_pallas=use_pallas)
+        return (constrain(x, "batch", None, None), aux + a), cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), caches = jax.lax.scan(body_fn, (x, 0.0), params["blocks"])
+    x = _final_norm(cfg, params, x)
+    if last_only:
+        x = x[:, -1:]
+    logits = _logits(cfg, params, x)
+    if return_cache:
+        cache = {"blocks": caches}
+        if prologue:
+            cache["prologue"] = pro_cache
+        return logits, aux, cache
+    return logits, aux
+
+
+def decode_step(cfg, params, cache, batch, pos):
+    """One-token decode. batch: {token (B,1) | embed (B,1,d) [, positions]}.
+    ``pos``: scalar int32 — index the new token is written at. Returns
+    (logits (B,1,V), new_cache)."""
+    pattern, n_blocks, prologue = block_layout(cfg)
+    if "embed" in batch:
+        x = batch["embed"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["token"]]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    B = x.shape[0]
+    if "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+    new_cache = {}
+    if prologue:
+        pp = params["prologue"]
+        x, pc = _apply_mixer_decode(cfg, pp["mixer"], x, cache["prologue"], pos,
+                                    positions, "mla" if cfg.use_mla else "attn")
+        x, _ = _apply_ffn(cfg, pp["ffn"], x, "mlp")
+        new_cache["prologue"] = pc
+
+    def body(x, scan_in):
+        bp, bcache = scan_in
+        x, bc = _block_decode(cfg, bp, x, bcache, pos, positions, pattern)
+        return x, bc
+
+    x, caches = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+    new_cache["blocks"] = caches
+    x = _final_norm(cfg, params, x)
+    return _logits(cfg, params, x), new_cache
+
+
+def forward_hidden(cfg, params, batch, *, use_pallas: bool = False):
+    """Trunk forward up to the final norm (no LM head). Returns (x, aux)."""
+    pattern, n_blocks, prologue = block_layout(cfg)
+    x, positions = _embed_inputs(cfg, params, batch)
+    if prologue:
+        pp = params["prologue"]
+        x, _ = _apply_mixer(cfg, pp["mixer"], x, positions,
+                            "mla" if cfg.use_mla else "attn",
+                            use_pallas=use_pallas)
+        x, _ = _apply_ffn(cfg, pp["ffn"], x, "mlp")
+    x = constrain(x, "batch", None, None)
+
+    def body(carry, bp):
+        x, aux = carry
+        x = constrain(x, "batch", None, None)
+        x, _, a = _block_apply(cfg, bp, x, positions, pattern,
+                               use_pallas=use_pallas)
+        return (constrain(x, "batch", None, None), aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, 0.0), params["blocks"])
+    return _final_norm(cfg, params, x), aux
+
+
+def chunked_xent(cfg, params, x, labels, *, chunk: int = 512):
+    """Cross-entropy over the vocab WITHOUT materializing (B, S, V) logits:
+    scan over sequence chunks, recomputing each chunk's logits in the
+    backward pass (jax.checkpoint). Logits are sharded over the model axis
+    on the vocab dim."""
+    head = _lm_head(cfg, params)
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = (S + pad) // chunk
+    xs = jnp.moveaxis(x.reshape(B, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, sl):
+        tot, cnt = carry
+        xc, lc = sl
+        logits = (xc @ head).astype(jnp.float32)
+        logits = L.softcap(logits, cfg.final_logit_softcap)
+        logits = constrain(logits, "batch", None, "model")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        safe = jnp.clip(lc, 0, cfg.vocab_padded - 1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0) & (lc < cfg.vocab_size)
+        return (tot + jnp.sum(nll * mask), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg, params, batch, *, use_pallas: bool = False):
+    """Next-token cross-entropy (+ MoE aux). Labels default to shifted tokens.
+    Uses the chunked vocab head — no (B, S, V) logits tensor."""
+    x, aux = forward_hidden(cfg, params, batch, use_pallas=use_pallas)
+    if "labels" in batch:
+        labels = batch["labels"]
+    else:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)),
+                         constant_values=-1)
+    loss = chunked_xent(cfg, params, x, labels)
+    return loss + 0.01 * aux / max(cfg.n_layers, 1)

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine

@@ -1,0 +1,146 @@
+"""Optimizers (pure JAX — no optax in this environment).
+
+``adamw``     — fp32 or bf16 moment states (``state_dtype``); the bf16 variant
+                halves optimizer memory for the >=100B configs.
+``adafactor`` — factored second moments (row/col averages for >=2D params):
+                ~1 extra value per parameter instead of 2; the default for
+                the 104B/236B/398B dry-run configs (DESIGN.md §6).
+``sgd``       — momentum SGD, the FL local-update optimizer (paper Sec. II-B).
+
+All follow the same functional interface:
+    opt = make_optimizer(name, lr=...)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state[, step])
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+
+
+def sgd(lr=1e-2, momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mom": _tmap(jnp.zeros_like, params), "step": jnp.int32(0)}
+
+    def update(params, grads, state, lr_now=None):
+        lr_ = lr_now if lr_now is not None else lr
+        mom = _tmap(lambda m, g: momentum * m + g, state["mom"], grads)
+        new = _tmap(
+            lambda p, m: p - lr_ * (m + weight_decay * p), params, mom)
+        return new, {"mom": mom, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr=3e-4, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": _tmap(z, params), "v": _tmap(z, params),
+                "step": jnp.int32(0)}
+
+    def update(params, grads, state, lr_now=None):
+        lr_ = lr_now if lr_now is not None else lr
+        t = state["step"] + 1
+        m = _tmap(lambda m_, g: (b1 * m_.astype(jnp.float32)
+                                 + (1 - b1) * g.astype(jnp.float32)),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: (b2 * v_.astype(jnp.float32)
+                                 + (1 - b2) * jnp.square(g.astype(jnp.float32))),
+                  state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step_ = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p.astype(jnp.float32)
+                    - lr_ * (step_ + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+
+        new = _tmap(upd, params, m, v)
+        cast = lambda x: x.astype(state_dtype)
+        return new, {"m": _tmap(cast, m), "v": _tmap(cast, v), "step": t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr=1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored AdaFactor (Shazeer & Stern 2018) — row/col second-moment
+    factors for rank>=2 leaves, full second moment for vectors/scalars."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": _tmap(st, params), "step": jnp.int32(0)}
+
+    def update(params, grads, state, lr_now=None):
+        lr_ = lr_now if lr_now is not None else lr
+        t = state["step"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                prec = rfac[..., None] * vc[..., None, :]
+                u = g * jax.lax.rsqrt(prec + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr_ * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_params, {"v": new_v, "step": t}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr=None, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr or 1e-2, **kw)
+    if name == "adamw":
+        return adamw(lr or 3e-4, **kw)
+    if name == "adamw_bf16":
+        return adamw(lr or 3e-4, state_dtype=jnp.bfloat16, **kw)
+    if name == "adafactor":
+        return adafactor(lr or 1e-3, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,7 @@
+from repro.sharding.specs import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    state_pspecs,
+    to_shardings,
+)

@@ -1,0 +1,245 @@
+"""PartitionSpec rules for every architecture (2-D FSDP x TP sharding).
+
+Convention (DESIGN.md §6):
+  - TP axis      = "model" (16-way): attention/FFN projection output dims,
+                   expert hidden dims, vocab dim of embed/lm_head.
+  - FSDP axis    = "data" (and "pod" when multi_pod — flat sync baseline):
+                   the other matmul dim of each weight, so parameters and
+                   optimizer state are fully sharded (ZeRO-3-style).
+  - batch        = ("pod", "data") for activations.
+
+Rules are path-classified with shape-divisibility guards: an axis is applied
+only when the dim divides evenly; otherwise that dim stays replicated. This
+is what makes all 10 archs (20/28/48/96/128 heads, 8..160 experts,
+non-power-of-2 vocabs) lower cleanly on the same mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# weights whose LAST dim is the "output" of a projection -> TP on last dim,
+# FSDP on second-to-last
+_IN_PROJ = {
+    "wq", "wk", "wv", "w_gate", "w_up", "q_down", "q_up", "kv_down", "kv_up",
+    "in_proj", "lm_head", "embed", "wg", "wu", "fc1_w", "fc2_w",
+}
+# weights whose last dim is d_model (residual write-back) -> TP on the
+# contracting (second-to-last) dim, FSDP on last
+_OUT_PROJ = {"wo", "w_down", "out_proj", "wd"}
+_REPLICATED = {
+    "A_log", "D", "dt_bias", "gate_norm_scale", "norm_scale", "norm_bias",
+    "post_norm_scale", "final_norm_scale", "final_norm_bias",
+    "enc_norm_scale", "enc_norm_bias", "q_norm_scale", "kv_norm_scale",
+    "conv_b",
+}
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name]
+
+
+def _fsdp_axis(mesh: Mesh):
+    """FSDP spans ("pod","data") when a pod axis exists, else ("data",)."""
+    names = mesh.axis_names
+    if "pod" in names:
+        return ("pod", "data")
+    return "data"
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return axis is not None and dim % _axis_size(mesh, axis) == 0
+
+
+def _leaf_spec(key: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp) -> P:
+    nd = len(shape)
+    lead = (None,) * max(nd - 2, 0)
+    if key in _REPLICATED or nd == 0:
+        return P()
+    if nd == 1:
+        return P("model") if _fits(shape[0], mesh, "model") else P()
+    d_in, d_out = shape[-2], shape[-1]
+    if key in ("wg", "wu", "wd") and nd >= 3:
+        # MoE expert stacks (.., E, d_in, d_out): expert-parallel over fsdp
+        # when E divides (deepseek 160, jamba 16); else FSDP the matmul dim.
+        e_dim = shape[-3]
+        if _fits(e_dim, mesh, fsdp):
+            tp_pos = -1 if key in ("wg", "wu") else -2
+            parts = [None] * nd
+            parts[-3] = fsdp
+            parts[tp_pos] = ("model" if _fits(shape[tp_pos], mesh, "model")
+                             else None)
+            return P(*parts)
+        # fall through to IN/OUT rules on the last two dims
+    if key == "conv_w":  # (conv_dim, K): shard channels over fsdp
+        return P(*lead, fsdp if _fits(d_in, mesh, fsdp) else None, None)
+    if key == "router":  # (d, E): keep expert dim whole for exact top-k
+        return P(*lead, fsdp if _fits(d_in, mesh, fsdp) else None, None)
+    if key in _OUT_PROJ:
+        tp = "model" if _fits(d_in, mesh, "model") else None
+        fs = fsdp if _fits(d_out, mesh, fsdp) else None
+        return P(*lead, tp, fs)
+    # default: IN_PROJ-style (covers unknown 2D+ leaves conservatively)
+    tp = "model" if _fits(d_out, mesh, "model") else None
+    fs = fsdp if _fits(d_in, mesh, fsdp) else None
+    if tp is None and fs is None and _fits(d_out, mesh, fsdp):
+        return P(*lead, None, fsdp)  # at least FSDP the big dim
+    return P(*lead, fs, tp)
+
+
+def param_pspecs(params, mesh: Mesh, layout: str = "2d"):
+    """Pytree of PartitionSpec matching ``params``. layout "dp" drops the
+    tensor-parallel axis: weights shard over all axes combined (ZeRO-style)
+    on their largest dim, activations carry the whole batch split."""
+    fsdp = (tuple(mesh.axis_names) if layout == "dp" else _fsdp_axis(mesh))
+
+    def leaf(key, shape):
+        spec = _leaf_spec(key, shape, mesh, fsdp)
+        if layout == "dp":
+            spec = P(*[None if s == "model" else s for s in tuple(spec)])
+        return spec
+
+    def rec_keyed(key, node):
+        if isinstance(node, dict):
+            return {k: rec_keyed(k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec_keyed(key, v) for v in node)
+        if node is None:
+            return None
+        return leaf(key, tuple(node.shape))
+
+    return rec_keyed("", params)
+
+
+def state_pspecs(opt_state, params, param_specs, mesh: Mesh):
+    """Optimizer-state specs: moments mirror their parameter's spec; factored
+    adafactor moments drop the corresponding axis; scalars replicate."""
+    flat_p = {tuple(str(k) for k in path): (leaf, spec) for (path, leaf), spec
+              in zip(jax.tree_util.tree_leaves_with_path(params),
+                     jax.tree_util.tree_leaves(param_specs))}
+
+    def find_param(path):
+        # path like ('m', ..., param_path...) or ('v', 'vr', ...)
+        tail = tuple(str(k) for k in path)
+        for start in range(len(tail)):
+            if tail[start:] in flat_p:
+                return flat_p[tail[start:]]
+            # factored states append 'vr'/'vc'/'v' INSIDE the param path
+            if tail[start:-1] in flat_p:
+                return flat_p[tail[start:-1]]
+        return None
+
+    fsdp = _fsdp_axis(mesh)
+
+    def spec_of(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        hit = find_param(path)
+        if hit is not None:
+            p_leaf, p_spec = hit
+            if leaf.shape == p_leaf.shape:
+                return p_spec
+            parts = tuple(p_spec) + (None,) * (p_leaf.ndim - len(tuple(p_spec)))
+            if leaf.shape == p_leaf.shape[:-1]:   # adafactor vr (drop last)
+                return P(*parts[:-1])
+            if leaf.shape == p_leaf.shape[:-2] + p_leaf.shape[-1:]:  # vc
+                return P(*(parts[:-2] + parts[-1:]))
+        # fallback by shape
+        last = str(path[-1]) if path else ""
+        return _leaf_spec(last, tuple(leaf.shape), mesh, fsdp)
+
+    paths_leaves = jax.tree_util.tree_leaves_with_path(opt_state)
+    flat_specs = [spec_of(p, l) for p, l in paths_leaves]
+    treedef = jax.tree_util.tree_structure(opt_state)
+    return jax.tree_util.tree_unflatten(treedef, flat_specs)
+
+
+def batch_pspec(mesh: Mesh, ndim: int, batch_divisible: bool = True,
+                layout: str = "2d") -> P:
+    """Activations/batch arrays: shard dim0 (batch) over (pod?, data) — or
+    over every axis in the pure-DP layout."""
+    if not batch_divisible:
+        return P(*((None,) * ndim))
+    fsdp = (tuple(mesh.axis_names) if layout == "dp" else _fsdp_axis(mesh))
+    return P(fsdp, *((None,) * (ndim - 1)))
+
+
+def cache_pspecs(cache, mesh: Mesh, batch: int):
+    """KV/state cache specs, keyed by cache-component name.
+
+    The seq dim of attention K/V caches is NEVER sharded: decode writes the
+    new entry with a dynamic-update at a traced position, which GSPMD can
+    only realize on a seq-sharded cache by all-gathering it (observed
+    1.5 TB/device/step on gemma2 decode_32k). Instead:
+
+      k/v   (.., B, S, H, hd): batch@fsdp, head_dim@model (else heads)
+      ckv/krope (.., B, S, r): batch@fsdp, S@model — MLA attends in latent
+             space with a distributed softmax (repro.models.layers), and its
+             single-token update tolerates the shard boundary because the
+             payload is (B, 1, r), tiny
+      conv  (.., B, K, conv_dim): batch@fsdp, conv_dim@model
+      ssm   (.., B, H, N, P): batch@fsdp, H@model (else P)
+
+    batch=1 (long_500k) leaves the fsdp axis unused — the cache replicates
+    over data but stays model-sharded, which fits HBM for every supported
+    long-context arch (DESIGN.md §5).
+    """
+    fsdp = _fsdp_axis(mesh)
+    dp = _axis_size(mesh, fsdp)
+    msz = _axis_size(mesh, "model")
+
+    def spec_for(key: str, shape) -> P:
+        nd = len(shape)
+        parts: list = [None] * nd
+        b_dim = None
+        for i, s in enumerate(shape):
+            if s == batch and i <= 2:
+                b_dim = i
+                break
+        if b_dim is not None and batch % dp == 0:
+            parts[b_dim] = fsdp
+
+        def try_model(*dims):
+            for i in dims:
+                if 0 <= i < nd and parts[i] is None and shape[i] % msz == 0 \
+                        and shape[i] >= msz:
+                    parts[i] = "model"
+                    return
+
+        if key in ("k", "v"):
+            try_model(nd - 1, nd - 2)          # head_dim, then n_kv_heads
+        elif key in ("ckv", "krope"):
+            if key == "ckv":
+                try_model(nd - 2)              # seq (distributed softmax)
+            else:
+                try_model(nd - 2)
+        elif key == "conv":
+            try_model(nd - 1)                  # conv channels
+        elif key == "ssm":
+            try_model(nd - 3, nd - 1)          # heads, then head_dim
+        else:
+            try_model(nd - 1)
+        return P(*parts)
+
+    def rec(key, node):
+        if isinstance(node, dict):
+            return {k: rec(k, v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(key, v) for v in node)
+        if node is None:
+            return None
+        return spec_for(key, tuple(node.shape))
+
+    return rec("", cache)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P) or x is None)

@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_weighted_mean,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_bytes,
+    tree_cast,
+    tree_flatten_concat,
+    tree_unflatten_concat,
+)
+from repro.utils.hlo_parse import collective_bytes_from_hlo, collective_breakdown

@@ -1,0 +1,108 @@
+"""Pytree arithmetic utilities.
+
+All model/optimizer state in repro is a plain pytree of jnp arrays; these
+helpers are the vocabulary the FL aggregation (Eqs. 3-5 of the paper), the
+optimizers, and the MARL soft updates are written in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: Pytree, s) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_cast(a: Pytree, dtype) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, a
+    )
+
+
+def tree_dot(a: Pytree, b: Pytree):
+    leaves = jax.tree_util.tree_map(lambda x, y: jnp.vdot(x, y), a, b)
+    return functools.reduce(jnp.add, jax.tree_util.tree_leaves(leaves))
+
+
+def tree_norm(a: Pytree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a: Pytree) -> int:
+    """Total number of elements."""
+    return int(sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(a)))
+
+
+def tree_bytes(a: Pytree) -> int:
+    return int(
+        sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(a))
+    )
+
+
+def tree_weighted_mean(trees: Sequence[Pytree], weights) -> Pytree:
+    """Normalized data-size-weighted average (paper Eqs. 3/4, normalized —
+
+    see DESIGN.md §9.6). ``trees`` is a list of identically-structured pytrees,
+    ``weights`` a vector of length len(trees).
+    """
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves], axis=0)
+        out = jnp.tensordot(w, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(avg, *trees)
+
+
+def tree_stack(trees: Sequence[Pytree]) -> Pytree:
+    """Stack a list of pytrees into one pytree with a leading axis."""
+    return jax.tree_util.tree_map(lambda *l: jnp.stack(l, axis=0), *trees)
+
+
+def tree_unstack(tree: Pytree, n: int) -> list:
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_flatten_concat(a: Pytree) -> tuple[jnp.ndarray, Any]:
+    """Flatten a pytree into one 1-D fp32 vector plus reconstruction spec.
+
+    Used by the fedavg_reduce Pallas kernel, which streams the whole model as
+    a flat parameter vector.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat, (treedef, shapes, dtypes)
+
+
+def tree_unflatten_concat(flat: jnp.ndarray, spec) -> Pytree:
+    treedef, shapes, dtypes = spec
+    leaves = []
+    ofs = 0
+    for shp, dt in zip(shapes, dtypes):
+        n = int(np.prod(shp)) if shp else 1
+        leaves.append(flat[ofs : ofs + n].reshape(shp).astype(dt))
+        ofs += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)

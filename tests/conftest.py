@@ -1,0 +1,11 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# 512-device flag in its own process) — never set
+# xla_force_host_platform_device_count here. Individual tests that need a
+# multi-device mesh spawn subprocesses (see test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

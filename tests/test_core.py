@@ -1,0 +1,234 @@
+"""Paper-core tests: latency model (Eqs. 11-17), wireless rates (Eqs. 7-8),
+edge association (Def. 1 + (18b-d)), blockchain DPoS (Sec. II-C),
+hierarchical aggregation (Eqs. 3-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import association as assoc_mod
+from repro.core import blockchain as bc
+from repro.core import comms, hierarchy, latency
+
+KEY = jax.random.PRNGKey(0)
+LP = latency.LatencyParams()
+WC = comms.WirelessConfig(n_bs=5)
+
+
+def _setup(n=20, m=5):
+    ks = jax.random.split(KEY, 4)
+    data = jax.random.uniform(ks[0], (n,), minval=100, maxval=500)
+    freqs = jnp.asarray([2.6, 1.8, 3.6, 2.4, 2.4])[:m] * 1e9
+    h = comms.sample_channel(WC, ks[1])
+    hd = comms.sample_channel(WC, ks[2])
+    dist = comms.sample_distances(WC, ks[3])
+    tau = jnp.full((m, WC.n_subchannels), 1.0 / m)
+    up = comms.uplink_rate(WC, tau, h, dist)
+    down = comms.downlink_rate(WC, hd, dist)
+    return data, freqs, up, down
+
+
+# ---------------------------------------------------------------------------
+# wireless (Eqs. 7-8)
+# ---------------------------------------------------------------------------
+
+
+def test_uplink_rate_positive_and_bandwidth_monotone():
+    data, freqs, up, down = _setup()
+    assert bool((up > 0).all()) and bool((down > 0).all())
+    # more time share -> more rate (others fixed)
+    h = comms.sample_channel(WC, KEY)
+    dist = comms.sample_distances(WC, jax.random.fold_in(KEY, 9))
+    tau_lo = jnp.full((5, WC.n_subchannels), 0.1)
+    tau_hi = tau_lo.at[0].set(0.5)
+    up_lo = comms.uplink_rate(WC, tau_lo, h, dist)
+    up_hi = comms.uplink_rate(WC, tau_hi, h, dist)
+    assert float(up_hi[0]) > float(up_lo[0])
+
+
+def test_interference_reduces_rate():
+    h = jnp.ones((2, 4))
+    dist = jnp.array([100.0, 100.0])
+    cfg = comms.WirelessConfig(n_bs=2, n_subchannels=4)
+    solo = comms.uplink_rate(cfg, jnp.array([[1.0] * 4, [0.0] * 4]), h, dist)
+    shared = comms.uplink_rate(cfg, jnp.full((2, 4), 0.5), h, dist)
+    # with a co-channel interferer at equal power, per-share rate drops
+    assert float(shared[0]) < float(solo[0])
+
+
+# ---------------------------------------------------------------------------
+# latency (Eqs. 11-17)
+# ---------------------------------------------------------------------------
+
+
+def test_t_cmp_matches_manual():
+    data, freqs, up, down = _setup()
+    assoc = assoc_mod.average_association(20, 5)
+    b = jnp.full((20,), 0.5)
+    t = latency.t_cmp(LP, assoc, b, data, freqs)
+    manual = np.zeros(5)
+    for i in range(20):
+        manual[int(assoc[i])] += 0.5 * float(data[i]) * LP.cycles_per_sample
+    manual /= np.asarray(freqs)
+    np.testing.assert_allclose(np.asarray(t), manual, rtol=1e-5)
+
+
+def test_round_time_is_max_composition():
+    data, freqs, up, down = _setup()
+    assoc = assoc_mod.average_association(20, 5)
+    b = jnp.full((20,), 0.5)
+    total = latency.round_time(LP, assoc, b, data, freqs, up, down)
+    cmp_ = latency.t_cmp(LP, assoc, b, data, freqs)
+    bcast = latency.t_broadcast(LP, assoc, up, 5)
+    bv = latency.t_block_validation(LP, down, freqs)
+    np.testing.assert_allclose(float(total),
+                               float(jnp.max(cmp_) + jnp.max(bcast) + bv),
+                               rtol=1e-6)
+
+
+def test_batch_size_monotone_in_compute_time():
+    data, freqs, up, down = _setup()
+    assoc = assoc_mod.average_association(20, 5)
+    lo = latency.round_time(LP, assoc, jnp.full((20,), 0.1), data, freqs, up, down)
+    hi = latency.round_time(LP, assoc, jnp.full((20,), 0.9), data, freqs, up, down)
+    assert float(hi) > float(lo)
+
+
+def test_global_rounds_bound():
+    assert latency.global_rounds(0.5) == pytest.approx(2.0)
+    assert latency.global_rounds(0.9) == pytest.approx(10.0)
+
+
+def test_greedy_beats_random_on_average():
+    data, freqs, up, down = _setup()
+    b = jnp.full((20,), 0.5)
+    greedy = assoc_mod.greedy_association(LP, data, freqs, up)
+    t_g = float(latency.round_time(LP, greedy, b, data, freqs, up, down))
+    t_rs = [float(latency.round_time(
+        LP, assoc_mod.random_association(jax.random.fold_in(KEY, i), 20, 5),
+        b, data, freqs, up, down)) for i in range(10)]
+    assert t_g <= np.mean(t_rs) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# association constraints (18b-d)
+# ---------------------------------------------------------------------------
+
+
+def test_association_constraints():
+    scores = jax.random.normal(KEY, (5, 20))
+    assoc = assoc_mod.assoc_from_scores(scores)
+    b = assoc_mod.project_batch(LP, jax.random.normal(KEY, (20,)) * 3)
+    tau = assoc_mod.project_bandwidth(jax.random.normal(KEY, (5, 8)))
+    checks = assoc_mod.check_constraints(LP, assoc, b, tau, 20, 5)
+    assert all(checks.values()), checks
+    np.testing.assert_allclose(np.asarray(tau.sum(0)), np.ones(8), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# blockchain
+# ---------------------------------------------------------------------------
+
+
+def _mini_params(v=1.0):
+    return {"w": jnp.full((4, 4), v), "b": jnp.zeros((4,))}
+
+
+def test_stake_initialization_eq6():
+    chain = bc.DPoSChain(4, [10.0, 20.0, 30.0, 40.0], s_ini=100.0)
+    np.testing.assert_allclose(chain.stakes, [10.0, 20.0, 30.0, 40.0])
+    assert chain.elect_producers() == [3, 2, 1]
+
+
+def test_chain_validation_and_tamper_detection():
+    chain = bc.DPoSChain(3, [1.0, 1.0, 1.0])
+    for r in range(3):
+        for s in range(3):
+            chain.submit_model(s, _mini_params(s + r), r, holdout_loss=0.1 * s)
+        chain.verify_round()
+        chain.produce_block()
+    assert chain.validate_chain()
+    assert len(chain.blocks) == 3
+    # tamper with a middle transaction -> detected
+    import dataclasses
+
+    blk = chain.blocks[1]
+    bad_tx = dataclasses.replace(blk.transactions[0], payload_hash="0" * 64)
+    chain.blocks[1] = dataclasses.replace(
+        blk, transactions=(bad_tx,) + blk.transactions[1:])
+    assert not chain.validate_chain()
+
+
+def test_verification_rewards_good_models_only():
+    chain = bc.DPoSChain(3, [1.0, 1.0, 1.0], reward=5.0, tolerance=0.1)
+    chain.submit_model(0, _mini_params(), 0, holdout_loss=0.5)
+    chain.submit_model(1, _mini_params(), 0, holdout_loss=0.55)
+    chain.submit_model(2, _mini_params(), 0, holdout_loss=9.0)  # poisoned
+    verdicts = chain.verify_round()
+    assert verdicts[0] and verdicts[1] and not verdicts[2]
+    assert chain.stakes[0] > chain.stakes[2]
+
+
+def test_producer_rotation():
+    chain = bc.DPoSChain(5, [5, 4, 3, 2, 1], n_producers=3)
+    assert chain.current_producer() == 0  # before any block, slot 0
+    for _ in range(3):
+        chain.produce_block()
+    seen = {b.producer for b in chain.blocks}
+    assert seen == {0, 1, 2}  # top-3 by stake rotate
+
+
+# ---------------------------------------------------------------------------
+# hierarchy (Eqs. 3-5)
+# ---------------------------------------------------------------------------
+
+
+def _models(vals):
+    return [{"w": jnp.full((3, 3), v), "b": jnp.full((3,), -v)} for v in vals]
+
+
+def test_flat_fedavg_weighted_mean():
+    out = hierarchy.flat_fedavg(_models([1.0, 3.0]), [1.0, 3.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.5, rtol=1e-6)
+
+
+def test_hierarchical_equals_flat_when_balanced():
+    models = _models([1.0, 2.0, 3.0, 4.0])
+    sizes = [10.0, 10.0, 10.0, 10.0]
+    assoc = np.array([0, 0, 1, 1])
+    flat = hierarchy.flat_fedavg(models, sizes)
+    hier = hierarchy.hierarchical_fedavg(models, sizes, assoc, 2)
+    np.testing.assert_allclose(np.asarray(hier["w"]), np.asarray(flat["w"]),
+                               rtol=1e-6)
+
+
+def test_hierarchical_weighted_global_equals_flat_always():
+    models = _models([1.0, 2.0, 3.0, 4.0, 5.0])
+    sizes = [1.0, 2.0, 3.0, 4.0, 5.0]
+    assoc = np.array([0, 0, 1, 2, 2])
+    flat = hierarchy.flat_fedavg(models, sizes)
+    hier = hierarchy.hierarchical_fedavg(models, sizes, assoc, 3,
+                                         weighted_global=True)
+    np.testing.assert_allclose(np.asarray(hier["w"]), np.asarray(flat["w"]),
+                               rtol=1e-6)
+
+
+def test_paper_unweighted_global_differs_when_unbalanced():
+    models = _models([0.0, 0.0, 10.0])
+    sizes = [1.0, 1.0, 100.0]
+    assoc = np.array([0, 0, 1])
+    flat = hierarchy.flat_fedavg(models, sizes)
+    hier = hierarchy.hierarchical_fedavg(models, sizes, assoc, 2)
+    # Eq. 5 unweighted: (0 + 10)/2 = 5 vs flat ~9.8
+    assert abs(float(hier["w"][0, 0]) - 5.0) < 1e-5
+    assert float(flat["w"][0, 0]) > 9.0
+
+
+def test_kernel_aggregation_matches_host():
+    models = _models([1.0, 2.0, 5.0])
+    sizes = [1.0, 2.0, 2.0]
+    host = hierarchy.flat_fedavg(models, sizes)
+    kern = hierarchy.fedavg_flat_kernel(models, sizes)
+    for k in host:
+        np.testing.assert_allclose(np.asarray(kern[k]), np.asarray(host[k]),
+                                   atol=1e-5)

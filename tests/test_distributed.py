@@ -1,0 +1,161 @@
+"""Distribution tests: sharding specs, small-mesh lowering (8 host devices in
+a subprocess — the dry-run's own machinery at debug scale), hierarchical
+local-SGD equivalence."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_param_pspecs_cover_every_leaf():
+    from repro.launch.mesh import make_debug_mesh  # noqa: F401 — spec-only
+
+    # build specs against a FAKE mesh shape without devices: use Mesh of 1
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ["h2o-danube-1.8b", "mixtral-8x22b", "jamba-1.5-large-398b"]:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        from repro.sharding import param_pspecs
+
+        specs = param_pspecs(params, mesh)
+        n_leaves = len(jax.tree_util.tree_leaves(params))
+        n_specs = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)))
+        assert n_leaves == n_specs
+
+
+@pytest.mark.slow
+def test_debug_mesh_dryrun_smoke_arch():
+    """lower+compile a smoke arch train step on an 8-device debug mesh via
+    the real dryrun machinery (subprocess so the device count applies)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.optim import make_optimizer
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.steps import make_train_step
+        from repro.sharding import param_pspecs, to_shardings, batch_pspec
+        from repro.sharding.act import activation_mesh
+
+        cfg = get_smoke_config("mixtral-8x22b")
+        model = build_model(cfg)
+        mesh = make_debug_mesh(8)
+        params = model.init(jax.random.PRNGKey(0))
+        p_sh = to_shardings(param_pspecs(params, mesh), mesh)
+        params = jax.device_put(params, p_sh)
+        opt = make_optimizer("adamw", lr=1e-3)
+        opt_state = jax.device_put(
+            opt.init(params), to_shardings(param_pspecs(opt.init(params),
+                                                        mesh), mesh))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                  cfg.vocab_size)
+        toks = jax.device_put(toks, jax.NamedSharding(mesh, batch_pspec(mesh, 2)))
+        step = jax.jit(make_train_step(model, opt))
+        with activation_mesh(mesh):
+            params, opt_state, loss = step(params, opt_state, {"tokens": toks})
+        print("LOSS", float(loss))
+    """)
+    loss = float(out.strip().split("LOSS")[-1])
+    assert np.isfinite(loss) and loss < 10.0
+
+
+@pytest.mark.slow
+def test_hierarchical_local_sgd_matches_synced_at_h1():
+    """Pod-local training with sync every step == fully synced data-parallel
+    training (paper Eq. 4/5 degenerates to flat FedAvg at H=1)."""
+    out = run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.optim import make_optimizer
+        from repro.launch.steps import (make_train_step,
+                                        make_pod_local_train_step,
+                                        make_cross_pod_sync)
+
+        cfg = get_smoke_config("h2o-danube-1.8b")
+        model = build_model(cfg)
+        opt = make_optimizer("sgd", lr=0.1, momentum=0.0)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                  cfg.vocab_size)
+
+        # reference: plain synced step on the full batch
+        step = jax.jit(make_train_step(model, opt))
+        p_ref, _, _ = step(params, opt.init(params), {"tokens": toks})
+
+        # hierarchical with 2 pods, sync every step
+        n_pods = 2
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_pods,) + x.shape).copy(), t)
+        inner = jax.jit(make_pod_local_train_step(model, opt, n_pods))
+        sync = jax.jit(make_cross_pod_sync(n_pods))
+        ps, os_ = stack(params), stack(opt.init(params))
+        ps, os_, loss = inner(ps, os_, {"tokens": toks.reshape(2, 2, 32)})
+        ps = sync(ps)
+        p_hier = jax.tree_util.tree_map(lambda x: x[0], ps)
+
+        # NOTE: per-pod gradients are averaged over half batches then params
+        # averaged -> equals full-batch gradient average for SGD (linear).
+        diffs = [float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                                 jax.tree_util.tree_leaves(p_hier))]
+        print("MAXDIFF", max(diffs))
+    """, devices=1)
+    maxdiff = float(out.strip().split("MAXDIFF")[-1])
+    assert maxdiff < 5e-3, maxdiff
+
+
+def test_hlo_cost_parser_on_scan():
+    """Trip-count awareness (the core of the roofline derivation)."""
+    from repro.utils.hlo_cost import hlo_cost
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c.sum()
+
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    for L in (3, 9):
+        ws = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+        c = hlo_cost(jax.jit(f).lower(x, ws).compile().as_text())
+        expect = 2 * 64 * 32 * 32 * L
+        assert abs(c.dot_flops - expect) / expect < 0.01, (L, c.dot_flops)
+
+
+def test_collective_parser_counts_allreduce():
+    from repro.utils.hlo_parse import collective_breakdown
+
+    hlo = """
+  %all-reduce.1 = f32[128,256]{1,0} all-reduce(%x), replica_groups={}
+  %all-gather.2 = bf16[64]{0} all-gather(%y), dimensions={0}
+  %all-reduce.3-done = f32[4]{0} all-reduce-done(%z)
+"""
+    out = collective_breakdown(hlo)
+    assert out["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert out["all-gather"]["bytes"] == 64 * 2

@@ -1,0 +1,87 @@
+"""Optimizer and checkpoint tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.optim import linear_warmup_cosine, make_optimizer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _quadratic_problem():
+    target = jax.random.normal(KEY, (8, 8))
+
+    def loss(params):
+        return jnp.mean((params["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros((8, 8))}
+    return loss, params, target
+
+
+@pytest.mark.parametrize("name", ["sgd", "adamw", "adamw_bf16", "adafactor"])
+def test_optimizers_converge_on_quadratic(name):
+    loss, params, target = _quadratic_problem()
+    opt = make_optimizer(name, lr=0.3 if name == "sgd" else 0.1,
+                         **({"weight_decay": 0.0} if "adamw" in name else {}))
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(params, grads, state)
+    assert float(loss(params)) < 0.05 * l0, (name, float(loss(params)))
+
+
+def test_adafactor_memory_is_factored():
+    opt = make_optimizer("adafactor")
+    params = {"w": jnp.zeros((64, 128)), "b": jnp.zeros((128,))}
+    state = opt.init(params)
+    vw = state["v"]["w"]
+    assert set(vw.keys()) == {"vr", "vc"}
+    assert vw["vr"].shape == (64,) and vw["vc"].shape == (128,)
+    assert state["v"]["b"]["v"].shape == (128,)
+
+
+def test_adamw_bf16_states():
+    opt = make_optimizer("adamw_bf16")
+    params = {"w": jnp.zeros((4, 4))}
+    state = opt.init(params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_then_decay():
+    sched = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0, abs=0.02)
+    assert float(sched(60)) < 1.0
+    assert float(sched(109)) >= 0.1 * 0.9  # min_frac floor
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3),
+                   "stack": [jnp.ones(2), jnp.zeros(3)]},
+        "step": jnp.int32(7),
+        "nothing": None,
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 12, tree)
+    assert latest_step(d) == 12
+    restored, step = load_checkpoint(d)
+    assert step == 12
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+    assert restored["nothing"] is None
+    assert isinstance(restored["params"]["stack"], list)
+
+
+def test_checkpoint_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in range(6):
+        save_checkpoint(d, s, {"x": jnp.zeros(1)}, keep=2)
+    steps = sorted(int(f[5:14]) for f in os.listdir(d) if f.endswith(".npz"))
+    assert steps == [4, 5]

@@ -1,0 +1,130 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import association as assoc_mod
+from repro.core import hierarchy, latency
+from repro.kernels import ref
+from repro.utils.tree import (tree_flatten_concat, tree_unflatten_concat,
+                              tree_weighted_mean)
+
+LP = latency.LatencyParams()
+SET = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 6), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_weighted_mean_is_convex_combination(n_models, dim, seed):
+    rng = np.random.RandomState(seed)
+    trees = [{"a": jnp.asarray(rng.randn(dim).astype(np.float32))}
+             for _ in range(n_models)]
+    w = jnp.asarray(rng.rand(n_models).astype(np.float32) + 0.01)
+    out = tree_weighted_mean(trees, w)
+    stacked = np.stack([np.asarray(t["a"]) for t in trees])
+    lo, hi = stacked.min(0), stacked.max(0)
+    assert (np.asarray(out["a"]) >= lo - 1e-4).all()
+    assert (np.asarray(out["a"]) <= hi + 1e-4).all()
+
+
+@given(st.integers(1, 50), st.integers(2, 8), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_assoc_from_scores_always_feasible(n_twins, n_bs, seed):
+    rng = np.random.RandomState(seed)
+    scores = jnp.asarray(rng.randn(n_bs, n_twins).astype(np.float32))
+    assoc = assoc_mod.assoc_from_scores(scores)
+    # (18b): every twin assigned to exactly one valid BS
+    assert assoc.shape == (n_twins,)
+    assert bool(((assoc >= 0) & (assoc < n_bs)).all())
+
+
+@given(st.integers(2, 8), st.integers(2, 10), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_bandwidth_projection_is_simplex(n_bs, n_ch, seed):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(n_bs, n_ch).astype(np.float32) * 3)
+    tau = assoc_mod.project_bandwidth(logits)
+    np.testing.assert_allclose(np.asarray(tau.sum(0)), np.ones(n_ch),
+                               rtol=1e-4)
+    assert bool((tau >= 0).all())
+
+
+@given(st.floats(0.0, 0.95), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_latency_scales_with_accuracy_target(theta, seed):
+    rng = np.random.RandomState(seed)
+    n, m = 10, 3
+    data = jnp.asarray(rng.uniform(100, 500, n).astype(np.float32))
+    freqs = jnp.asarray(rng.uniform(1e9, 4e9, m).astype(np.float32))
+    up = jnp.asarray(rng.uniform(1e6, 1e8, m).astype(np.float32))
+    down = jnp.asarray(rng.uniform(1e6, 1e8, m).astype(np.float32))
+    assoc = assoc_mod.average_association(n, m)
+    b = jnp.full((n,), 0.5)
+    import dataclasses
+
+    lp = dataclasses.replace(LP, theta_g=theta)
+    total = float(latency.total_time(lp, assoc, b, data, freqs, up, down))
+    rt = float(latency.round_time(lp, assoc, b, data, freqs, up, down))
+    assert total >= rt - 1e-6  # >= one round
+    np.testing.assert_allclose(total, rt / (1 - theta), rtol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_flatten_roundtrip(depth, width, seed):
+    rng = np.random.RandomState(seed)
+
+    def build(d):
+        if d == 0:
+            return jnp.asarray(rng.randn(rng.randint(1, 5),
+                                         rng.randint(1, 5)).astype(np.float32))
+        return {f"k{i}": build(d - 1) for i in range(width)}
+
+    tree = build(depth)
+    flat, spec = tree_flatten_concat(tree)
+    back = tree_unflatten_concat(flat, spec)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_hierarchical_permutation_invariance(n_bs, seed):
+    """Aggregation must not depend on twin ordering within a BS."""
+    rng = np.random.RandomState(seed)
+    n = n_bs * 3
+    models = [{"w": jnp.asarray(rng.randn(4).astype(np.float32))}
+              for _ in range(n)]
+    sizes = rng.uniform(1, 10, n).astype(np.float32)
+    assoc = np.arange(n) % n_bs
+    perm = rng.permutation(n)
+    out1 = hierarchy.hierarchical_fedavg(models, sizes, assoc, n_bs)
+    out2 = hierarchy.hierarchical_fedavg(
+        [models[i] for i in perm], sizes[perm], assoc[perm], n_bs)
+    np.testing.assert_allclose(np.asarray(out1["w"]), np.asarray(out2["w"]),
+                               rtol=1e-4)
+
+
+@given(st.integers(1, 8), st.integers(8, 64), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_fedavg_reduce_ref_idempotent_on_identical_models(c, n, seed):
+    rng = np.random.RandomState(seed)
+    one = rng.randn(n).astype(np.float32)
+    stacked = jnp.asarray(np.tile(one, (c, 1)))
+    w = jnp.asarray(rng.rand(c).astype(np.float32) + 0.1)
+    out = ref.fedavg_reduce_ref(stacked, w)
+    np.testing.assert_allclose(np.asarray(out), one, rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(4, 64), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+@SET
+def test_attention_reference_rows_sum_to_one_equiv(seq, heads, seed):
+    """softmax(QK^T)V with V=ones must return ones (prob rows sum to 1)."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, seq, heads, 8).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, seq, heads, 8).astype(np.float32))
+    v = jnp.ones((1, seq, heads, 8), jnp.float32)
+    out = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)

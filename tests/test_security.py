@@ -1,0 +1,94 @@
+"""The paper's security claim, end to end: DPoS verification protects the
+global model from poisoned local updates (Section II-C — 'the local models
+of the BS are ... verified by other BSs to ensure the quality')."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockchain as bc
+from repro.core import hierarchy
+from repro.models import cnn
+
+
+def _poisoned(params, scale=50.0):
+    return jax.tree_util.tree_map(lambda x: x + scale, params)
+
+
+def test_verification_gate_protects_global_model():
+    key = jax.random.PRNGKey(0)
+    base = cnn.init_params(key)
+    # three honest BS updates (small random perturbations), one poisoned
+    def perturb(tree, seed, scale=0.01):
+        k = jax.random.PRNGKey(seed)
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        ks = jax.random.split(k, len(leaves))
+        return jax.tree_util.tree_unflatten(
+            treedef, [l + scale * jax.random.normal(kk, l.shape)
+                      for l, kk in zip(leaves, ks)])
+
+    honest = [perturb(base, i) for i in range(1, 4)]
+    poisoned = _poisoned(base)
+
+    images = jax.random.normal(key, (64, 32, 32, 3)) * 0.2 + 0.5
+    labels = jax.random.randint(key, (64,), 0, 10)
+    batch = {"images": images, "labels": labels}
+    losses = [float(cnn.loss_fn(m, batch)) for m in honest]
+    loss_poisoned = float(cnn.loss_fn(poisoned, batch))
+    assert loss_poisoned > max(losses) + 1.0  # poisoning is detectable
+
+    chain = bc.DPoSChain(4, [1.0] * 4, tolerance=1.0)
+    for i, m in enumerate(honest):
+        chain.submit_model(i, m, 0, holdout_loss=losses[i])
+    chain.submit_model(3, poisoned, 0, holdout_loss=loss_poisoned)
+    verdicts = chain.verify_round()
+    chain.produce_block()
+    assert verdicts[3] is False and all(verdicts[i] for i in range(3))
+
+    # aggregate only verified models (the system path)
+    accepted = [honest[i] for i in range(3) if verdicts[i]]
+    global_ok = hierarchy.global_aggregate(accepted, [1.0] * len(accepted))
+    # counterfactual: aggregation without the gate
+    global_bad = hierarchy.global_aggregate(honest + [poisoned], [1.0] * 4)
+    l_ok = float(cnn.loss_fn(global_ok, batch))
+    l_bad = float(cnn.loss_fn(global_bad, batch))
+    assert l_ok + 0.5 < l_bad, (l_ok, l_bad)
+    # and the ledger records the rejected sender's unpaid work
+    assert chain.stakes[3] < chain.stakes[0]
+    assert chain.validate_chain()
+
+
+def test_stake_compounds_for_reliable_nodes():
+    chain = bc.DPoSChain(3, [1.0, 1.0, 1.0], reward=2.0, tolerance=0.2)
+    for r in range(5):
+        chain.submit_model(0, {"w": jnp.ones(2) * r}, r, holdout_loss=0.1)
+        chain.submit_model(1, {"w": jnp.ones(2) * r}, r, holdout_loss=0.15)
+        chain.submit_model(2, {"w": jnp.ones(2) * r}, r,
+                           holdout_loss=5.0 if r % 2 else 0.1)  # flaky node
+        chain.verify_round()
+        chain.produce_block()
+    assert chain.stakes[0] > chain.stakes[2]
+    # reliable nodes end up as producers
+    assert 0 in chain.elect_producers() and 1 in chain.elect_producers()
+
+
+def test_mrope_sections_and_text_equivalence():
+    """M-RoPE with identical (t,h,w) positions == standard RoPE (text case,
+    arXiv:2409.12191) — and sections must cover head_dim//2."""
+    from repro.configs import get_smoke_config
+    from repro.models.layers import apply_mrope, apply_rope
+
+    cfg = get_smoke_config("qwen2-vl-7b")
+    assert sum(cfg.mrope_sections) == cfg.head_dim // 2
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 16, 4, cfg.head_dim))
+    pos = jnp.tile(jnp.arange(16)[None, :], (2, 1))
+    pos3 = jnp.tile(pos[..., None], (1, 1, 3))
+    out_m = apply_mrope(x, pos3, cfg.rope_theta, cfg.mrope_sections)
+    out_r = apply_rope(x, pos, cfg.rope_theta)
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_r),
+                               atol=1e-5)
+    # distinct spatial positions must change the encoding
+    pos3_img = pos3.at[:, :, 1].add(7)
+    out_img = apply_mrope(x, pos3_img, cfg.rope_theta, cfg.mrope_sections)
+    assert not np.allclose(np.asarray(out_img), np.asarray(out_m))
