@@ -1,0 +1,139 @@
+"""Scale benchmarks for the segment-sum core and the jitted scan trainer.
+
+Two measurements:
+  * latency core — jitted Eq. 17 ``round_time`` at large N via the
+    segment-sum reductions, against the dense one-hot reference at the
+    largest N the O(N*M) path comfortably fits;
+  * MARL training — steps/sec of the fused ``lax.scan``
+    rollout-and-update trainer (repro.core.marl.train) vs the host Python
+    loop the seed used (examples/marl_allocation.py style), same env and
+    update schedule. Acceptance: scan >= 10x loop.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, save_result
+from repro.core import latency
+from repro.core.marl import (DDPGConfig, TrainConfig, act, train,
+                             train_host_loop)
+from repro.core.marl.env import EnvConfig
+
+LP = latency.LatencyParams()
+
+
+def _time_round_time(n: int, m: int, fn, iters: int = 20) -> float:
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    b = jnp.full((n,), 0.5)
+    data = jax.random.uniform(ks[1], (n,), minval=100, maxval=800)
+    freqs = jnp.linspace(1e9, 4e9, m)
+    up = jnp.full((m,), 1e7)
+    down = jnp.full((m,), 1e7)
+    jitted = jax.jit(lambda *a: fn(LP, *a))
+    jitted(assoc, b, data, freqs, up, down).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jitted(assoc, b, data, freqs, up, down)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us/call
+
+
+def _loop_steps_per_sec(cfg: EnvConfig, dcfg: DDPGConfig, steps: int,
+                        warmup: int) -> float:
+    """The seed's host-side training loop, one device round-trip per step
+    (the shared reference implementation in repro.core.marl.train)."""
+    tcfg = TrainConfig(steps=steps, warmup=warmup, replay_capacity=2048)
+    ts = train_host_loop(cfg, dcfg, tcfg, jax.random.PRNGKey(0))  # compile
+    jax.block_until_ready(ts.obs)
+    t0 = time.perf_counter()
+    ts = train_host_loop(cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    jax.block_until_ready(ts.obs)
+    return steps / (time.perf_counter() - t0)
+
+
+def _scan_steps_per_sec(cfg: EnvConfig, dcfg: DDPGConfig, steps: int,
+                        warmup: int) -> float:
+    tcfg = TrainConfig(steps=steps, warmup=warmup, replay_capacity=2048)
+    _, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(0))  # compile
+    jax.block_until_ready(trace)
+    t0 = time.perf_counter()
+    _, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    jax.block_until_ready(trace)
+    return steps / (time.perf_counter() - t0)
+
+
+def _learning_check(cfg: EnvConfig, dcfg: DDPGConfig, steps: int) -> dict:
+    """The example's endgame: a scan-trained policy vs the random/average
+    association baselines on the final env state (shared helper
+    repro.core.marl.compare_with_baselines keeps the two in sync)."""
+    from repro.core.marl import compare_with_baselines
+
+    tcfg = TrainConfig(steps=steps, warmup=48)
+    ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(0))
+    cmp_ = compare_with_baselines(cfg, ts.env, act(ts.agent, ts.obs))
+    return {"marl": float(cmp_["marl"]), "average": float(cmp_["average"]),
+            "early_mean": float(jnp.mean(trace["system_time"][:20])),
+            "late_mean": float(jnp.mean(trace["system_time"][-20:]))}
+
+
+def main(reduced: bool = True):
+    with Timer() as t:
+        m = 8
+        n_seg = 100_000 if reduced else 1_000_000
+        n_ref = 10_000
+        us_seg = _time_round_time(n_seg, m, latency.round_time)
+        us_seg_ref_n = _time_round_time(n_ref, m, latency.round_time)
+        us_onehot = _time_round_time(n_ref, m, latency.round_time_onehot)
+
+        cfg = EnvConfig(n_twins=30, n_bs=5)
+        loop_steps = 40 if reduced else 200
+        scan_steps = 400 if reduced else 2000
+        # example scale (compute-bound: the 256x256 MADDPG update dominates
+        # both paths, fusion only removes the host dispatch overhead)
+        dcfg_big = DDPGConfig(batch_size=64)
+        loop_big = _loop_steps_per_sec(cfg, dcfg_big, loop_steps, warmup=10)
+        scan_big = _scan_steps_per_sec(cfg, dcfg_big, scan_steps, warmup=10)
+        # dispatch-bound scale (small nets: the regime the host loop caps —
+        # one device round-trip per env step + one per update)
+        dcfg_small = DDPGConfig(hidden=(32, 32), batch_size=16)
+        loop_small = _loop_steps_per_sec(cfg, dcfg_small, loop_steps,
+                                         warmup=10)
+        scan_small = _scan_steps_per_sec(cfg, dcfg_small, scan_steps,
+                                         warmup=10)
+        speedup = scan_small / loop_small
+        learn = _learning_check(cfg, dcfg_big, 120 if reduced else 200)
+
+    out = {
+        "round_time_segment_us": {str(n_seg): us_seg, str(n_ref): us_seg_ref_n},
+        "round_time_onehot_us": {str(n_ref): us_onehot},
+        "marl_example_scale": {"loop_sps": loop_big, "scan_sps": scan_big,
+                               "speedup": scan_big / loop_big},
+        "marl_dispatch_bound": {"loop_sps": loop_small, "scan_sps": scan_small,
+                                "speedup": speedup},
+        "learning_check": learn,
+    }
+    save_result("scale", out)
+    print(f"scale: round_time N={n_seg} segment {us_seg:.0f}us | "
+          f"N={n_ref} segment {us_seg_ref_n:.0f}us vs onehot {us_onehot:.0f}us")
+    print(f"scale: MARL 256x256/b64  scan {scan_big:.0f} vs loop "
+          f"{loop_big:.0f} steps/s ({scan_big / loop_big:.1f}x)")
+    print(f"scale: MARL 32x32/b16    scan {scan_small:.0f} vs loop "
+          f"{loop_small:.0f} steps/s ({speedup:.1f}x)")
+    print(f"scale: learned policy round time {learn['marl']:.2f}s vs "
+          f"average baseline {learn['average']:.2f}s "
+          f"(train latency {learn['early_mean']:.2f}s -> "
+          f"{learn['late_mean']:.2f}s)")
+    return {"name": "scale",
+            "us_per_call": t.seconds * 1e6,
+            "derived": f"segN{n_seg}/{us_seg:.0f}us"
+                       f"|scan_sps/{scan_small:.0f}"
+                       f"|loop_sps/{loop_small:.0f}"
+                       f"|speedup/{speedup:.1f}x"}
+
+
+if __name__ == "__main__":
+    main(reduced=False)

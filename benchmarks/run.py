@@ -18,7 +18,8 @@ def main() -> None:
 
     from benchmarks import (bench_fig5_latency, bench_fig6_loss,
                             bench_fig7_reward, bench_fig8_time,
-                            bench_hierarchy, bench_kernels, bench_roofline)
+                            bench_hierarchy, bench_kernels, bench_roofline,
+                            bench_scale)
 
     benches = {
         "fig5": bench_fig5_latency.main,
@@ -28,6 +29,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "hierarchy": bench_hierarchy.main,
         "roofline": bench_roofline.main,
+        "scale": bench_scale.main,
     }
     only = set(args.only.split(",")) if args.only else None
     rows = []

@@ -2,21 +2,22 @@
 controller in the DTWN environment and shows the learned policy beating the
 random/average baselines on system latency (Eq. 17).
 
+Training runs as ONE jitted lax.scan (repro.core.marl.train) — the whole
+rollout-and-update loop is fused on device and only the metrics trace comes
+back to the host. Pass --host-loop for the legacy step-by-step Python loop
+(the seed behavior; ~10-30x slower, kept for comparison/debugging).
+
     PYTHONPATH=src python examples/marl_allocation.py --steps 200
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import association as assoc_mod
-from repro.core import comms, latency
-from repro.core.marl import (DDPGConfig, act, decode_actions, env_reset,
-                             env_step, maddpg_init, maddpg_update, observe,
-                             ou_init, ou_step, replay_add, replay_init,
-                             replay_sample)
-from repro.core.marl.env import EnvConfig
+from repro.core.marl import (DDPGConfig, TrainConfig, act,
+                             compare_with_baselines, observe, train,
+                             train_host_loop)
+from repro.core.marl.env import EnvConfig, bs_frequencies
 
 
 def main():
@@ -24,57 +25,43 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--twins", type=int, default=30)
     ap.add_argument("--bs", type=int, default=5)
+    ap.add_argument("--host-loop", action="store_true",
+                    help="legacy un-fused Python training loop")
     args = ap.parse_args()
 
     cfg = EnvConfig(n_twins=args.twins, n_bs=args.bs)
     dcfg = DDPGConfig()
+    tcfg = TrainConfig(steps=args.steps, warmup=min(48, args.steps // 2))
     key = jax.random.PRNGKey(0)
-    st = env_reset(cfg, key)
-    obs = observe(cfg, st)
-    agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
-    buf = replay_init(2048, cfg.state_dim, cfg.n_bs, cfg.action_dim)
-    noise = ou_init((cfg.n_bs, cfg.action_dim))
-    step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
 
-    costs = []
-    for i in range(args.steps):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        noise = ou_step(noise, k1, sigma=max(0.3 * (1 - i / args.steps), 0.02))
-        a = jnp.clip(act(agent, obs) + noise, -1, 1)
-        st, r, info = step_jit(st, a, k2)
-        obs2 = observe(cfg, st)
-        buf = replay_add(buf, obs, a, r, obs2)
-        obs = obs2
-        costs.append(float(info["system_time"]))
-        if i > 48:
-            agent, m = maddpg_update(dcfg, agent,
-                                     replay_sample(buf, k3, dcfg.batch_size))
-        if i % 25 == 0:
-            print(f"step {i:4d} system time {costs[-1]:8.2f}s "
-                  f"(running mean {np.mean(costs[-25:]):.2f}s)")
+    if args.host_loop:
+        costs = []
+
+        def on_step(i, info):
+            costs.append(float(info["system_time"]))
+            if i % 25 == 0:
+                print(f"step {i:4d} system time {costs[-1]:8.2f}s "
+                      f"(running mean {np.mean(costs[-25:]):.2f}s)")
+
+        ts = train_host_loop(cfg, dcfg, tcfg, key, on_step=on_step)
+    else:
+        ts, trace = train(cfg, dcfg, tcfg, key)
+        times = np.asarray(trace["system_time"])
+        for i in range(0, args.steps, 25):
+            print(f"step {i:4d} system time {times[i]:8.2f}s "
+                  f"(running mean {times[max(0, i - 24):i + 1].mean():.2f}s)")
+    st, agent = ts.env, ts.agent
 
     # final comparison against baselines on the same frozen state
     a = act(agent, observe(cfg, st))
-    assoc_p, b_p, tau_p = decode_actions(cfg, a)
-    up_p = comms.uplink_rate(cfg.wl, tau_p, st.h_up, st.dist)
-    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
-    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
-    up_u = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
-    b_mid = jnp.full((cfg.n_twins,), 0.5)
-    t_marl = float(latency.round_time(cfg.lat, assoc_p, b_p, st.data_sizes,
-                                      st.freqs, up_p, down))
-    t_avg = float(latency.round_time(
-        cfg.lat, assoc_mod.average_association(cfg.n_twins, cfg.n_bs), b_mid,
-        st.data_sizes, st.freqs, up_u, down))
-    t_rnd = float(np.mean([latency.round_time(
-        cfg.lat, assoc_mod.random_association(jax.random.PRNGKey(i),
-                                              cfg.n_twins, cfg.n_bs),
-        b_mid, st.data_sizes, st.freqs, up_u, down) for i in range(8)]))
-    print(f"\nfinal round latency:  MARL {t_marl:.2f}s | "
-          f"average {t_avg:.2f}s | random {t_rnd:.2f}s")
+    cmp_ = compare_with_baselines(cfg, st, a)
+    print(f"\nfinal round latency:  MARL {float(cmp_['marl']):.2f}s | "
+          f"average {float(cmp_['average']):.2f}s | "
+          f"random {float(cmp_['random']):.2f}s")
+    ghz = [round(float(f) / 1e9, 2) for f in bs_frequencies(cfg)]
     print(f"association histogram: "
-          f"{np.bincount(np.asarray(assoc_p), minlength=cfg.n_bs).tolist()} "
-          f"(BS freqs {list(cfg.bs_freqs_ghz[:cfg.n_bs])} GHz)")
+          f"{np.bincount(np.asarray(cmp_['assoc']), minlength=cfg.n_bs).tolist()} "
+          f"(BS freqs {ghz} GHz)")
 
 
 if __name__ == "__main__":

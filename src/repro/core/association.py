@@ -44,7 +44,7 @@ def greedy_association(params: lat.LatencyParams, data_sizes, freqs,
         t_add = (d * params.cycles_per_sample / freqs
                  + params.model_size_bits / jnp.maximum(uplink, 1.0))
         choice = jnp.argmin(load + t_add)
-        load = load + jnp.eye(n_bs)[choice] * t_add[choice]
+        load = load.at[choice].add(t_add[choice])
         return load, choice
 
     _, choices = jax.lax.scan(body, jnp.zeros(n_bs), order)

@@ -70,6 +70,44 @@ def hierarchical_fedavg(models: Sequence, data_sizes, assoc,
                             weighted_global=weighted_global)
 
 
+def hierarchical_fedavg_stacked(stacked, data_sizes, assoc, n_bs: int, *,
+                                weighted_global: bool = False) -> object:
+    """Two-tier aggregation (Eqs. 4-5) over *stacked* twin models.
+
+    ``stacked`` is a pytree whose leaves carry a leading twin axis (N, ...);
+    grouping uses segment-sum scatter reductions, so memory is O(N+M) and the
+    whole thing is jit/vmap-safe — the scalable replacement for the host-side
+    list-of-pytrees ``hierarchical_fedavg``. Empty BSs are excluded from the
+    Eq. 5 outer mean, matching the host path.
+    """
+    w = jnp.asarray(data_sizes, jnp.float32)
+    assoc = jnp.asarray(assoc)
+    bs_w = jax.ops.segment_sum(w, assoc, num_segments=n_bs)  # (M,)
+    occupied = bs_w > 0.0
+    safe_w = jnp.where(occupied, bs_w, 1.0)
+    if weighted_global:
+        # data-weighted outer mean == flat FedAvg exactly: one global
+        # weighted sum, no per-BS normalization needed.
+        tot = jnp.sum(w)
+
+        def leaf_flat(x):
+            xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.sum(xw, axis=0) / jnp.maximum(tot, 1e-12)
+
+        return jax.tree_util.tree_map(leaf_flat, stacked)
+
+    n_occ = jnp.maximum(jnp.sum(occupied.astype(jnp.float32)), 1.0)
+
+    def leaf(x):
+        xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1))
+        per_bs = jax.ops.segment_sum(xw, assoc, num_segments=n_bs)  # (M, ...)
+        per_bs = per_bs / safe_w.reshape((-1,) + (1,) * (x.ndim - 1))  # Eq. 4
+        mask = occupied.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(jnp.where(mask, per_bs, 0.0), axis=0) / n_occ  # Eq. 5
+
+    return jax.tree_util.tree_map(leaf, stacked)
+
+
 def fedavg_flat_kernel(models: Sequence, data_sizes):
     """Eq. 3 through the Pallas fedavg_reduce kernel (flat param streaming)."""
     from repro.kernels import ops as kops

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 
@@ -37,28 +38,73 @@ class LatencyParams:
     b_max: float = 1.0
 
 
+def twin_counts(assoc, n_bs: int) -> jnp.ndarray:
+    """K_i: number of twins associated to each BS, (M,). O(N+M) memory."""
+    return jax.ops.segment_sum(jnp.ones_like(assoc, jnp.float32), assoc,
+                               num_segments=n_bs)
+
+
+def bs_sum(values, assoc, n_bs: int) -> jnp.ndarray:
+    """sum of per-twin ``values`` grouped by BS, (M,). The scatter-add
+    replacement for the dense ``jnp.eye(M)[assoc]`` one-hot reduction —
+    O(N+M) memory instead of O(N*M), feasible at N=10^5-10^6 twins."""
+    return jax.ops.segment_sum(jnp.asarray(values, jnp.float32), assoc,
+                               num_segments=n_bs)
+
+
 def t_cmp(params: LatencyParams, assoc, b, data_sizes, freqs) -> jnp.ndarray:
     """Eq. 12 per BS. assoc: (N,) twin->BS index; b: (N,) batch fractions;
     data_sizes: (N,) samples; freqs: (M,) Hz. Returns (M,)."""
-    M = freqs.shape[0]
-    onehot = jnp.eye(M)[assoc]  # (N, M)
-    work = jnp.sum(onehot * (b * data_sizes)[:, None], axis=0)  # samples per BS
+    work = bs_sum(b * data_sizes, assoc, freqs.shape[0])  # samples per BS
     return work * params.cycles_per_sample / freqs
 
 
 def t_local_agg(params: LatencyParams, assoc, freqs) -> jnp.ndarray:
     """Eq. 14 (kept for completeness; the paper neglects it in Eq. 17)."""
-    M = freqs.shape[0]
-    k_i = jnp.sum(jnp.eye(M)[assoc], axis=0)  # twins per BS
+    k_i = twin_counts(assoc, freqs.shape[0])
     bytes_ = params.model_size_bits / 8.0
     return k_i * bytes_ * params.cycles_per_agg_byte / freqs
 
 
 def t_broadcast(params: LatencyParams, assoc, uplink, n_bs: int) -> jnp.ndarray:
     """Eq. 15: xi * log2(M) * K_i * |w_g| / R_i^U per BS."""
+    k_i = twin_counts(assoc, n_bs)
+    return (params.xi * jnp.log2(jnp.maximum(n_bs, 2))
+            * k_i * params.model_size_bits / jnp.maximum(uplink, 1.0))
+
+
+# -- dense one-hot references (the seed implementation) -----------------------
+# Kept as the numerical oracle for the segment-sum paths above: O(N*M) memory,
+# usable only at small N. tests/test_scale.py checks equivalence.
+
+
+def t_cmp_onehot(params: LatencyParams, assoc, b, data_sizes,
+                 freqs) -> jnp.ndarray:
+    onehot = jnp.eye(freqs.shape[0])[assoc]  # (N, M)
+    work = jnp.sum(onehot * (b * data_sizes)[:, None], axis=0)
+    return work * params.cycles_per_sample / freqs
+
+
+def t_local_agg_onehot(params: LatencyParams, assoc, freqs) -> jnp.ndarray:
+    k_i = jnp.sum(jnp.eye(freqs.shape[0])[assoc], axis=0)
+    bytes_ = params.model_size_bits / 8.0
+    return k_i * bytes_ * params.cycles_per_agg_byte / freqs
+
+
+def t_broadcast_onehot(params: LatencyParams, assoc, uplink,
+                       n_bs: int) -> jnp.ndarray:
     k_i = jnp.sum(jnp.eye(n_bs)[assoc], axis=0)
     return (params.xi * jnp.log2(jnp.maximum(n_bs, 2))
             * k_i * params.model_size_bits / jnp.maximum(uplink, 1.0))
+
+
+def round_time_onehot(params: LatencyParams, assoc, b, data_sizes, freqs,
+                      uplink, downlink) -> jnp.ndarray:
+    """Eq. 17 via the dense one-hot reductions (reference path)."""
+    cmp_ = t_cmp_onehot(params, assoc, b, data_sizes, freqs)
+    bc = t_broadcast_onehot(params, assoc, uplink, freqs.shape[0])
+    bv = t_block_validation(params, downlink, freqs)
+    return jnp.max(cmp_) + jnp.max(bc) + bv
 
 
 def t_block_validation(params: LatencyParams, downlink, freqs) -> jnp.ndarray:

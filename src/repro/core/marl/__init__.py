@@ -1,4 +1,6 @@
 from repro.core.marl.ddpg import DDPGConfig, MADDPGState, act, maddpg_init, maddpg_update
-from repro.core.marl.env import EnvConfig, EnvState, env_reset, env_step, observe, decode_actions
+from repro.core.marl.env import (EnvConfig, EnvState, compare_with_baselines,
+                                 decode_actions, env_reset, env_step, observe)
 from repro.core.marl.ou_noise import ou_init, ou_step
 from repro.core.marl.replay import Replay, replay_add, replay_init, replay_sample
+from repro.core.marl.train import TrainConfig, TrainState, train, train_host_loop, train_init, train_step

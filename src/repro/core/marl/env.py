@@ -71,10 +71,19 @@ class EnvState(NamedTuple):
     t: jnp.ndarray           # step counter
 
 
+def bs_frequencies(cfg: EnvConfig) -> jnp.ndarray:
+    """Nominal BS CPU frequencies (Hz), shape (n_bs,). The frequency table
+    is cycled when ``n_bs`` exceeds its length (the seed silently truncated
+    via ``bs_freqs_ghz[:n_bs]``, which broke any n_bs > 5 scenario)."""
+    table = jnp.asarray(cfg.bs_freqs_ghz, jnp.float32)
+    idx = jnp.arange(cfg.n_bs) % table.shape[0]
+    return table[idx] * 1e9
+
+
 def observe(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
     """Flatten + normalize the system state (blockchain-shared, so every
     agent observes the global state — paper Section IV-A)."""
-    k_counts = jnp.sum(jnp.eye(cfg.n_bs)[st.assoc], axis=0)
+    k_counts = latency.twin_counts(st.assoc, cfg.n_bs)
     return jnp.concatenate([
         st.freqs / 3.6e9,
         k_counts / cfg.n_twins,
@@ -85,7 +94,7 @@ def observe(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
 
 def env_reset(cfg: EnvConfig, key) -> EnvState:
     ks = jax.random.split(key, 5)
-    freqs = jnp.asarray(cfg.bs_freqs_ghz[: cfg.n_bs]) * 1e9
+    freqs = bs_frequencies(cfg)
     data = jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
                               maxval=cfg.data_max)
     return EnvState(
@@ -111,6 +120,32 @@ def decode_actions(cfg: EnvConfig, actions: jnp.ndarray):
     # softmax over the BS axis -> each sub-channel's time shares sum to 1 (18c)
     tau = assoc_mod.project_bandwidth(tau_logits * 4.0)  # (M, C)
     return assoc, b, tau
+
+
+def compare_with_baselines(cfg: EnvConfig, st: EnvState, actions,
+                           n_random: int = 8, key=None) -> dict:
+    """Eq. 17 round time of the decoded joint ``actions`` vs the paper's
+    average/random association baselines, all on the frozen state ``st``
+    (the endgame comparison of examples/marl_allocation.py and
+    benchmarks/bench_scale.py). Returns scalars plus the decoded assoc."""
+    assoc_p, b_p, tau_p = decode_actions(cfg, actions)
+    up_p = comms.uplink_rate(cfg.wl, tau_p, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up_u = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    b_mid = jnp.full((cfg.n_twins,), 0.5)
+    rt = lambda assoc, b, up: latency.round_time(
+        cfg.lat, assoc, b, st.data_sizes, st.freqs, up, down)
+    t_marl = rt(assoc_p, b_p, up_p)
+    t_avg = rt(assoc_mod.average_association(cfg.n_twins, cfg.n_bs), b_mid,
+               up_u)
+    key = jax.random.PRNGKey(0) if key is None else key
+    t_rnd = jnp.mean(jnp.stack([
+        rt(assoc_mod.random_association(jax.random.fold_in(key, i),
+                                        cfg.n_twins, cfg.n_bs), b_mid, up_u)
+        for i in range(n_random)]))
+    return {"marl": t_marl, "average": t_avg, "random": t_rnd,
+            "assoc": assoc_p}
 
 
 def env_step(cfg: EnvConfig, st: EnvState, actions: jnp.ndarray, key):

@@ -1,0 +1,129 @@
+"""Vmapped multi-scenario batch runner.
+
+The seed evaluated exactly one network configuration at a time (and silently
+truncated the 5-entry BS frequency table for n_bs > 5). This module sweeps a
+*batch* of scenarios — each a (channel seed, twin data population, data
+distribution skew) triple — through the latency/association stack in ONE
+jitted, vmapped call, so baseline comparisons and policy evaluations scale to
+hundreds of scenarios per dispatch.
+
+A scenario's twin data sizes are drawn as
+    D_j = data_min + (data_max - data_min) * U^skew,   U ~ Uniform(0, 1)
+so ``skew=1`` is the paper's uniform population and larger skews give the
+heavy-tailed (few data-rich twins) populations studied in follow-up work.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import association as assoc_mod
+from repro.core import comms, latency
+from repro.core.marl import env as env_mod
+from repro.core.marl.env import EnvConfig
+
+
+class ScenarioBatch(NamedTuple):
+    """Per-scenario parameters; every field has leading axis (S,)."""
+    key: jnp.ndarray       # (S, 2) uint32 — channel/data seed per scenario
+    data_min: jnp.ndarray  # (S,)
+    data_max: jnp.ndarray  # (S,)
+    skew: jnp.ndarray      # (S,) >= 1; 1 == uniform population
+
+
+def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
+               data_max=(500.0, 1500.0), skew=(1.0, 4.0)) -> ScenarioBatch:
+    """Sample a scenario batch: seeds plus per-scenario population ranges."""
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return ScenarioBatch(
+        key=jax.random.split(k0, n_scenarios),
+        data_min=jax.random.uniform(k1, (n_scenarios,), minval=data_min[0],
+                                    maxval=data_min[1]),
+        data_max=jax.random.uniform(k2, (n_scenarios,), minval=data_max[0],
+                                    maxval=data_max[1]),
+        skew=jax.random.uniform(k3, (n_scenarios,), minval=skew[0],
+                                maxval=skew[1]),
+    )
+
+
+def sample_population(cfg: EnvConfig, key, data_min, data_max,
+                      skew) -> jnp.ndarray:
+    u = jax.random.uniform(key, (cfg.n_twins,))
+    return data_min + (data_max - data_min) * u ** skew
+
+
+def scenario_env(cfg: EnvConfig, key, data_min, data_max, skew):
+    """The env realization of one scenario — channel, distances, and twin
+    population all derive from ``key`` the same way for every consumer, so
+    ``run_baselines`` and ``run_policy`` on the same ScenarioBatch see
+    identical realizations (paired comparisons)."""
+    ks = jax.random.split(key, 4)
+    return env_mod.EnvState(
+        freqs=env_mod.bs_frequencies(cfg),
+        data_sizes=sample_population(cfg, ks[0], data_min, data_max, skew),
+        h_up=comms.sample_channel(cfg.wl, ks[1]),
+        h_down=comms.sample_channel(cfg.wl, ks[2]),
+        dist=comms.sample_distances(cfg.wl, ks[3]),
+        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        t=jnp.int32(0),
+    )
+
+
+def _baselines_one(cfg: EnvConfig, key, data_min, data_max, skew) -> dict:
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    b = jnp.full((cfg.n_twins,), 0.5)
+    rt = functools.partial(latency.round_time, cfg.lat, b=b,
+                           data_sizes=st.data_sizes, freqs=st.freqs,
+                           uplink=up, downlink=down)
+    k_rand = jax.random.fold_in(key, 1)
+    t_random = rt(assoc_mod.random_association(k_rand, cfg.n_twins, cfg.n_bs))
+    t_average = rt(assoc_mod.average_association(cfg.n_twins, cfg.n_bs))
+    t_greedy = rt(assoc_mod.greedy_association(cfg.lat, st.data_sizes,
+                                               st.freqs, up))
+    return {"random": t_random, "average": t_average, "greedy": t_greedy,
+            "total_data": jnp.sum(st.data_sizes)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def run_baselines(cfg: EnvConfig, batch: ScenarioBatch) -> dict:
+    """Eq. 17 round time of the random/average/greedy association policies
+    for every scenario in the batch. Returns a dict of (S,) arrays."""
+    fn = functools.partial(_baselines_one, cfg)
+    return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
+                        batch.skew)
+
+
+def _rollout_one(cfg: EnvConfig, agent, n_steps: int, key, data_min,
+                 data_max, skew) -> dict:
+    """Deterministic policy rollout on one scenario's env realization
+    (the same realization ``run_baselines`` scores — see scenario_env)."""
+    from repro.core.marl.ddpg import act
+
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+
+    def body(carry, k):
+        st, obs = carry
+        a = act(agent, obs)
+        st2, r, info = env_mod.env_step(cfg, st, a, k)
+        return (st2, env_mod.observe(cfg, st2)), info["system_time"]
+
+    keys = jax.random.split(jax.random.fold_in(key, 2), n_steps)
+    (_, _), times = jax.lax.scan(body, (st, env_mod.observe(cfg, st)), keys)
+    return {"mean_system_time": jnp.mean(times),
+            "final_system_time": times[-1]}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
+def run_policy(cfg: EnvConfig, agent, batch: ScenarioBatch,
+               n_steps: int = 10) -> dict:
+    """Evaluate one trained MADDPG policy across the whole scenario batch
+    (vmapped env rollouts, shared agent parameters)."""
+    fn = functools.partial(_rollout_one, cfg, agent, n_steps)
+    return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
+                        batch.skew)

@@ -164,9 +164,12 @@ def _trip_count(comps: Dict[str, Computation], ins: Instr,
     return max(consts) if consts else 1
 
 
-def _operand_names(ins: Instr) -> List[str]:
-    """Operand names from 'dot(%a, %b), ...' — up to the closing paren."""
-    depth, out, cur = 1, [], []
+def _operand_entries(ins: Instr) -> List[str]:
+    """Raw operand texts from 'dot(f32[64,32]{1,0} %a, ...), attrs' — up to
+    the closing paren. Commas inside shape brackets ([64,32]) or layout
+    braces ({1,0}) are NOT operand separators, so bracket/brace depth is
+    tracked alongside paren depth."""
+    depth, nest, out, cur = 1, 0, [], []
     for ch in ins.rest:
         if ch == "(":
             depth += 1
@@ -174,15 +177,25 @@ def _operand_names(ins: Instr) -> List[str]:
             depth -= 1
             if depth == 0:
                 break
-        if depth >= 1:
-            if ch == "," and depth == 1:
-                out.append("".join(cur).strip())
-                cur = []
-            else:
-                cur.append(ch)
+        elif ch in "{[":
+            nest += 1
+        elif ch in "}]":
+            nest -= 1
+        if ch == "," and depth == 1 and nest == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
     if cur:
         out.append("".join(cur).strip())
-    return [o.lstrip("%") for o in out if o]
+    return [o for o in out if o]
+
+
+def _operand_shape(comp: Computation, entry: str) -> str:
+    """Shape text of one operand: prefer the defining instruction's recorded
+    shape; fall back to the shape annotation inlined in the operand itself."""
+    name = entry.split()[-1].lstrip("%")
+    return comp.shapes.get(name) or entry
 
 
 def _dot_flops(ins: Instr, comp: Computation) -> float:
@@ -191,11 +204,10 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
         return 0.0
     result_elems = sum(_elems(dims) for _, dims in shapes)
     mc = _CONTRACT.search(ins.rest)
-    names = _operand_names(ins)
-    if not mc or not names:
+    entries = _operand_entries(ins)
+    if not mc or not entries:
         return 0.0
-    lhs_shape = comp.shapes.get(names[0], "")
-    lhs = _parse_shape(lhs_shape)
+    lhs = _parse_shape(_operand_shape(comp, entries[0]))
     if not lhs:
         return 0.0
     lhs_dims = lhs[0][1]
@@ -208,8 +220,8 @@ def _dot_flops(ins: Instr, comp: Computation) -> float:
 
 def _dot_bytes(ins: Instr, comp: Computation) -> int:
     total = _shape_bytes(ins.shape_str)
-    for nm in _operand_names(ins):
-        total += _shape_bytes(comp.shapes.get(nm, ""))
+    for entry in _operand_entries(ins):
+        total += _shape_bytes(_operand_shape(comp, entry))
     return total
 
 

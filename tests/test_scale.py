@@ -1,0 +1,192 @@
+"""Scaling-core tests: segment-sum reductions vs the dense one-hot oracle,
+large-N smoke, the stacked hierarchical aggregation, the jitted scan MARL
+trainer, and the vmapped multi-scenario runner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import association as assoc_mod
+from repro.core import hierarchy, latency, scenario
+from repro.core.marl import (DDPGConfig, TrainConfig, env_reset, env_step,
+                             observe, train)
+from repro.core.marl.env import EnvConfig, bs_frequencies
+
+KEY = jax.random.PRNGKey(0)
+LP = latency.LatencyParams()
+
+
+# ---------------------------------------------------------------------------
+# segment-sum == one-hot oracle (the tentpole refactor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 17, 1000])
+@pytest.mark.parametrize("m", [1, 5, 13])
+def test_segment_paths_match_onehot_reference(n, m):
+    ks = jax.random.split(jax.random.fold_in(KEY, n * 31 + m), 5)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+    data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+    freqs = jax.random.uniform(ks[3], (m,), minval=1e9, maxval=4e9)
+    up = jax.random.uniform(ks[4], (m,), minval=1e6, maxval=1e8)
+
+    np.testing.assert_allclose(
+        np.asarray(latency.t_cmp(LP, assoc, b, data, freqs)),
+        np.asarray(latency.t_cmp_onehot(LP, assoc, b, data, freqs)),
+        rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(latency.t_local_agg(LP, assoc, freqs)),
+        np.asarray(latency.t_local_agg_onehot(LP, assoc, freqs)),
+        rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(latency.t_broadcast(LP, assoc, up, m)),
+        np.asarray(latency.t_broadcast_onehot(LP, assoc, up, m)),
+        rtol=1e-5)
+    down = up
+    np.testing.assert_allclose(
+        float(latency.round_time(LP, assoc, b, data, freqs, up, down)),
+        float(latency.round_time_onehot(LP, assoc, b, data, freqs, up, down)),
+        rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,m", [(1, 3), (17, 5), (1000, 13)])
+def test_twin_counts_match_bincount(n, m):
+    assoc = jax.random.randint(jax.random.fold_in(KEY, n), (n,), 0, m)
+    counts = np.asarray(latency.twin_counts(assoc, m))
+    np.testing.assert_array_equal(counts,
+                                  np.bincount(np.asarray(assoc), minlength=m))
+
+
+@pytest.mark.slow
+def test_round_time_50k_twins_smoke():
+    """N=50k through the full latency stack — the dense (N, M) one-hot path
+    this replaces would materialize 50k x M intermediates per reduction."""
+    n, m = 50_000, 8
+    ks = jax.random.split(KEY, 4)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+    data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+    freqs = jnp.linspace(1e9, 4e9, m)
+    up = jnp.full((m,), 1e7)
+    down = jnp.full((m,), 1e7)
+    t = jax.jit(lambda *a: latency.round_time(LP, *a))(
+        assoc, b, data, freqs, up, down)
+    assert np.isfinite(float(t)) and float(t) > 0
+
+
+@pytest.mark.slow
+def test_env_step_50k_twins_smoke():
+    cfg = EnvConfig(n_twins=50_000, n_bs=8)
+    st = env_reset(cfg, KEY)
+    obs = observe(cfg, st)
+    assert obs.shape == (cfg.state_dim,)
+    actions = jnp.zeros((cfg.n_bs, cfg.action_dim))
+    st2, r, info = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))(
+        st, actions, KEY)
+    assert r.shape == (cfg.n_bs,)
+    assert np.isfinite(float(info["system_time"]))
+
+
+# ---------------------------------------------------------------------------
+# BS frequency table cycling (n_bs > len(table) used to truncate)
+# ---------------------------------------------------------------------------
+
+
+def test_bs_frequencies_cycle_past_table_length():
+    cfg = EnvConfig(n_twins=10, n_bs=9)
+    f = np.asarray(bs_frequencies(cfg))
+    assert f.shape == (9,)
+    table = np.asarray(cfg.bs_freqs_ghz) * 1e9
+    np.testing.assert_allclose(f, table[np.arange(9) % len(table)])
+    st = env_reset(cfg, KEY)
+    assert st.freqs.shape == (9,)
+    assert observe(cfg, st).shape == (cfg.state_dim,)
+
+
+# ---------------------------------------------------------------------------
+# stacked (segment-sum) hierarchical aggregation == host list path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("weighted", [False, True])
+def test_hierarchical_stacked_matches_host(weighted):
+    rng = np.random.RandomState(3)
+    n, n_bs = 11, 4
+    models = [{"w": jnp.asarray(rng.randn(3, 2).astype(np.float32)),
+               "b": jnp.asarray(rng.randn(5).astype(np.float32))}
+              for _ in range(n)]
+    sizes = rng.uniform(1, 10, n).astype(np.float32)
+    assoc = rng.randint(0, n_bs, n)  # some BSs may be empty
+    host = hierarchy.hierarchical_fedavg(models, sizes, assoc, n_bs,
+                                         weighted_global=weighted)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+    out = hierarchy.hierarchical_fedavg_stacked(stacked, sizes, assoc, n_bs,
+                                                weighted_global=weighted)
+    for k in host:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(host[k]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_hierarchical_stacked_is_jittable_at_scale():
+    n, n_bs = 20_000, 16
+    ks = jax.random.split(KEY, 3)
+    stacked = {"w": jax.random.normal(ks[0], (n, 32))}
+    sizes = jax.random.uniform(ks[1], (n,), minval=1, maxval=10)
+    assoc = jax.random.randint(ks[2], (n,), 0, n_bs)
+    fn = jax.jit(lambda s, w, a: hierarchy.hierarchical_fedavg_stacked(
+        s, w, a, n_bs))
+    out = fn(stacked, sizes, assoc)
+    assert out["w"].shape == (32,)
+    assert np.isfinite(np.asarray(out["w"])).all()
+
+
+# ---------------------------------------------------------------------------
+# jitted lax.scan MARL trainer
+# ---------------------------------------------------------------------------
+
+
+def test_scan_trainer_runs_and_learns_shapes():
+    cfg = EnvConfig(n_twins=8, n_bs=2, bs_freqs_ghz=(3.6, 1.2))
+    dcfg = DDPGConfig(batch_size=16)
+    tcfg = TrainConfig(steps=40, warmup=10, replay_capacity=128)
+    ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    for k in ("system_time", "reward", "critic_loss", "actor_loss"):
+        assert trace[k].shape == (tcfg.steps,), k
+        assert np.isfinite(np.asarray(trace[k])).all(), k
+    assert bool((trace["reward"] < 0).all())  # reward = -latency
+    # warmup steps report zero losses, post-warmup steps train
+    assert float(jnp.abs(trace["critic_loss"][: tcfg.warmup]).max()) == 0.0
+    assert float(jnp.abs(trace["critic_loss"][tcfg.warmup:]).max()) > 0.0
+    assert int(ts.buf.size) == tcfg.steps
+    assert int(ts.env.t) == tcfg.steps
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-scenario runner
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_batch_baselines_shapes_and_order():
+    cfg = EnvConfig(n_twins=40, n_bs=7)  # > 5 BSs exercises freq cycling
+    batch = scenario.make_batch(KEY, 6)
+    out = scenario.run_baselines(cfg, batch)
+    for k in ("random", "average", "greedy"):
+        assert out[k].shape == (6,)
+        assert np.isfinite(np.asarray(out[k])).all()
+        assert bool((out[k] > 0).all())
+    # greedy should not lose to random in expectation over scenarios
+    assert float(out["greedy"].mean()) <= float(out["random"].mean()) + 1e-6
+
+
+def test_scenario_policy_rollout():
+    from repro.core.marl import maddpg_init
+
+    cfg = EnvConfig(n_twins=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6))
+    agent = maddpg_init(DDPGConfig(), KEY, cfg.n_bs, cfg.state_dim,
+                        cfg.action_dim)
+    batch = scenario.make_batch(jax.random.fold_in(KEY, 1), 4)
+    out = scenario.run_policy(cfg, agent, batch, n_steps=5)
+    assert out["mean_system_time"].shape == (4,)
+    assert np.isfinite(np.asarray(out["mean_system_time"])).all()
