@@ -12,6 +12,7 @@ import numpy as np
 
 from benchmarks.common import Timer, save_result
 from repro.kernels import ref
+from repro.kernels.segment_reduce import segment_reduce
 from repro.models.layers import attention_chunked, attention_reference
 
 
@@ -51,13 +52,28 @@ def main(reduced: bool = True):
         ssd = jax.jit(lambda *a: ref.ssd_scan_ref(*a, chunk=64))
         t_s = time_call(ssd, x, dt, A, Bm, Cm)
 
+        # segment-reduce parity at a bench shape: the Pallas kernel body
+        # (forced through the interpreter) vs the dense one-hot oracle
+        n_sr, m_sr = (4096, 8) if reduced else (16384, 16)
+        kr = jax.random.split(key, 2)
+        assoc = jax.random.randint(kr[0], (n_sr,), 0, m_sr)
+        vals = jax.random.uniform(kr[1], (n_sr,), minval=-1.0, maxval=1.0)
+        sr_err = float(jnp.max(jnp.abs(
+            segment_reduce(vals, assoc, m_sr, backend="pallas",
+                           interpret=True)
+            - segment_reduce(vals, assoc, m_sr, backend="onehot"))))
+
     out = {"attn_chunked_ms": t_c * 1e3, "attn_naive_ms": t_n * 1e3,
-           "attn_err": err, "ssd_ms": t_s * 1e3, "seq": S}
+           "attn_err": err, "ssd_ms": t_s * 1e3, "seq": S,
+           "segment_reduce_pallas_err": sr_err,
+           "segment_reduce_shape": [n_sr, m_sr]}
     save_result("kernels", out)
     print(f"kernels: chunked-attn {t_c*1e3:.1f}ms vs naive {t_n*1e3:.1f}ms "
-          f"(err {err:.1e}); ssd {t_s*1e3:.1f}ms @S={S}")
+          f"(err {err:.1e}); ssd {t_s*1e3:.1f}ms @S={S}; "
+          f"segment_reduce pallas err {sr_err:.1e} @N={n_sr}")
     return {"name": "kernels", "us_per_call": t_c * 1e6,
-            "derived": f"attn_err/{err:.1e}|ssd_ms/{t_s*1e3:.1f}"}
+            "derived": f"attn_err/{err:.1e}|ssd_ms/{t_s*1e3:.1f}"
+                       f"|segred_err/{sr_err:.1e}"}
 
 
 if __name__ == "__main__":

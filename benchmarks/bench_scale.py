@@ -1,13 +1,25 @@
-"""Scale benchmarks for the segment-sum core and the jitted scan trainer.
+"""Scale benchmarks: the segment-reduce backend sweep, the latency core at
+large N, and the jitted scan trainer.
 
-Two measurements:
-  * latency core — jitted Eq. 17 ``round_time`` at large N via the
-    segment-sum reductions, against the dense one-hot reference at the
-    largest N the O(N*M) path comfortably fits;
+Three measurements:
+  * segment-reduce backend sweep — us/call of every backend of
+    ``repro.kernels.segment_reduce`` (onehot / sort / segment_sum /
+    pallas-tiled / auto) over N x M, the table the auto-dispatch
+    heuristics (``resolve_backend``) are calibrated against. This is the
+    measured form of the ROADMAP observation that scatter-add loses to the
+    dense one-hot below N~10^4 on XLA-CPU;
+  * latency core — jitted Eq. 17 ``round_time`` at large N through the
+    dispatch, against the dense one-hot reference at the largest N the
+    O(N*M) path comfortably fits;
   * MARL training — steps/sec of the fused ``lax.scan``
     rollout-and-update trainer (repro.core.marl.train) vs the host Python
     loop the seed used (examples/marl_allocation.py style), same env and
     update schedule. Acceptance: scan >= 10x loop.
+
+``python -m benchmarks.bench_scale --smoke`` runs a seconds-scale CI gate:
+tiny backend sweep + parity of every backend against the one-hot oracle,
+exiting nonzero on mismatch — kernel regressions fail fast without waiting
+for the full bench.
 """
 from __future__ import annotations
 
@@ -21,8 +33,55 @@ from repro.core import latency
 from repro.core.marl import (DDPGConfig, TrainConfig, act, train,
                              train_host_loop)
 from repro.core.marl.env import EnvConfig
+from repro.kernels.segment_reduce import resolve_backend, segment_reduce
 
 LP = latency.LatencyParams()
+
+SWEEP_BACKENDS = ("onehot", "sort", "segment_sum", "pallas", "auto")
+
+
+def _time_segment_reduce(n: int, m: int, backend: str,
+                         iters: int = 20) -> float:
+    """us/call of one (N, M, backend) cell, jitted, excluding compile."""
+    ks = jax.random.split(jax.random.PRNGKey(n * 7 + m), 2)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    vals = jax.random.uniform(ks[1], (n,))
+    fn = jax.jit(lambda v, a: segment_reduce(v, a, m, backend=backend))
+    fn(vals, assoc).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(vals, assoc)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def sweep_segment_reduce(ns, m: int = 8, iters: int = 20) -> dict:
+    """The backend-sweep table: {backend: {str(N): us}}. The dense one-hot
+    row is skipped once its (N, M) mask would exceed ~256 MB."""
+    table = {}
+    for be in SWEEP_BACKENDS:
+        row = {}
+        for n in ns:
+            if be == "onehot" and n * m * 4 > 256 * 2**20:
+                continue
+            row[str(n)] = _time_segment_reduce(n, m, be, iters=iters)
+        table[be] = row
+    return table
+
+
+def _print_sweep(table: dict, m: int) -> None:
+    ns = sorted({int(k) for row in table.values() for k in row}, key=int)
+    print(f"scale: segment_reduce us/call (M={m}, "
+          f"platform={jax.default_backend()})")
+    hdr = "  backend      " + "".join(f"{f'N=%.0e' % n:>12}" for n in ns)
+    print(hdr)
+    for be, row in table.items():
+        auto = " <- auto" if be == "auto" else ""
+        cells = "".join(
+            f"{row.get(str(n), float('nan')):>12.0f}" for n in ns)
+        picks = ("" if be != "auto" else "  [" + ",".join(
+            resolve_backend(n, m) for n in ns) + "]")
+        print(f"  {be:<13}{cells}{picks}{auto}")
 
 
 def _time_round_time(n: int, m: int, fn, iters: int = 20) -> float:
@@ -80,9 +139,33 @@ def _learning_check(cfg: EnvConfig, dcfg: DDPGConfig, steps: int) -> dict:
             "late_mean": float(jnp.mean(trace["system_time"][-20:]))}
 
 
+def smoke() -> None:
+    """CI gate: tiny sweep through every backend + oracle parity. Raises
+    (and exits nonzero) on any backend disagreeing with the dense oracle."""
+    import numpy as np
+
+    m = 7
+    for n in (63, 1024, 4097):
+        ks = jax.random.split(jax.random.PRNGKey(n), 2)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        vals = jax.random.uniform(ks[1], (n,), minval=-1.0, maxval=1.0)
+        ref = np.asarray(segment_reduce(vals, assoc, m, backend="onehot"))
+        for be in ("sort", "segment_sum", "pallas", "auto"):
+            out = np.asarray(segment_reduce(vals, assoc, m, backend=be))
+            np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-5,
+                                       err_msg=f"backend={be} N={n}")
+    table = sweep_segment_reduce((1_000, 10_000), m=8, iters=3)
+    _print_sweep(table, m=8)
+    print("scale --smoke: all segment_reduce backends match the oracle")
+
+
 def main(reduced: bool = True):
     with Timer() as t:
         m = 8
+        sweep_ns = ((1_000, 10_000, 100_000) if reduced else
+                    (1_000, 10_000, 100_000, 1_000_000))
+        sweep = sweep_segment_reduce(sweep_ns, m=m,
+                                     iters=20 if reduced else 10)
         n_seg = 100_000 if reduced else 1_000_000
         n_ref = 10_000
         us_seg = _time_round_time(n_seg, m, latency.round_time)
@@ -108,6 +191,8 @@ def main(reduced: bool = True):
         learn = _learning_check(cfg, dcfg_big, 120 if reduced else 200)
 
     out = {
+        "segment_reduce_sweep_us": sweep,
+        "segment_reduce_sweep_m": m,
         "round_time_segment_us": {str(n_seg): us_seg, str(n_ref): us_seg_ref_n},
         "round_time_onehot_us": {str(n_ref): us_onehot},
         "marl_example_scale": {"loop_sps": loop_big, "scan_sps": scan_big,
@@ -117,6 +202,7 @@ def main(reduced: bool = True):
         "learning_check": learn,
     }
     save_result("scale", out)
+    _print_sweep(sweep, m=m)
     print(f"scale: round_time N={n_seg} segment {us_seg:.0f}us | "
           f"N={n_ref} segment {us_seg_ref_n:.0f}us vs onehot {us_onehot:.0f}us")
     print(f"scale: MARL 256x256/b64  scan {scan_big:.0f} vs loop "
@@ -136,4 +222,15 @@ def main(reduced: bool = True):
 
 
 if __name__ == "__main__":
-    main(reduced=False)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale backend parity + mini-sweep CI gate")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI-scale run instead of the full N=10^6 sweep")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        main(reduced=args.reduced)

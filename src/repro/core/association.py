@@ -17,20 +17,55 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import latency as lat
+from repro.kernels.segment_reduce import segment_count, segment_reduce
 
 
 def random_association(key, n_twins: int, n_bs: int) -> jnp.ndarray:
+    """The paper's random baseline: assoc (N,) int32 ~ Uniform{0..M-1}."""
     return jax.random.randint(key, (n_twins,), 0, n_bs)
 
 
 def average_association(n_twins: int, n_bs: int) -> jnp.ndarray:
+    """The paper's average baseline: round-robin assoc (N,) int32,
+    twin j -> BS j mod M (equal K_i up to one)."""
     return jnp.arange(n_twins) % n_bs
+
+
+def bs_loads(assoc, data_sizes, n_bs: int, *, backend: str = "auto") -> dict:
+    """Per-BS association summary through the segment-reduce dispatch.
+
+    Args:
+        assoc: (N,) int twin->BS map.
+        data_sizes: (N,) samples per twin.
+        n_bs: M, static BS count.
+        backend: segment-reduction backend (see repro.kernels.segment_reduce).
+
+    Returns:
+        dict with ``counts`` (M,) twins per BS, ``loads`` (M,) total samples
+        per BS, and ``imbalance`` (scalar) max/mean load ratio — the
+        load-balance figure of merit the baselines are compared on.
+    """
+    counts = segment_count(assoc, n_bs, backend=backend)
+    loads = segment_reduce(jnp.asarray(data_sizes, jnp.float32), assoc, n_bs,
+                           backend=backend)
+    mean = jnp.maximum(jnp.mean(loads), 1e-12)
+    return {"counts": counts, "loads": loads,
+            "imbalance": jnp.max(loads) / mean}
 
 
 def greedy_association(params: lat.LatencyParams, data_sizes, freqs,
                        uplink) -> jnp.ndarray:
     """Assign twins (largest first) to the BS with the least accumulated
-    estimated time (compute + upload share)."""
+    estimated time (compute + upload share).
+
+    Args:
+        data_sizes: (N,) samples per twin.
+        freqs: (M,) BS CPU frequencies, Hz.
+        uplink: (M,) uplink rates, bit/s.
+
+    Returns:
+        assoc (N,) int32 in [0, M).
+    """
     data_sizes = jnp.asarray(data_sizes, jnp.float32)
     freqs = jnp.asarray(freqs, jnp.float32)
     uplink = jnp.asarray(uplink, jnp.float32)
@@ -53,25 +88,31 @@ def greedy_association(params: lat.LatencyParams, data_sizes, freqs,
 
 
 def assoc_from_scores(scores: jnp.ndarray) -> jnp.ndarray:
-    """MARL competitive assignment: scores (M, N) -> twin n goes to
-    argmax_i scores[i, n]. Satisfies (18b) exactly."""
+    """MARL competitive assignment: scores (M, N) -> assoc (N,) int32,
+    twin n goes to argmax_i scores[i, n]. Satisfies (18b) exactly."""
     return jnp.argmax(scores, axis=0).astype(jnp.int32)
 
 
 def project_batch(params: lat.LatencyParams, b_raw: jnp.ndarray) -> jnp.ndarray:
-    """(18d): map raw actor outputs (tanh in [-1,1]) into [b_min, b_max]."""
+    """(18d): map raw actor outputs (tanh in [-1,1], any shape) onto the
+    feasible batch-fraction interval [b_min, b_max], elementwise."""
     frac = (jnp.clip(b_raw, -1.0, 1.0) + 1.0) / 2.0
     return params.b_min + frac * (params.b_max - params.b_min)
 
 
 def project_bandwidth(tau_logits: jnp.ndarray) -> jnp.ndarray:
-    """(18c): per-sub-channel softmax over BSs -> columns sum to 1."""
+    """(18c): tau_logits (M, C) -> softmax over the BS axis, so every
+    sub-channel's time shares across the M BSs sum to 1."""
     return jax.nn.softmax(tau_logits, axis=0)
 
 
 def check_constraints(params: lat.LatencyParams, assoc, b, tau, n_twins: int,
                       n_bs: int) -> dict:
-    """Constraint audit used by tests and the blockchain verification gate."""
+    """Constraint audit used by tests and the blockchain verification gate.
+
+    Args: assoc (N,) int, b (N,) batch fractions, tau (M, C) bandwidth
+    shares. Returns a dict of bools keyed by constraint (18b/18c/18d).
+    """
     return {
         "18b_all_assigned": bool(
             (assoc >= 0).all() and (assoc < n_bs).all()

@@ -22,6 +22,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_reduce import segment_reduce
 from repro.utils.tree import tree_scale, tree_weighted_mean
 
 
@@ -31,12 +32,14 @@ from repro.utils.tree import tree_scale, tree_weighted_mean
 
 
 def flat_fedavg(models: Sequence, data_sizes) -> object:
-    """Eq. 3 (normalized — DESIGN.md §9.6)."""
+    """Eq. 3 (normalized — DESIGN.md §9.6): data-weighted average of a host
+    list of N model pytrees, weights ``data_sizes`` (N,)."""
     return tree_weighted_mean(models, jnp.asarray(data_sizes, jnp.float32))
 
 
 def bs_aggregate(models: Sequence, data_sizes) -> object:
-    """Eq. 4: one BS aggregates the models of the twins it hosts."""
+    """Eq. 4: one BS aggregates the models of the K_i twins it hosts (host
+    list path; see ``bs_aggregate_stacked`` for the on-device form)."""
     return tree_weighted_mean(models, jnp.asarray(data_sizes, jnp.float32))
 
 
@@ -53,7 +56,9 @@ def global_aggregate(bs_models: Sequence, bs_data: Optional[Sequence] = None,
 
 def hierarchical_fedavg(models: Sequence, data_sizes, assoc,
                         n_bs: int, *, weighted_global: bool = False) -> object:
-    """Two-tier aggregation of twin models grouped by ``assoc`` (N,)->bs."""
+    """Two-tier aggregation (Eqs. 4-5) of a host list of N twin models
+    grouped by ``assoc`` (N,) int -> BS in [0, n_bs). The small-N reference
+    path; ``hierarchical_fedavg_stacked`` is the jit-safe O(N+M) one."""
     import numpy as np
 
     assoc = np.asarray(assoc)
@@ -70,21 +75,52 @@ def hierarchical_fedavg(models: Sequence, data_sizes, assoc,
                             weighted_global=weighted_global)
 
 
-def hierarchical_fedavg_stacked(stacked, data_sizes, assoc, n_bs: int, *,
-                                weighted_global: bool = False) -> object:
-    """Two-tier aggregation (Eqs. 4-5) over *stacked* twin models.
+def bs_aggregate_stacked(stacked, data_sizes, assoc, n_bs: int, *,
+                         backend: str = "auto") -> tuple:
+    """Eq. 4 for *stacked* twin models, entirely on device.
 
-    ``stacked`` is a pytree whose leaves carry a leading twin axis (N, ...);
-    grouping uses segment-sum scatter reductions, so memory is O(N+M) and the
-    whole thing is jit/vmap-safe — the scalable replacement for the host-side
-    list-of-pytrees ``hierarchical_fedavg``. Empty BSs are excluded from the
-    Eq. 5 outer mean, matching the host path.
+    Args:
+        stacked: pytree whose leaves carry a leading twin axis (N, ...).
+        data_sizes: (N,) per-twin data weights D_j.
+        assoc: (N,) int twin->BS map in [0, n_bs).
+        n_bs: M, static BS count.
+        backend: segment-reduction backend (see repro.kernels.segment_reduce).
+
+    Returns:
+        (per_bs, bs_weights): ``per_bs`` mirrors ``stacked`` with leading
+        axis M — BS i's row is its data-weighted model average (zeros for
+        empty BSs); ``bs_weights`` is (M,) total data per BS, so
+        ``bs_weights[i] > 0`` marks occupied BSs. jit/vmap-safe; this is
+        the no-host-round-trip path the FL server aggregates through.
     """
     w = jnp.asarray(data_sizes, jnp.float32)
     assoc = jnp.asarray(assoc)
-    bs_w = jax.ops.segment_sum(w, assoc, num_segments=n_bs)  # (M,)
-    occupied = bs_w > 0.0
-    safe_w = jnp.where(occupied, bs_w, 1.0)
+    bs_w = segment_reduce(w, assoc, n_bs, backend=backend)  # (M,)
+    safe_w = jnp.where(bs_w > 0.0, bs_w, 1.0)
+
+    def leaf(x):
+        xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1))
+        per_bs = segment_reduce(xw, assoc, n_bs, backend=backend)  # (M, ...)
+        return per_bs / safe_w.reshape((-1,) + (1,) * (x.ndim - 1))
+
+    return jax.tree_util.tree_map(leaf, stacked), bs_w
+
+
+def hierarchical_fedavg_stacked(stacked, data_sizes, assoc, n_bs: int, *,
+                                weighted_global: bool = False,
+                                backend: str = "auto") -> object:
+    """Two-tier aggregation (Eqs. 4-5) over *stacked* twin models.
+
+    ``stacked`` is a pytree whose leaves carry a leading twin axis (N, ...);
+    grouping goes through the unified segment-reduce dispatch (Pallas /
+    sort / scatter-add), so memory is O(N+M) and the whole thing is
+    jit/vmap-safe — the scalable replacement for the host-side
+    list-of-pytrees ``hierarchical_fedavg``. Empty BSs are excluded from the
+    Eq. 5 outer mean, matching the host path. Returns a pytree shaped like
+    one twin model (leading N axis reduced away).
+    """
+    w = jnp.asarray(data_sizes, jnp.float32)
+    assoc = jnp.asarray(assoc)
     if weighted_global:
         # data-weighted outer mean == flat FedAvg exactly: one global
         # weighted sum, no per-BS normalization needed.
@@ -96,16 +132,16 @@ def hierarchical_fedavg_stacked(stacked, data_sizes, assoc, n_bs: int, *,
 
         return jax.tree_util.tree_map(leaf_flat, stacked)
 
+    per_bs_tree, bs_w = bs_aggregate_stacked(stacked, w, assoc, n_bs,
+                                             backend=backend)
+    occupied = bs_w > 0.0
     n_occ = jnp.maximum(jnp.sum(occupied.astype(jnp.float32)), 1.0)
 
-    def leaf(x):
-        xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1))
-        per_bs = jax.ops.segment_sum(xw, assoc, num_segments=n_bs)  # (M, ...)
-        per_bs = per_bs / safe_w.reshape((-1,) + (1,) * (x.ndim - 1))  # Eq. 4
-        mask = occupied.reshape((-1,) + (1,) * (x.ndim - 1))
+    def leaf(per_bs):
+        mask = occupied.reshape((-1,) + (1,) * (per_bs.ndim - 1))
         return jnp.sum(jnp.where(mask, per_bs, 0.0), axis=0) / n_occ  # Eq. 5
 
-    return jax.tree_util.tree_map(leaf, stacked)
+    return jax.tree_util.tree_map(leaf, per_bs_tree)
 
 
 def fedavg_flat_kernel(models: Sequence, data_sizes):

@@ -23,6 +23,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.segment_reduce import segment_count, segment_reduce
+
 
 @dataclasses.dataclass(frozen=True)
 class LatencyParams:
@@ -38,37 +40,72 @@ class LatencyParams:
     b_max: float = 1.0
 
 
-def twin_counts(assoc, n_bs: int) -> jnp.ndarray:
-    """K_i: number of twins associated to each BS, (M,). O(N+M) memory."""
-    return jax.ops.segment_sum(jnp.ones_like(assoc, jnp.float32), assoc,
-                               num_segments=n_bs)
+def twin_counts(assoc, n_bs: int, *, backend: str = "auto") -> jnp.ndarray:
+    """K_i: number of twins associated to each BS.
+
+    Args:
+        assoc: (N,) int twin->BS map, values in [0, n_bs).
+        n_bs: M, the static number of base stations.
+        backend: segment-reduction backend (see repro.kernels.segment_reduce).
+
+    Returns:
+        (M,) fp32 occupancy counts. O(N+M) memory on every backend.
+    """
+    return segment_count(assoc, n_bs, backend=backend)
 
 
-def bs_sum(values, assoc, n_bs: int) -> jnp.ndarray:
-    """sum of per-twin ``values`` grouped by BS, (M,). The scatter-add
-    replacement for the dense ``jnp.eye(M)[assoc]`` one-hot reduction —
-    O(N+M) memory instead of O(N*M), feasible at N=10^5-10^6 twins."""
-    return jax.ops.segment_sum(jnp.asarray(values, jnp.float32), assoc,
-                               num_segments=n_bs)
+def bs_sum(values, assoc, n_bs: int, *, backend: str = "auto") -> jnp.ndarray:
+    """Sum of per-twin ``values`` grouped by BS, through the unified
+    segment-reduction dispatch (Pallas / sort-based / scatter-add — the
+    replacement for the dense ``jnp.eye(M)[assoc]`` one-hot contraction:
+    O(N+M) memory instead of O(N*M), feasible at N=10^5-10^6 twins).
+
+    Args:
+        values: (N,) per-twin payload (cast to fp32).
+        assoc: (N,) int twin->BS map, values in [0, n_bs).
+        n_bs: M, the static number of base stations.
+        backend: segment-reduction backend (see repro.kernels.segment_reduce).
+
+    Returns:
+        (M,) fp32 per-BS sums.
+    """
+    return segment_reduce(jnp.asarray(values, jnp.float32), assoc, n_bs,
+                          backend=backend)
 
 
-def t_cmp(params: LatencyParams, assoc, b, data_sizes, freqs) -> jnp.ndarray:
-    """Eq. 12 per BS. assoc: (N,) twin->BS index; b: (N,) batch fractions;
-    data_sizes: (N,) samples; freqs: (M,) Hz. Returns (M,)."""
-    work = bs_sum(b * data_sizes, assoc, freqs.shape[0])  # samples per BS
+def t_cmp(params: LatencyParams, assoc, b, data_sizes, freqs, *,
+          backend: str = "auto") -> jnp.ndarray:
+    """Eq. 12: per-BS local twin-training time.
+
+    Args:
+        assoc: (N,) int twin->BS index.
+        b: (N,) batch fractions in [b_min, b_max].
+        data_sizes: (N,) samples per twin.
+        freqs: (M,) BS CPU frequencies, Hz.
+
+    Returns:
+        (M,) seconds per BS.
+    """
+    work = bs_sum(b * data_sizes, assoc, freqs.shape[0], backend=backend)
     return work * params.cycles_per_sample / freqs
 
 
-def t_local_agg(params: LatencyParams, assoc, freqs) -> jnp.ndarray:
-    """Eq. 14 (kept for completeness; the paper neglects it in Eq. 17)."""
-    k_i = twin_counts(assoc, freqs.shape[0])
+def t_local_agg(params: LatencyParams, assoc, freqs, *,
+                backend: str = "auto") -> jnp.ndarray:
+    """Eq. 14: per-BS local aggregation time, (M,) seconds (kept for
+    completeness; the paper neglects it in Eq. 17)."""
+    k_i = twin_counts(assoc, freqs.shape[0], backend=backend)
     bytes_ = params.model_size_bits / 8.0
     return k_i * bytes_ * params.cycles_per_agg_byte / freqs
 
 
-def t_broadcast(params: LatencyParams, assoc, uplink, n_bs: int) -> jnp.ndarray:
-    """Eq. 15: xi * log2(M) * K_i * |w_g| / R_i^U per BS."""
-    k_i = twin_counts(assoc, n_bs)
+def t_broadcast(params: LatencyParams, assoc, uplink, n_bs: int, *,
+                backend: str = "auto") -> jnp.ndarray:
+    """Eq. 15: xi * log2(M) * K_i * |w_g| / R_i^U per BS.
+
+    ``uplink``: (M,) achievable uplink rates, bit/s. Returns (M,) seconds.
+    """
+    k_i = twin_counts(assoc, n_bs, backend=backend)
     return (params.xi * jnp.log2(jnp.maximum(n_bs, 2))
             * k_i * params.model_size_bits / jnp.maximum(uplink, 1.0))
 
@@ -117,19 +154,28 @@ def t_block_validation(params: LatencyParams, downlink, freqs) -> jnp.ndarray:
 
 
 def round_time_per_bs(params: LatencyParams, assoc, b, data_sizes, freqs,
-                      uplink, downlink) -> jnp.ndarray:
-    """Per-BS round time T_i — the MARL per-agent cost (reward = -T_i)."""
-    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs)
-    bc = t_broadcast(params, assoc, uplink, freqs.shape[0])
+                      uplink, downlink, *,
+                      backend: str = "auto") -> jnp.ndarray:
+    """Per-BS round time T_i — the MARL per-agent cost (reward = -T_i).
+
+    Shapes: assoc/b/data_sizes (N,); freqs/uplink/downlink (M,).
+    Returns (M,) seconds.
+    """
+    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs, backend=backend)
+    bc = t_broadcast(params, assoc, uplink, freqs.shape[0], backend=backend)
     bv = t_block_validation(params, downlink, freqs)
     return cmp_ + bc + bv
 
 
 def round_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
-               downlink) -> jnp.ndarray:
-    """Eq. 17: max-composed system round time T."""
-    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs)
-    bc = t_broadcast(params, assoc, uplink, freqs.shape[0])
+               downlink, *, backend: str = "auto") -> jnp.ndarray:
+    """Eq. 17: max-composed system round time T (scalar seconds).
+
+    Shapes: assoc/b/data_sizes (N,); freqs/uplink/downlink (M,). ``backend``
+    selects the segment-reduction path for the per-BS reductions.
+    """
+    cmp_ = t_cmp(params, assoc, b, data_sizes, freqs, backend=backend)
+    bc = t_broadcast(params, assoc, uplink, freqs.shape[0], backend=backend)
     bv = t_block_validation(params, downlink, freqs)
     return jnp.max(cmp_) + jnp.max(bc) + bv
 
@@ -140,7 +186,8 @@ def global_rounds(theta_g: float) -> float:
 
 
 def total_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
-               downlink) -> jnp.ndarray:
-    """Objective of problem (18)."""
+               downlink, *, backend: str = "auto") -> jnp.ndarray:
+    """Objective of problem (18): convergence rounds x Eq. 17 round time."""
     return global_rounds(params.theta_g) * round_time(
-        params, assoc, b, data_sizes, freqs, uplink, downlink)
+        params, assoc, b, data_sizes, freqs, uplink, downlink,
+        backend=backend)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency
+from repro.kernels.segment_reduce import segment_count
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,8 +83,14 @@ def bs_frequencies(cfg: EnvConfig) -> jnp.ndarray:
 
 def observe(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
     """Flatten + normalize the system state (blockchain-shared, so every
-    agent observes the global state — paper Section IV-A)."""
-    k_counts = latency.twin_counts(st.assoc, cfg.n_bs)
+    agent observes the global state — paper Section IV-A).
+
+    Returns (state_dim,) fp32: [freqs/3.6GHz (M,), K_i/N (M,),
+    D_j/data_max (N,), h_up/2 (M*C,)]. The K_i occupancy histogram goes
+    through the segment-reduce dispatch, so observation stays O(N+M) at
+    large twin counts.
+    """
+    k_counts = segment_count(st.assoc, cfg.n_bs)
     return jnp.concatenate([
         st.freqs / 3.6e9,
         k_counts / cfg.n_twins,

@@ -49,6 +49,8 @@ class TrainState(NamedTuple):
 
 def train_init(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
                key) -> TrainState:
+    """Fresh TrainState: reset env (N twins, M BS agents), stacked-agent
+    MADDPG params, empty replay, OU noise state."""
     k_env, k_agent, k_run = jax.random.split(key, 3)
     st = env_mod.env_reset(cfg, k_env)
     return TrainState(

@@ -51,6 +51,8 @@ def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
 
 def sample_population(cfg: EnvConfig, key, data_min, data_max,
                       skew) -> jnp.ndarray:
+    """Twin data sizes D_j for one scenario, (N,) fp32: ``skew=1`` is the
+    paper's uniform population, larger skews are heavy-tailed."""
     u = jax.random.uniform(key, (cfg.n_twins,))
     return data_min + (data_max - data_min) * u ** skew
 
@@ -84,16 +86,28 @@ def _baselines_one(cfg: EnvConfig, key, data_min, data_max, skew) -> dict:
     k_rand = jax.random.fold_in(key, 1)
     t_random = rt(assoc_mod.random_association(k_rand, cfg.n_twins, cfg.n_bs))
     t_average = rt(assoc_mod.average_association(cfg.n_twins, cfg.n_bs))
-    t_greedy = rt(assoc_mod.greedy_association(cfg.lat, st.data_sizes,
-                                               st.freqs, up))
+    greedy = assoc_mod.greedy_association(cfg.lat, st.data_sizes, st.freqs,
+                                          up)
+    t_greedy = rt(greedy)
+    # per-BS load diagnostics through the segment-reduce dispatch (vmapped
+    # over the scenario batch by run_baselines)
+    load = assoc_mod.bs_loads(greedy, st.data_sizes, cfg.n_bs)
     return {"random": t_random, "average": t_average, "greedy": t_greedy,
+            "greedy_imbalance": load["imbalance"],
+            "greedy_bs_loads": load["loads"],
             "total_data": jnp.sum(st.data_sizes)}
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def run_baselines(cfg: EnvConfig, batch: ScenarioBatch) -> dict:
     """Eq. 17 round time of the random/average/greedy association policies
-    for every scenario in the batch. Returns a dict of (S,) arrays."""
+    for every scenario in the batch.
+
+    Returns a dict of (S,) arrays (plus ``greedy_bs_loads`` (S, M)): round
+    times per policy, the greedy policy's load-imbalance diagnostic, and
+    the scenario's total data. All per-BS reductions inside run through
+    the segment-reduce dispatch under vmap.
+    """
     fn = functools.partial(_baselines_one, cfg)
     return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
                         batch.skew)
@@ -123,7 +137,8 @@ def _rollout_one(cfg: EnvConfig, agent, n_steps: int, key, data_min,
 def run_policy(cfg: EnvConfig, agent, batch: ScenarioBatch,
                n_steps: int = 10) -> dict:
     """Evaluate one trained MADDPG policy across the whole scenario batch
-    (vmapped env rollouts, shared agent parameters)."""
+    (vmapped env rollouts, shared agent parameters). Returns a dict of
+    (S,) arrays: mean and final Eq. 17 system time per scenario."""
     fn = functools.partial(_rollout_one, cfg, agent, n_steps)
     return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
                         batch.skew)

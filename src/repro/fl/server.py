@@ -1,9 +1,10 @@
 """The DTWN federated system driver (paper Sections II + V).
 
 Wires together: twin shards (partition) -> per-BS local training (client) ->
-Eq. 4 BS aggregation -> blockchain verification round -> Eq. 5 MBS global
-aggregation -> latency accounting (Eqs. 12-17) -> optional MARL controller
-choosing (association, batch fractions, bandwidth).
+Eq. 4 BS aggregation (stacked client params, on-device via
+``hierarchy.bs_aggregate_stacked``) -> blockchain verification round ->
+Eq. 5 MBS global aggregation -> latency accounting (Eqs. 12-17) -> optional
+MARL controller choosing (association, batch fractions, bandwidth).
 
 ``run_round`` is the faithful one-round reproduction; the Fig. 5/6 benchmarks
 iterate it under the three association policies (proposed / random / average).
@@ -120,17 +121,27 @@ class DTWNSystem:
             twin_bs.append(int(assoc[u]))
 
         # --- Eq. 4: per-BS aggregation + blockchain transactions ---
+        # Stack the trained twin models once and group them by BS in a
+        # single device call (segment-reduce dispatch inside
+        # bs_aggregate_stacked) — no per-BS host list round-trips; the
+        # host only slices out each occupied BS's aggregate to submit it
+        # to the chain.
         bs_models, bs_sizes = [], []
-        for j in range(M):
-            members = [i for i, t in enumerate(twin_bs) if t == j]
-            if not members:
-                continue
-            agg = hierarchy.bs_aggregate([twin_models[i] for i in members],
-                                         [twin_sizes[i] for i in members])
-            hl = self.holdout_loss(agg, n=256)
-            self.chain.submit_model(j, agg, self._round, hl)
-            bs_models.append((j, agg))
-            bs_sizes.append(sum(twin_sizes[i] for i in members))
+        if twin_models:
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *twin_models)
+            per_bs_tree, bs_w = hierarchy.bs_aggregate_stacked(
+                stacked, jnp.asarray(twin_sizes, jnp.float32),
+                jnp.asarray(twin_bs, jnp.int32), M)
+            bs_w_host = np.asarray(bs_w)
+            for j in range(M):
+                if bs_w_host[j] <= 0.0:
+                    continue
+                agg = jax.tree_util.tree_map(lambda x: x[j], per_bs_tree)
+                hl = self.holdout_loss(agg, n=256)
+                self.chain.submit_model(j, agg, self._round, hl)
+                bs_models.append((j, agg))
+                bs_sizes.append(float(bs_w_host[j]))
 
         # --- DPoS verification + block production ---
         verdicts = self.chain.verify_round()

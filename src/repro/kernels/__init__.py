@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute kernels for the DTWN hot spots.
+
+``segment_reduce`` — the unified per-BS segment-reduction dispatch (Pallas /
+sort-based / scatter-add backends) that every latency and aggregation
+reduction in ``repro.core`` routes through. ``ops`` holds the jitted public
+wrappers for the Pallas kernels (flash attention, SSD scan, fedavg reduce,
+segment reduce).
+"""
+from repro.kernels.segment_reduce import (BACKENDS, resolve_backend,
+                                          segment_count, segment_reduce)
+
+__all__ = ["BACKENDS", "resolve_backend", "segment_count", "segment_reduce"]

@@ -7,20 +7,20 @@ to compile them natively.
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 
 from repro.kernels import fedavg_reduce as _fr
 from repro.kernels import flash_attention as _fa
 from repro.kernels import ssd_scan as _ssd
+# note: `from repro.kernels import segment_reduce` would grab the FUNCTION
+# re-exported by the package __init__, not the submodule — import directly.
+from repro.kernels.segment_reduce import default_interpret as _sr_interpret
+from repro.kernels.segment_reduce import segment_reduce as _sr_dispatch
 
 
 def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+    return _sr_interpret()
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -43,3 +43,12 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128):
 def fedavg_reduce(stacked, weights, *, block=65536):
     return _fr.fedavg_reduce(stacked, weights, block=block,
                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "backend"))
+def segment_reduce(values, assoc, num_segments, *, backend="auto"):
+    """Jitted standalone entry to the segment-reduction dispatch (callers
+    already inside jit should import repro.kernels.segment_reduce directly).
+    ``interpret`` is left to the dispatch: non-TPU platforms run the pallas
+    backend's XLA tiled lowering, not the interpreter."""
+    return _sr_dispatch(values, assoc, num_segments, backend=backend)

@@ -1,0 +1,309 @@
+"""Unified segment-reduction subsystem for the DTWN latency hot path.
+
+Every per-BS quantity in the paper's latency model (Eqs. 12-17) and the
+hierarchical aggregation (Eqs. 4-5) is a *segment reduction*: sum per-twin
+values grouped by the association vector ``assoc: (N,) int`` into ``M``
+base-station bins. PR 1 routed these through ``jax.ops.segment_sum``, which
+is O(N+M) memory but lowers to a scatter-add that XLA-CPU serializes —
+ROADMAP notes it loses to the dense one-hot matmul below N ~ 10^4. This
+module makes the reduction strategy a first-class, swappable backend:
+
+``"segment_sum"``
+    ``jax.ops.segment_sum`` scatter-add — the PR 1 reference path. Best on
+    CPU at large N (linear, no sort), and on GPU where scatter-add is
+    parallel.
+``"sort"``
+    Sort-based contiguous grouping: ``argsort(assoc)``, gather values into
+    segment-contiguous order, exclusive ``cumsum``, then per-segment
+    differences at the segment boundaries found with ``searchsorted``.
+    No scatter at all — every step is a sort, gather, or prefix sum.
+    In practice XLA-CPU's comparator sort dominates its runtime and it
+    loses the sweep at every N (see the measured table below); it is kept
+    for platforms with fast radix sorts and as the contiguous-reduction
+    reference the multi-tier/migration scenarios will want (segment
+    boundaries come for free once twins are sorted by BS).
+``"pallas"``
+    The tiled-accumulator kernel: the twin axis streams through VMEM in
+    ``_PALLAS_BLOCK``-sized tiles and an (M, K)-wide fp32 accumulator stays
+    resident across grid steps — per tile it builds the (tile, M)
+    membership mask and contracts it against the value tile on the MXU.
+    One pass over HBM, no serialized scatter. On TPU this compiles as a
+    native Pallas kernel; on CPU/GPU it executes as the XLA reference
+    lowering with *identical tiling* (a ``lax.scan`` over the same twin
+    tiles — measured 4-5x faster than the serialized scatter-add on
+    XLA-CPU at M=8; see the sweep). ``interpret=True`` forces the Pallas
+    interpreter on the kernel itself (used by the parity tests;
+    numerics-correct but slow).
+``"onehot"``
+    The dense ``(N, M)`` one-hot contraction the seed used: one BLAS-sized
+    matmul, the fastest CPU path while the (N, M) mask fits in cache-ish
+    memory, but O(N*M) bytes so it dies at large N*M. Kept both as the
+    numerical oracle for the parity tests and as an auto-dispatch choice
+    below ``_ONEHOT_BYTES_BUDGET``.
+
+``segment_reduce(values, assoc, M, backend="auto")`` dispatches between
+them from static information only (N, M, payload width, platform), so it is
+safe to call inside ``jit``/``vmap``/``scan`` — the choice is made at trace
+time and never introduces data-dependent control flow.
+
+Measured on XLA-CPU, M=8, fp32 (results/bench/scale.json,
+``segment_reduce_sweep_us``): onehot wins to N~10^6 (30us @ 10^3, 441us @
+10^5), the tiled pallas lowering is next (27us @ 10^3, 12.5ms @ 10^6,
+always 4-5x ahead of segment_sum's 79us @ 10^3 / 61ms @ 10^6), and the
+sort path loses everywhere because XLA-CPU's comparator sort dominates its
+runtime — it exists for platforms with fast sorts and as the
+cumsum-boundary reference.
+
+Conventions (shared by all callers in ``repro.core``):
+    ``assoc``  — (N,) integer twin->BS map, values in ``[0, M)``. Ids
+                 outside the range are dropped by every backend.
+    ``values`` — (N,) or (N, ...) per-twin payload; trailing dims are
+                 flattened to a lane axis K and restored on return.
+    returns    — (M,) or (M, ...) fp32 per-BS sums (accumulation is fp32
+                 regardless of input dtype, matching ``bs_sum`` in PR 1).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BACKENDS = ("auto", "pallas", "sort", "segment_sum", "onehot")
+
+# Auto-dispatch constants, measured on XLA-CPU (results/bench/scale.json:
+# segment_reduce_sweep_us — rerun `python -m benchmarks.bench_scale` after
+# touching any backend):
+# dense one-hot while the (N, M) fp32 mask stays under this many bytes...
+_ONEHOT_BYTES_BUDGET = 64 * 2**20
+# ...then the tiled pallas lowering while its N*M mask FLOPs stay ahead of
+# the O(N) serialized scatter — beyond this M the scatter-add wins.
+_TILED_MAX_SEGMENTS = 32
+
+# Twin-axis tile for the Pallas kernel and its XLA reference lowering:
+# 8 sublanes x 128 lanes of fp32.
+_PALLAS_BLOCK = 1024
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: native only on real TPUs, overridable
+    via REPRO_PALLAS_INTERPRET. The single source of this convention —
+    repro.kernels.ops delegates here for the other Pallas kernels."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_backend(n: int, num_segments: int, *, platform=None) -> str:
+    """Pick a concrete backend from static shape/platform information.
+
+    TPU -> the Pallas kernel (VMEM-resident accumulator, MXU contraction).
+    CPU -> dense one-hot while the (N, M) mask fits ``_ONEHOT_BYTES_BUDGET``
+    (a single BLAS matmul — the measured CPU winner at small N*M), then the
+    tiled pallas lowering while M <= ``_TILED_MAX_SEGMENTS`` (4-5x over the
+    serialized scatter at M=8), scatter-add ``segment_sum`` beyond that.
+    GPU -> one-hot under the same budget (matmul >> serial tile scan on
+    parallel hardware), scatter-add otherwise. Never picks ``sort`` —
+    XLA-CPU's comparator sort makes it a measured loss at every N (see
+    module docstring); it stays available explicitly.
+    """
+    platform = platform or jax.default_backend()
+    if platform == "tpu":
+        return "pallas"
+    if n * max(num_segments, 1) * 4 <= _ONEHOT_BYTES_BUDGET:
+        return "onehot"
+    if platform == "cpu" and num_segments <= _TILED_MAX_SEGMENTS:
+        return "pallas"
+    return "segment_sum"
+
+
+# ---------------------------------------------------------------------------
+# backends — each takes values (N, K) fp32, assoc (N,) int, returns (M, K)
+# ---------------------------------------------------------------------------
+
+
+def _seg_segment_sum(values, assoc, num_segments: int):
+    return jax.ops.segment_sum(values, assoc, num_segments=num_segments)
+
+
+def _seg_sorted(values, assoc, num_segments: int):
+    """Contiguous grouping: sort by segment id, exclusive prefix sum, then
+    difference the prefix sums at segment boundaries. All gathers — no
+    scatter for XLA-CPU to serialize."""
+    order = jnp.argsort(assoc)
+    sv = jnp.take(values, order, axis=0)
+    sa = jnp.take(assoc, order)
+    csum = jnp.concatenate(
+        [jnp.zeros_like(sv[:1]), jnp.cumsum(sv, axis=0)], axis=0)  # (N+1, K)
+    # bounds[m] = first sorted position with id >= m; bounds[M] ends the last
+    # in-range segment, so ids outside [0, M) fall off either end and drop.
+    bounds = jnp.searchsorted(sa, jnp.arange(num_segments + 1), side="left")
+    return jnp.take(csum, bounds[1:], axis=0) - jnp.take(csum, bounds[:-1],
+                                                         axis=0)
+
+
+def _seg_onehot(values, assoc, num_segments: int):
+    """Dense (N, M) one-hot contraction — the seed implementation and the
+    parity oracle. O(N*M) memory; do not use at large N."""
+    onehot = (assoc[:, None] == jnp.arange(num_segments)[None, :])
+    return jnp.tensordot(onehot.astype(values.dtype), values,
+                         axes=[[0], [0]])
+
+
+def _seg_pallas_kernel(a_ref, v_ref, o_ref, *, num_segments: int):
+    """Grid step i reduces one twin tile into the resident accumulator.
+
+    The output BlockSpec maps every grid step to the same (M, K) block, so
+    it stays in VMEM across the sequential grid and accumulates — the
+    standard matmul-k-loop pattern, with the twin axis as the contraction.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]                                    # (block,)
+    v = v_ref[...].astype(jnp.float32)                # (block, K)
+    block = a.shape[0]
+    seg_ids = jax.lax.broadcasted_iota(jnp.int32, (block, num_segments), 1)
+    mask = (a[:, None] == seg_ids).astype(jnp.float32)  # (block, M)
+    # (M, K) partial = mask^T @ v — contraction over the twin tile (MXU).
+    o_ref[...] += jax.lax.dot_general(
+        mask, v, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _seg_tiled_ref(values, assoc, num_segments: int, *,
+                   block: int = _PALLAS_BLOCK):
+    """XLA reference lowering of the Pallas kernel — the same twin tiling
+    and (M, K) accumulator, expressed as a ``lax.scan`` over tiles so the
+    compiler sees O(block*M) live memory instead of the dense (N, M) mask.
+    This is what ``backend="pallas"`` runs on non-TPU platforms."""
+    n, k = values.shape
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    ap = jnp.pad(assoc.astype(jnp.int32), (0, pad),
+                 constant_values=num_segments)
+    vp = jnp.pad(values, ((0, pad), (0, 0)))
+    nb = (n + pad) // block
+    ids = jnp.arange(num_segments)
+
+    def body(acc, tile):
+        a_t, v_t = tile
+        mask = (a_t[:, None] == ids[None, :]).astype(jnp.float32)
+        part = jax.lax.dot_general(
+            mask, v_t, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc + part, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((num_segments, k), jnp.float32),
+                          (ap.reshape(nb, block), vp.reshape(nb, block, k)))
+    return acc
+
+
+def _seg_pallas(values, assoc, num_segments: int, *, block: int = _PALLAS_BLOCK,
+                interpret=None):
+    """Tiled Pallas reduction: twins stream HBM->VMEM in ``block``-sized
+    tiles, the (M, K) accumulator never leaves VMEM. On non-TPU platforms
+    (unless ``interpret`` is explicitly set) this routes to the XLA
+    reference lowering with identical tiling — the Pallas interpreter is
+    numerics-faithful but far too slow for the hot path."""
+    if interpret is None:
+        # honor an explicit REPRO_PALLAS_INTERPRET override (forces the
+        # actual kernel body through the interpreter, as for every other
+        # Pallas kernel); otherwise non-TPU platforms run the XLA reference
+        # lowering with identical tiling.
+        if (os.environ.get("REPRO_PALLAS_INTERPRET") is None
+                and jax.default_backend() != "tpu"):
+            return _seg_tiled_ref(values, assoc, num_segments, block=block)
+        interpret = default_interpret()
+    n, k = values.shape
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    # pad ids with num_segments: matches no row of the iota, contributes 0.
+    ap = jnp.pad(assoc.astype(jnp.int32), (0, pad),
+                 constant_values=num_segments)
+    vp = jnp.pad(values, ((0, pad), (0, 0)))
+    nb = (n + pad) // block
+    return pl.pallas_call(
+        functools.partial(_seg_pallas_kernel, num_segments=num_segments),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, k), jnp.float32),
+        interpret=interpret,
+    )(ap, vp)
+
+
+_IMPLS = {
+    "segment_sum": _seg_segment_sum,
+    "sort": _seg_sorted,
+    "onehot": _seg_onehot,
+}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def segment_reduce(values, assoc, num_segments: int, *, backend: str = "auto",
+                   interpret=None) -> jnp.ndarray:
+    """Sum per-twin ``values`` grouped by BS: out[m] = sum_{j: assoc[j]==m}.
+
+    Args:
+        values: (N,) or (N, ...) per-twin payload (any real dtype).
+        assoc: (N,) integer segment ids in [0, num_segments); out-of-range
+            ids are dropped.
+        num_segments: M, the static number of output bins.
+        backend: one of ``BACKENDS``. ``"auto"`` resolves from static shape
+            and platform via :func:`resolve_backend` at trace time.
+        interpret: Pallas interpret-mode override (pallas backend only);
+            default follows ``REPRO_PALLAS_INTERPRET`` / the platform.
+
+    Returns:
+        (num_segments,) or (num_segments, ...) fp32 sums.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    values = jnp.asarray(values)
+    assoc = jnp.asarray(assoc)
+    if assoc.ndim != 1:
+        raise ValueError(f"assoc must be (N,), got shape {assoc.shape}")
+    if values.ndim == 0 or values.shape[0] != assoc.shape[0]:
+        raise ValueError(
+            f"values leading axis {values.shape} must match assoc "
+            f"{assoc.shape}")
+    n = assoc.shape[0]
+    tail = values.shape[1:]
+    if n == 0:
+        # empty twin population: all segments empty (matches what the PR 1
+        # jax.ops.segment_sum path returned; reshape(-1)/grid=(0,) would
+        # misbehave below)
+        return jnp.zeros((num_segments,) + tail, jnp.float32)
+    if backend == "auto":
+        backend = resolve_backend(n, num_segments)
+
+    flat = values.astype(jnp.float32).reshape(n, -1)  # (N, K)
+    if backend == "pallas":
+        out = _seg_pallas(flat, assoc, num_segments, interpret=interpret)
+    else:
+        out = _IMPLS[backend](flat, assoc.astype(jnp.int32), num_segments)
+    return out.reshape((num_segments,) + tail)
+
+
+def segment_count(assoc, num_segments: int, *, backend: str = "auto"
+                  ) -> jnp.ndarray:
+    """Occupancy histogram: out[m] = #{j : assoc[j] == m}, (M,) fp32.
+
+    The ``K_i`` twins-per-BS count of Eqs. 14-15, through the same dispatch.
+    """
+    return segment_reduce(jnp.ones(assoc.shape, jnp.float32), assoc,
+                          num_segments, backend=backend)

@@ -1,0 +1,221 @@
+"""Parity and dispatch tests for the unified segment-reduction subsystem
+(repro.kernels.segment_reduce): every backend against the dense one-hot
+oracle, edge cases (empty segments, M > max(assoc)+1, out-of-range ids),
+trace-time auto dispatch, and vmap through the scenario batch runner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import association as assoc_mod
+from repro.core import hierarchy, scenario
+from repro.core.marl.env import EnvConfig
+from repro.kernels.segment_reduce import (BACKENDS, resolve_backend,
+                                          segment_count, segment_reduce)
+
+KEY = jax.random.PRNGKey(0)
+
+# the non-oracle backends under test; ("pallas", True) forces the actual
+# Pallas interpreter so the kernel body itself is parity-checked on CPU
+PARITY_CASES = [("segment_sum", None), ("sort", None), ("pallas", None),
+                ("pallas", True), ("auto", None)]
+
+
+def _oracle(values, assoc, m):
+    onehot = (np.asarray(assoc)[:, None] == np.arange(m)[None, :])
+    return np.tensordot(onehot.astype(np.float64),
+                        np.asarray(values, np.float64), axes=[[0], [0]])
+
+
+# ---------------------------------------------------------------------------
+# backend parity vs the dense one-hot oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend,interpret", PARITY_CASES)
+@pytest.mark.parametrize("n,m", [(1, 1), (17, 5), (1000, 13), (1025, 3)])
+def test_backend_matches_oracle_1d(backend, interpret, n, m):
+    ks = jax.random.split(jax.random.fold_in(KEY, n * 31 + m), 2)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    vals = jax.random.uniform(ks[1], (n,), minval=-2.0, maxval=2.0)
+    out = segment_reduce(vals, assoc, m, backend=backend,
+                         interpret=interpret)
+    assert out.shape == (m,)
+    np.testing.assert_allclose(np.asarray(out), _oracle(vals, assoc, m),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend,interpret", PARITY_CASES)
+def test_backend_matches_oracle_payload_tail_dims(backend, interpret):
+    n, m = 201, 6
+    ks = jax.random.split(KEY, 2)
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    vals = jax.random.normal(ks[1], (n, 3, 4))  # trailing dims flattened
+    out = segment_reduce(vals, assoc, m, backend=backend,
+                         interpret=interpret)
+    assert out.shape == (m, 3, 4)
+    np.testing.assert_allclose(
+        np.asarray(out),
+        _oracle(vals.reshape(n, -1), assoc, m).reshape(m, 3, 4),
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend,interpret", PARITY_CASES)
+def test_empty_segments_and_m_past_max_id(backend, interpret):
+    """M larger than max(assoc)+1: the unused bins must come back as exact
+    zeros on every backend."""
+    assoc = jnp.array([0, 0, 2, 2, 2])
+    vals = jnp.array([1.0, 2.0, 5.0, 7.0, 11.0])
+    out = np.asarray(segment_reduce(vals, assoc, 6, backend=backend,
+                                    interpret=interpret))
+    np.testing.assert_allclose(out, [3.0, 0.0, 23.0, 0.0, 0.0, 0.0],
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("backend,interpret", PARITY_CASES)
+def test_out_of_range_ids_dropped(backend, interpret):
+    """Ids outside [0, M) are dropped identically by every backend."""
+    assoc = jnp.array([0, 7, -1, 1])
+    vals = jnp.array([1.0, 10.0, 100.0, 2.0])
+    out = np.asarray(segment_reduce(vals, assoc, 3, backend=backend,
+                                    interpret=interpret))
+    np.testing.assert_allclose(out, [1.0, 2.0, 0.0], atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["segment_sum", "sort", "pallas",
+                                     "onehot", "auto"])
+def test_empty_population_returns_zeros(backend):
+    """N=0 twins: every backend returns zeros(M), matching what the PR 1
+    jax.ops.segment_sum path did for an empty assoc."""
+    out = segment_reduce(jnp.zeros((0,)), jnp.zeros((0,), jnp.int32), 4,
+                         backend=backend)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros(4))
+    out2 = segment_reduce(jnp.zeros((0, 3)), jnp.zeros((0,), jnp.int32), 4,
+                          backend=backend)
+    assert out2.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(out2), np.zeros((4, 3)))
+
+
+@pytest.mark.parametrize("backend", ["segment_sum", "sort", "pallas", "auto"])
+def test_segment_count_is_histogram(backend):
+    n, m = 333, 9
+    assoc = jax.random.randint(KEY, (n,), 0, m)
+    out = np.asarray(segment_count(assoc, m, backend=backend))
+    np.testing.assert_array_equal(out,
+                                  np.bincount(np.asarray(assoc), minlength=m))
+
+
+def test_invalid_backend_and_shapes_raise():
+    with pytest.raises(ValueError, match="backend"):
+        segment_reduce(jnp.ones(3), jnp.zeros(3, jnp.int32), 2,
+                       backend="nope")
+    with pytest.raises(ValueError, match="assoc"):
+        segment_reduce(jnp.ones(3), jnp.zeros((3, 1), jnp.int32), 2)
+    with pytest.raises(ValueError, match="leading axis"):
+        segment_reduce(jnp.ones(4), jnp.zeros(3, jnp.int32), 2)
+
+
+# ---------------------------------------------------------------------------
+# dispatch: trace-time resolution, jit, vmap
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_backend_static_choices():
+    assert resolve_backend(100, 5, platform="tpu") == "pallas"
+    # small N*M: the single-matmul dense path
+    assert resolve_backend(1_000, 8, platform="cpu") == "onehot"
+    # large N, few segments: the tiled pallas lowering
+    assert resolve_backend(10_000_000, 8, platform="cpu") == "pallas"
+    # large N, many segments: scatter-add
+    assert resolve_backend(10_000_000, 512, platform="cpu") == "segment_sum"
+    for n, m, platform in [(10, 2, "cpu"), (10**7, 8, "gpu"),
+                           (10**6, 64, "tpu")]:
+        assert resolve_backend(n, m, platform=platform) in BACKENDS
+
+
+@pytest.mark.parametrize("backend", ["segment_sum", "sort", "pallas", "auto"])
+def test_jit_and_vmap_through_dispatch(backend):
+    n, m, s = 150, 4, 6
+    ks = jax.random.split(KEY, 2)
+    va = jax.random.uniform(ks[0], (s, n))
+    aa = jax.random.randint(ks[1], (s, n), 0, m)
+    fn = jax.jit(jax.vmap(
+        lambda v, a: segment_reduce(v, a, m, backend=backend)))
+    out = np.asarray(fn(va, aa))
+    assert out.shape == (s, m)
+    for i in range(s):
+        np.testing.assert_allclose(out[i], _oracle(va[i], aa[i], m),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_grad_flows_through_dispatch():
+    """The latency objective is differentiated w.r.t. batch fractions by the
+    MARL actor update — the reduction must stay differentiable in values."""
+    n, m = 64, 5
+    assoc = jax.random.randint(KEY, (n,), 0, m)
+    for backend in ("segment_sum", "sort", "pallas", "auto"):
+        g = jax.grad(lambda v: jnp.sum(
+            segment_reduce(v, assoc, m, backend=backend) ** 2))(
+                jnp.ones(n))
+        assert g.shape == (n,)
+        assert np.isfinite(np.asarray(g)).all()
+
+
+# ---------------------------------------------------------------------------
+# core callers through the dispatch layer
+# ---------------------------------------------------------------------------
+
+
+def test_bs_loads_through_dispatch():
+    n, m = 40, 5
+    assoc = assoc_mod.average_association(n, m)
+    data = jnp.ones(n) * 2.0
+    out = assoc_mod.bs_loads(assoc, data, m)
+    np.testing.assert_allclose(np.asarray(out["counts"]), 8.0)
+    np.testing.assert_allclose(np.asarray(out["loads"]), 16.0)
+    np.testing.assert_allclose(float(out["imbalance"]), 1.0, rtol=1e-6)
+
+
+def test_bs_aggregate_stacked_matches_host_lists():
+    """Eq. 4 stacked grouping == per-BS tree_weighted_mean over host lists
+    (the FL server's on-device aggregation path)."""
+    rng = np.random.RandomState(7)
+    n, n_bs = 13, 5
+    models = [{"w": jnp.asarray(rng.randn(3, 2).astype(np.float32)),
+               "b": jnp.asarray(rng.randn(4).astype(np.float32))}
+              for _ in range(n)]
+    sizes = rng.uniform(1, 9, n).astype(np.float32)
+    assoc = rng.randint(0, n_bs, n)
+    assoc[assoc == 3] = 0  # force an empty BS
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+    per_bs, bs_w = hierarchy.bs_aggregate_stacked(stacked, sizes, assoc,
+                                                  n_bs)
+    np.testing.assert_allclose(
+        np.asarray(bs_w),
+        np.bincount(assoc, weights=sizes, minlength=n_bs), rtol=1e-5)
+    for j in range(n_bs):
+        idx = np.nonzero(assoc == j)[0]
+        if idx.size == 0:
+            for leaf in jax.tree_util.tree_leaves(per_bs):
+                np.testing.assert_allclose(np.asarray(leaf[j]), 0.0,
+                                           atol=1e-6)
+            continue
+        ref = hierarchy.bs_aggregate([models[i] for i in idx], sizes[idx])
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(per_bs[k][j]),
+                                       np.asarray(ref[k]), rtol=1e-4,
+                                       atol=1e-6)
+
+
+def test_scenario_batch_vmaps_through_dispatch():
+    """The scenario runner's per-BS load diagnostics go through
+    segment_reduce under vmap over the scenario batch."""
+    cfg = EnvConfig(n_twins=30, n_bs=6)
+    batch = scenario.make_batch(KEY, 5)
+    out = scenario.run_baselines(cfg, batch)
+    assert out["greedy_imbalance"].shape == (5,)
+    assert out["greedy_bs_loads"].shape == (5, 6)
+    # loads per scenario must account for every twin's data exactly
+    np.testing.assert_allclose(np.asarray(out["greedy_bs_loads"].sum(1)),
+                               np.asarray(out["total_data"]), rtol=1e-4)
+    assert bool((out["greedy_imbalance"] >= 1.0 - 1e-5).all())

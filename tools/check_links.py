@@ -1,0 +1,70 @@
+"""CI docs gate: verify that every relative markdown link in the repo docs
+resolves to a real file, and that intra-document anchors point at an
+existing heading. External (scheme://) links are not fetched.
+
+    python tools/check_links.py [files...]   # default: README.md docs/ benchmarks/README.md
+
+Exits nonzero listing every broken link.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop punctuation, dash spaces."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug, flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {slugify(h) for h in HEADING_RE.findall(f.read())}
+
+
+def check_file(path: str) -> list:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*://", target) or target.startswith(
+                "mailto:"):
+            continue  # external
+        ref, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, ref)) if ref else path
+        if not os.path.exists(dest):
+            errors.append(f"{path}: broken link -> {target}")
+            continue
+        if anchor and dest.endswith(".md"):
+            if slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{path}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    files = argv or (["README.md", "benchmarks/README.md"]
+                     + sorted(glob.glob("docs/**/*.md", recursive=True)))
+    errors, checked = [], 0
+    for path in files:
+        if not os.path.exists(path):
+            errors.append(f"{path}: file listed for checking does not exist")
+            continue
+        checked += 1
+        errors.extend(check_file(path))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {checked} files, "
+          f"{'FAIL ' + str(len(errors)) + ' broken' if errors else 'all links resolve'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
