@@ -1,9 +1,11 @@
 """Paper Fig. 5: total system time cost per training round —
 proposed (MARL-optimized association) vs random vs average association.
 
-The MARL policy is trained online in the DTWN env (Section IV); random and
-average baselines re-sample / round-robin the association each round with
-uniform bandwidth, exactly the paper's benchmarks.
+The MARL policy is trained online in the DTWN env (Section IV) through the
+jitted scan trainer under the structured spaces API (factorized per-twin
+policy by default); random and average baselines re-sample / round-robin
+the association each round with uniform bandwidth, exactly the paper's
+benchmarks.
 """
 from __future__ import annotations
 
@@ -14,37 +16,23 @@ import numpy as np
 from benchmarks.common import Timer, save_result
 from repro.core import association as assoc_mod
 from repro.core import comms, latency
-from repro.core.marl import (DDPGConfig, act, decode_actions, env_reset,
-                             env_step, maddpg_init, maddpg_update, observe,
-                             ou_init, ou_step, replay_add, replay_init,
-                             replay_sample)
+from repro.core.marl import (DDPGConfig, TrainConfig, act, decode_actions,
+                             env_reset, env_step, observe, train)
 from repro.core.marl.env import EnvConfig
 
 
 def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
-        train_steps: int = 150, seed: int = 0) -> dict:
+        train_steps: int = 150, seed: int = 0,
+        policy: str = "factorized") -> dict:
     cfg = EnvConfig(n_twins=n_twins, n_bs=n_bs)
-    dcfg = DDPGConfig(batch_size=32)
+    dcfg = DDPGConfig(batch_size=32, policy=policy)
     key = jax.random.PRNGKey(seed)
 
     # ---- train the MARL controller (offline phase, paper Sec. IV-B) ----
-    st = env_reset(cfg, key)
-    obs = observe(cfg, st)
-    agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
-    buf = replay_init(1024, cfg.state_dim, cfg.n_bs, cfg.action_dim)
-    noise = ou_init((cfg.n_bs, cfg.action_dim))
-    step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
-    for i in range(train_steps):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        noise = ou_step(noise, k1, sigma=max(0.3 * (1 - i / train_steps), 0.02))
-        a = jnp.clip(act(agent, obs) + noise, -1, 1)
-        st, r, _ = step_jit(st, a, k2)
-        obs2 = observe(cfg, st)
-        buf = replay_add(buf, obs, a, r, obs2)
-        obs = obs2
-        if i > 48:
-            agent, _ = maddpg_update(dcfg, agent,
-                                     replay_sample(buf, k3, dcfg.batch_size))
+    tcfg = TrainConfig(steps=train_steps, warmup=min(48, train_steps // 2),
+                       replay_capacity=1024)
+    ts, _ = train(cfg, dcfg, tcfg, key)
+    agent = ts.agent
 
     # ---- evaluate per-round system time under the three policies ----
     key_eval = jax.random.PRNGKey(seed + 1)
@@ -53,13 +41,15 @@ def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
     avg_assoc = assoc_mod.average_association(cfg.n_twins, cfg.n_bs)
     uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
     b_mid = jnp.full((cfg.n_twins,), 0.5)
+    step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+    act_jit = jax.jit(lambda ag, o: act(cfg, ag, o, policy=policy))
     for rnd in range(n_rounds):
         key_eval, k1, k2 = jax.random.split(key_eval, 3)
         up_uni = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
         down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
 
         # proposed: MARL action decides assoc/b/tau
-        a = act(agent, observe(cfg, st))
+        a = act_jit(agent, observe(cfg, st))
         assoc_p, b_p, tau_p = decode_actions(cfg, a)
         up_p = comms.uplink_rate(cfg.wl, tau_p, st.h_up, st.dist)
         rows["proposed"].append(float(latency.round_time(
@@ -75,6 +65,7 @@ def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
 
     out = {
         "rounds": n_rounds,
+        "policy": policy,
         "series": rows,
         "mean": {k: float(np.mean(v)) for k, v in rows.items()},
     }

@@ -1,49 +1,65 @@
 """Paper Fig. 7: cumulative average system cost/reward during DRL training,
-for discount factors gamma in {0.5, 0.7, 0.9} (paper: gamma=0.9 best)."""
+for discount factors gamma in {0.5, 0.7, 0.9} (paper: gamma=0.9 best).
+
+Runs the host training loop under the structured spaces API: structured
+actions with OU noise of the same structure, compact replay rows
+(``compact_obs`` + ``encode_action``), episode boundaries via
+``env_soft_reset`` (the twin population stays fixed, matching the scan
+trainer's invariant)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, save_result
-from repro.core.marl import (DDPGConfig, act, env_reset, env_step,
-                             maddpg_init, maddpg_update, observe, ou_init,
-                             ou_step, replay_add, replay_init, replay_sample)
+from repro.core.marl import (DDPGConfig, act, clip_action, compact_obs,
+                             encode_action, env_reset, env_soft_reset,
+                             env_step, maddpg_init, maddpg_update, observe,
+                             ou_step, replay_add, replay_init, replay_sample,
+                             space_spec, zeros_action)
 from repro.core.marl.env import EnvConfig
 
 
 def train_curve(gamma: float, episodes: int, steps: int, cfg: EnvConfig,
-                seed: int = 0) -> list:
-    dcfg = DDPGConfig(gamma=gamma, batch_size=32)
+                seed: int = 0, policy: str = "factorized") -> list:
+    dcfg = DDPGConfig(gamma=gamma, batch_size=32, policy=policy)
+    spec = space_spec(cfg)
     key = jax.random.PRNGKey(seed)
-    agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
-    buf = replay_init(2048, cfg.state_dim, cfg.n_bs, cfg.action_dim)
+    agent = maddpg_init(cfg, dcfg, key)
+    buf = replay_init(2048, spec.compact_dim, cfg.n_bs, spec.enc_dim)
     step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+    act_jit = jax.jit(lambda ag, o: act(cfg, ag, o, policy=policy))
+    key, ke = jax.random.split(key)
+    st = env_reset(cfg, ke)
+    twin_feats = observe(cfg, st).twin_feats
     cum = []
     total = 0.0
     n = 0
     for ep in range(episodes):
         key, ke = jax.random.split(key)
-        st = env_reset(cfg, ke)
+        if ep > 0:  # fresh episode dynamics, same twin population
+            st = env_soft_reset(cfg, st, ke)
         obs = observe(cfg, st)
-        noise = ou_init((cfg.n_bs, cfg.action_dim))
+        noise = zeros_action(cfg)
         for t in range(steps):
             key, k1, k2, k3 = jax.random.split(key, 4)
             noise = ou_step(noise, k1,
                             sigma=max(0.3 * (1 - ep / max(episodes - 1, 1)),
                                       0.02))
-            a = jnp.clip(act(agent, obs) + noise, -1, 1)
+            a = clip_action(jax.tree_util.tree_map(
+                lambda x, z: x + z, act_jit(agent, obs), noise))
             st, r, _ = step_jit(st, a, k2)
             obs2 = observe(cfg, st)
-            buf = replay_add(buf, obs, a, r, obs2)
+            buf = replay_add(buf, compact_obs(obs),
+                             encode_action(cfg, a, twin_feats), r,
+                             compact_obs(obs2))
             obs = obs2
             total += float(r.mean())
             n += 1
             if int(buf.size) > 64:
-                agent, _ = maddpg_update(dcfg, agent,
-                                         replay_sample(buf, k3,
-                                                       dcfg.batch_size))
+                agent, _ = maddpg_update(
+                    cfg, dcfg, agent,
+                    replay_sample(buf, k3, dcfg.batch_size), twin_feats)
         cum.append(total / n)  # paper's R_n: cumulative average reward
     return cum
 

@@ -1,6 +1,7 @@
 """Paper Fig. 8: wall time of the optimization algorithm itself —
 per-iteration DRL training time vs test (inference-only) time, for two
-discount factors."""
+discount factors. Runs on the structured spaces API (compact replay rows,
+factorized policy)."""
 from __future__ import annotations
 
 import time
@@ -9,49 +10,62 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import Timer, save_result
-from repro.core.marl import (DDPGConfig, act, env_reset, env_step,
-                             maddpg_init, maddpg_update, observe, ou_init,
-                             ou_step, replay_add, replay_init, replay_sample)
+from repro.core.marl import (DDPGConfig, act, clip_action, compact_obs,
+                             encode_action, env_reset, env_step, maddpg_init,
+                             maddpg_update, observe, ou_step, replay_add,
+                             replay_init, replay_sample, space_spec,
+                             zeros_action)
 from repro.core.marl.env import EnvConfig
 
 
-def run(iters: int = 30, n_twins: int = 20, gammas=(0.5, 0.9)) -> dict:
+def run(iters: int = 30, n_twins: int = 20, gammas=(0.5, 0.9),
+        policy: str = "factorized") -> dict:
     cfg = EnvConfig(n_twins=n_twins, n_bs=5)
+    spec = space_spec(cfg)
     out = {"series": {}}
     for g in gammas:
-        dcfg = DDPGConfig(gamma=g, batch_size=32)
+        dcfg = DDPGConfig(gamma=g, batch_size=32, policy=policy)
         key = jax.random.PRNGKey(0)
-        agent = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
-        buf = replay_init(512, cfg.state_dim, cfg.n_bs, cfg.action_dim)
+        agent = maddpg_init(cfg, dcfg, key)
+        buf = replay_init(512, spec.compact_dim, cfg.n_bs, spec.enc_dim)
         st = env_reset(cfg, key)
         obs = observe(cfg, st)
-        noise = ou_init((cfg.n_bs, cfg.action_dim))
+        twin_feats = obs.twin_feats
+        noise = zeros_action(cfg)
         step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+        act_jit = jax.jit(lambda ag, o: act(cfg, ag, o, policy=policy))
+        add = lambda b, o, a, r, o2: replay_add(
+            b, compact_obs(o), encode_action(cfg, a, twin_feats), r,
+            compact_obs(o2))
         # warmup/fill
         for i in range(40):
             key, k1, k2 = jax.random.split(key, 3)
             noise = ou_step(noise, k1)
-            a = jnp.clip(act(agent, obs) + noise, -1, 1)
+            a = clip_action(jax.tree_util.tree_map(
+                lambda x, z: x + z, act_jit(agent, obs), noise))
             st, r, _ = step_jit(st, a, k2)
             obs2 = observe(cfg, st)
-            buf = replay_add(buf, obs, a, r, obs2)
+            buf = add(buf, obs, a, r, obs2)
             obs = obs2
-        agent, _ = maddpg_update(dcfg, agent, replay_sample(buf, key, 32))
+        agent, _ = maddpg_update(cfg, dcfg, agent,
+                                 replay_sample(buf, key, 32), twin_feats)
 
         train_t, test_t = [], []
         for i in range(iters):
             key, k1, k2, k3 = jax.random.split(key, 4)
             t0 = time.time()
-            a = jnp.clip(act(agent, obs) + ou_step(noise, k1), -1, 1)
+            a = clip_action(jax.tree_util.tree_map(
+                lambda x, z: x + z, act_jit(agent, obs), ou_step(noise, k1)))
             st, r, _ = step_jit(st, a, k2)
-            obs = observe(cfg, st)
-            buf = replay_add(buf, obs, a, r, obs)
-            agent, _ = maddpg_update(dcfg, agent,
-                                     replay_sample(buf, k3, 32))
+            obs2 = observe(cfg, st)
+            buf = add(buf, obs, a, r, obs2)
+            obs = obs2
+            agent, _ = maddpg_update(cfg, dcfg, agent,
+                                     replay_sample(buf, k3, 32), twin_feats)
             jax.block_until_ready(agent.actor)
             train_t.append(time.time() - t0)
             t0 = time.time()
-            a = act(agent, obs)
+            a = act_jit(agent, obs)
             jax.block_until_ready(a)
             test_t.append(time.time() - t0)
         out["series"][str(g)] = {

@@ -1,7 +1,7 @@
 """Scale benchmarks: the segment-reduce backend sweep, the latency core at
-large N, and the jitted scan trainer.
+large N, the jitted scan trainer, and the policy-scaling sweep.
 
-Three measurements:
+Four measurements:
   * segment-reduce backend sweep — us/call of every backend of
     ``repro.kernels.segment_reduce`` (onehot / sort / segment_sum /
     pallas-tiled / auto) over N x M, the table the auto-dispatch
@@ -14,12 +14,20 @@ Three measurements:
   * MARL training — steps/sec of the fused ``lax.scan``
     rollout-and-update trainer (repro.core.marl.train) vs the host Python
     loop the seed used (examples/marl_allocation.py style), same env and
-    update schedule. Acceptance: scan >= 10x loop.
+    update schedule. Acceptance: scan >= 10x loop;
+  * policy scaling — actor params/agent, replay row bytes, and scan-trainer
+    steps/s vs twin count N for the flat (O(N)-parameter oracle) vs
+    factorized (N-independent) policies. The flat column is capped at
+    ``_FLAT_MAX_TWINS`` (its first-layer matmul and O(N) action memory make
+    larger N infeasible — that cliff is the point of the factorized
+    redesign); skips are logged, not silent.
 
 ``python -m benchmarks.bench_scale --smoke`` runs a seconds-scale CI gate:
 tiny backend sweep + parity of every backend against the one-hot oracle,
-exiting nonzero on mismatch — kernel regressions fail fast without waiting
-for the full bench.
+plus the policy-protocol gate (flat and factorized actions decode onto the
+(18) feasible set from one shared seed; factorized parameter count is
+verified N-independent), exiting nonzero on mismatch — kernel or policy
+regressions fail fast without waiting for the full bench.
 """
 from __future__ import annotations
 
@@ -30,14 +38,19 @@ import jax.numpy as jnp
 
 from benchmarks.common import Timer, save_result
 from repro.core import latency
-from repro.core.marl import (DDPGConfig, TrainConfig, act, train,
-                             train_host_loop)
+from repro.core.marl import (DDPGConfig, TrainConfig, act, actor_param_count,
+                             policy_init, space_spec, train, train_host_loop,
+                             train_init)
 from repro.core.marl.env import EnvConfig
 from repro.kernels.segment_reduce import resolve_backend, segment_reduce
 
 LP = latency.LatencyParams()
 
 SWEEP_BACKENDS = ("onehot", "sort", "segment_sum", "pallas", "auto")
+
+# beyond this twin count the flat policy's O(N) first/last layers and O(M*N)
+# joint-action transients make the sweep cell impractically slow on CPU
+_FLAT_MAX_TWINS = 2000
 
 
 def _time_segment_reduce(n: int, m: int, backend: str,
@@ -133,10 +146,63 @@ def _learning_check(cfg: EnvConfig, dcfg: DDPGConfig, steps: int) -> dict:
 
     tcfg = TrainConfig(steps=steps, warmup=48)
     ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(0))
-    cmp_ = compare_with_baselines(cfg, ts.env, act(ts.agent, ts.obs))
+    cmp_ = compare_with_baselines(
+        cfg, ts.env, act(cfg, ts.agent, ts.obs, policy=dcfg.policy))
     return {"marl": float(cmp_["marl"]), "average": float(cmp_["average"]),
             "early_mean": float(jnp.mean(trace["system_time"][:20])),
             "late_mean": float(jnp.mean(trace["system_time"][-20:]))}
+
+
+def sweep_policy_scaling(ns=(100, 1000, 10_000), m: int = 5,
+                         steps: int = 40, warmup: int = 10) -> dict:
+    """Flat-vs-factorized scaling table:
+    {policy: {str(N): {actor_params, replay_row_bytes, scan_sps}}}.
+
+    Actor params are per agent; replay row bytes come from the live buffer
+    (``replay_row_bytes``); steps/s is the fused scan trainer end-to-end
+    (env + replay + MADDPG update). Flat cells above ``_FLAT_MAX_TWINS``
+    are skipped with a log line — the factorized rows are the ones that
+    must stay flat in N.
+    """
+    from repro.core.marl import replay_row_bytes
+
+    table = {}
+    for pol in ("flat", "factorized"):
+        row = {}
+        for n in ns:
+            if pol == "flat" and n > _FLAT_MAX_TWINS:
+                print(f"scale: policy sweep skipping flat at N={n} "
+                      f"(> _FLAT_MAX_TWINS={_FLAT_MAX_TWINS}: O(N) layers)")
+                continue
+            cfg = EnvConfig(n_twins=n, n_bs=m)
+            dcfg = DDPGConfig(policy=pol, hidden=(128, 128), batch_size=32)
+            params = actor_param_count(
+                policy_init(pol, jax.random.PRNGKey(0), cfg, dcfg.hidden))
+            tcfg = TrainConfig(steps=steps, warmup=warmup,
+                               replay_capacity=256)
+            buf = train_init(cfg, dcfg, tcfg, jax.random.PRNGKey(0)).buf
+            row[str(n)] = {
+                "actor_params": params,
+                "replay_row_bytes": replay_row_bytes(buf),
+                "scan_sps": _scan_steps_per_sec(cfg, dcfg, steps, warmup),
+            }
+        table[pol] = row
+    return table
+
+
+def _print_policy_sweep(table: dict) -> None:
+    ns = sorted({int(k) for row in table.values() for k in row})
+    print("scale: policy scaling (actor params/agent | replay row B | "
+          "scan steps/s)")
+    for pol, row in table.items():
+        cells = []
+        for n in ns:
+            c = row.get(str(n))
+            cells.append("         skipped" if c is None else
+                         f"{c['actor_params']:>9,}p/{c['replay_row_bytes']}B/"
+                         f"{c['scan_sps']:.0f}sps")
+        print(f"  {pol:<12}" + "  ".join(
+            f"N={n:<7}{c}" for n, c in zip(ns, cells)))
 
 
 def smoke() -> None:
@@ -157,6 +223,34 @@ def smoke() -> None:
     table = sweep_segment_reduce((1_000, 10_000), m=8, iters=3)
     _print_sweep(table, m=8)
     print("scale --smoke: all segment_reduce backends match the oracle")
+
+    # --- policy-protocol parity gate (flat vs factorized, shared seed) ---
+    from repro.core import association as assoc_mod
+    from repro.core.marl import (decode_actions, env_reset, maddpg_init,
+                                 observe)
+
+    cfg = EnvConfig(n_twins=48, n_bs=5)
+    key = jax.random.PRNGKey(3)
+    st = env_reset(cfg, key)
+    obs = observe(cfg, st)
+    shapes = {}
+    for pol in ("flat", "factorized"):
+        dcfg = DDPGConfig(policy=pol, hidden=(32, 32))
+        agent = maddpg_init(cfg, dcfg, key)
+        a = act(cfg, agent, obs, policy=pol)
+        assoc, b, tau = decode_actions(cfg, a)
+        shapes[pol] = (assoc.shape, b.shape, tau.shape)
+        checks = assoc_mod.check_constraints(cfg.lat, assoc, b, tau,
+                                             cfg.n_twins, cfg.n_bs)
+        assert all(checks.values()), f"policy={pol} violates {checks}"
+    assert shapes["flat"] == shapes["factorized"], shapes
+    p_small = actor_param_count(
+        policy_init("factorized", key, EnvConfig(n_twins=48), (32, 32)))
+    p_big = actor_param_count(
+        policy_init("factorized", key, EnvConfig(n_twins=4800), (32, 32)))
+    assert p_small == p_big, (p_small, p_big)
+    print(f"scale --smoke: flat/factorized decode parity ok; factorized "
+          f"actor params N-independent ({p_small:,} at N=48 and N=4800)")
 
 
 def main(reduced: bool = True):
@@ -189,6 +283,8 @@ def main(reduced: bool = True):
                                          warmup=10)
         speedup = scan_small / loop_small
         learn = _learning_check(cfg, dcfg_big, 120 if reduced else 200)
+        policy_sweep = sweep_policy_scaling((100, 1_000, 10_000),
+                                            steps=30 if reduced else 60)
 
     out = {
         "segment_reduce_sweep_us": sweep,
@@ -200,9 +296,11 @@ def main(reduced: bool = True):
         "marl_dispatch_bound": {"loop_sps": loop_small, "scan_sps": scan_small,
                                 "speedup": speedup},
         "learning_check": learn,
+        "policy_scaling": policy_sweep,
     }
     save_result("scale", out)
     _print_sweep(sweep, m=m)
+    _print_policy_sweep(policy_sweep)
     print(f"scale: round_time N={n_seg} segment {us_seg:.0f}us | "
           f"N={n_ref} segment {us_seg_ref_n:.0f}us vs onehot {us_onehot:.0f}us")
     print(f"scale: MARL 256x256/b64  scan {scan_big:.0f} vs loop "
@@ -226,11 +324,29 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale backend parity + mini-sweep CI gate")
+                    help="seconds-scale backend parity + policy gate CI run")
     ap.add_argument("--reduced", action="store_true",
                     help="CI-scale run instead of the full N=10^6 sweep")
+    ap.add_argument("--policies", action="store_true",
+                    help="run only the flat-vs-factorized scaling sweep "
+                         "(merged into results/bench/scale.json)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
+    elif args.policies:
+        import json
+        import os
+
+        from benchmarks.common import RESULTS_DIR
+
+        table = sweep_policy_scaling()
+        _print_policy_sweep(table)
+        path = os.path.join(RESULTS_DIR, "bench", "scale.json")
+        payload = {}
+        if os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+        payload["policy_scaling"] = table
+        save_result("scale", payload)
     else:
         main(reduced=args.reduced)

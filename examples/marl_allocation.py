@@ -7,14 +7,20 @@ rollout-and-update loop is fused on device and only the metrics trace comes
 back to the host. Pass --host-loop for the legacy step-by-step Python loop
 (the seed behavior; ~10-30x slower, kept for comparison/debugging).
 
+The controller policy is selectable: --policy factorized (default — shared
+per-twin scoring head, parameter count independent of the twin count, so
+--twins 10000 works) or --policy flat (the seed's O(N) monolithic MLP,
+small-N oracle).
+
     PYTHONPATH=src python examples/marl_allocation.py --steps 200
+    PYTHONPATH=src python examples/marl_allocation.py --twins 5000 --steps 300
 """
 import argparse
 
 import jax
 import numpy as np
 
-from repro.core.marl import (DDPGConfig, TrainConfig, act,
+from repro.core.marl import (DDPGConfig, TrainConfig, act, actor_param_count,
                              compare_with_baselines, observe, train,
                              train_host_loop)
 from repro.core.marl.env import EnvConfig, bs_frequencies
@@ -25,12 +31,14 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--twins", type=int, default=30)
     ap.add_argument("--bs", type=int, default=5)
+    ap.add_argument("--policy", choices=("factorized", "flat"),
+                    default="factorized")
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy un-fused Python training loop")
     args = ap.parse_args()
 
     cfg = EnvConfig(n_twins=args.twins, n_bs=args.bs)
-    dcfg = DDPGConfig()
+    dcfg = DDPGConfig(policy=args.policy)
     tcfg = TrainConfig(steps=args.steps, warmup=min(48, args.steps // 2))
     key = jax.random.PRNGKey(0)
 
@@ -52,10 +60,15 @@ def main():
                   f"(running mean {times[max(0, i - 24):i + 1].mean():.2f}s)")
     st, agent = ts.env, ts.agent
 
+    n_params = actor_param_count(
+        jax.tree_util.tree_map(lambda x: x[0], agent.actor))
+    print(f"\npolicy: {args.policy} ({n_params:,} actor params/agent at "
+          f"N={args.twins})")
+
     # final comparison against baselines on the same frozen state
-    a = act(agent, observe(cfg, st))
+    a = act(cfg, agent, observe(cfg, st), policy=args.policy)
     cmp_ = compare_with_baselines(cfg, st, a)
-    print(f"\nfinal round latency:  MARL {float(cmp_['marl']):.2f}s | "
+    print(f"final round latency:  MARL {float(cmp_['marl']):.2f}s | "
           f"average {float(cmp_['average']):.2f}s | "
           f"random {float(cmp_['random']):.2f}s")
     ghz = [round(float(f) / 1e9, 2) for f in bs_frequencies(cfg)]

@@ -1,6 +1,18 @@
-from repro.core.marl.ddpg import DDPGConfig, MADDPGState, act, maddpg_init, maddpg_update
+from repro.core.marl.ddpg import (DDPGConfig, MADDPGState, act, maddpg_init,
+                                  maddpg_update)
 from repro.core.marl.env import (EnvConfig, EnvState, compare_with_baselines,
-                                 decode_actions, env_reset, env_step, observe)
+                                 decode_actions, env_reset, env_soft_reset,
+                                 env_step, observe, observe_flat)
+from repro.core.marl.networks import (POLICIES, actor_param_count,
+                                      policy_apply, policy_init)
 from repro.core.marl.ou_noise import ou_init, ou_step
-from repro.core.marl.replay import Replay, replay_add, replay_init, replay_sample
-from repro.core.marl.train import TrainConfig, TrainState, train, train_host_loop, train_init, train_step
+from repro.core.marl.replay import (Replay, replay_add, replay_init,
+                                    replay_row_bytes, replay_sample,
+                                    replay_sample_prioritized)
+from repro.core.marl.spaces import (Action, Observation, SpaceSpec,
+                                    clip_action, compact_obs, encode_action,
+                                    flatten_action, flatten_obs,
+                                    obs_from_compact, space_spec,
+                                    unflatten_action, zeros_action)
+from repro.core.marl.train import (TrainConfig, TrainState, train,
+                                   train_host_loop, train_init, train_step)

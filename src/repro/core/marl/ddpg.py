@@ -1,10 +1,25 @@
 """Multi-agent DDPG (MADDPG-style) for edge association — paper Section IV-B.
 
-Each BS agent i has actor pi_i(s) and critic Q_i(s, a_1..a_M); critics see the
-joint action (the blockchain shares states/actions among agents — paper
+Each BS agent i has actor pi_i(s) and critic Q_i(s, a_1..a_M); critics see
+the joint action (the blockchain shares states/actions among agents — paper
 Section IV-A). Updates follow Eqs. 22-25: deterministic policy gradient for
 actors, TD(0) targets from the target networks for critics, polyak soft
 target updates (Eq. 24-25 as theta_T = beta*theta + (1-beta)*theta_T).
+
+The update is generic over the policy protocol (``networks.POLICIES``,
+selected by ``DDPGConfig.policy``): actors produce structured ``Action``
+pytrees and the critics never see raw O(M*N) joint actions — only the
+``(M, E)`` compact encoding from ``spaces.encode_action``. Replay batches
+are correspondingly compact: ``(s_c, enc, r, s2_c)`` with ``s_c`` the
+``compact_obs`` row, so one gradient step costs O(N) transient compute (the
+actors re-score the twins) but O(M*E) replay memory per transition.
+
+Because only the encoding of the sampled joint action is stored, the actor
+update re-derives *every* agent's action from the sampled state with the
+current policies and substitutes agent i's differentiable action — the
+pi_j(s)-for-all-j MADDPG variant (all agents observe the same
+blockchain-shared global state, so pi_j(s) is exactly what agent j would
+have played there).
 
 All agents share network *structure*, so parameters are stacked with a
 leading agent axis and every update is a single vmapped, jitted step.
@@ -19,7 +34,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.marl import networks as nets
-from repro.utils.tree import tree_scale
+from repro.core.marl.spaces import (Action, Observation, encode_action,
+                                    obs_from_compact, space_spec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +48,7 @@ class DDPGConfig:
     hidden: tuple = (256, 256)
     noise_sigma: float = 0.2
     noise_theta: float = 0.15
+    policy: str = "factorized"  # key into networks.POLICIES
 
 
 class MADDPGState(NamedTuple):
@@ -63,16 +80,19 @@ def _opt_update(params, grads, mom, lr, beta=0.9):
     return new_params, new_mom
 
 
-def maddpg_init(cfg: DDPGConfig, key, n_agents: int, state_dim: int,
-                act_dim: int) -> MADDPGState:
+def maddpg_init(cfg, dcfg: DDPGConfig, key) -> MADDPGState:
+    """Stacked-agent MADDPG parameters for ``cfg: EnvConfig``: one actor of
+    the configured policy kind plus one compact-encoding critic per BS."""
+    spec = space_spec(cfg)
+
     def one(key):
         ka, kc = jax.random.split(key)
-        actor = nets.actor_init(ka, state_dim, act_dim, cfg.hidden)
-        critic = nets.critic_init(kc, state_dim, n_agents * act_dim,
-                                  cfg.hidden)
+        actor = nets.policy_init(dcfg.policy, ka, cfg, dcfg.hidden)
+        critic = nets.critic_init(kc, spec.compact_dim,
+                                  spec.n_bs * spec.enc_dim, dcfg.hidden)
         return actor, critic
 
-    keys = jax.random.split(key, n_agents)
+    keys = jax.random.split(key, spec.n_bs)
     actors, critics = zip(*(one(k) for k in keys))
     stack = lambda ts: jax.tree_util.tree_map(lambda *x: jnp.stack(x), *ts)
     actor, critic = stack(actors), stack(critics)
@@ -84,53 +104,76 @@ def maddpg_init(cfg: DDPGConfig, key, n_agents: int, state_dim: int,
     )
 
 
-def act(state: MADDPGState, obs: jnp.ndarray) -> jnp.ndarray:
-    """obs (state_dim,) -> joint actions (n_agents, act_dim), Eq. 21 w/o noise."""
-    return jax.vmap(lambda a: nets.actor_apply(a, obs))(state.actor)
+def act(cfg, state: MADDPGState, obs: Observation, *,
+        policy: str = "factorized") -> Action:
+    """Joint structured action (Eq. 21 without noise): every agent's actor
+    applied to the shared observation; leaves gain a leading M axis."""
+    return jax.vmap(
+        lambda p: nets.policy_apply(policy, cfg, p, obs))(state.actor)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def maddpg_update(cfg: DDPGConfig, st: MADDPGState, batch) -> tuple:
-    """One gradient step for all agents. batch = (s, a, r, s2) with
-    s: (B, S), a: (B, M, A), r: (B, M), s2: (B, S)."""
-    s, a, r, s2 = batch
-    B, M, A = a.shape
+@functools.partial(jax.jit, static_argnames=("cfg", "dcfg"))
+def maddpg_update(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
+                  twin_feats) -> tuple:
+    """One gradient step for all agents over a compact replay batch.
 
-    # target joint action a' = (pi'_1(s'), ..., pi'_M(s'))  (B, M, A)
-    a2 = jax.vmap(
-        lambda ap: jax.vmap(lambda o: nets.actor_apply(ap, o))(s2),
-        out_axes=1)(st.target_actor)
-    a2_flat = a2.reshape(B, M * A)
-    a_flat = a.reshape(B, M * A)
+    batch = (s_c, enc, r, s2_c) with s_c/s2_c: (B, compact_dim) compact
+    states, enc: (B, M, E) stored joint-action encodings, r: (B, M).
+    ``twin_feats`` is the episode's static (N, F) matrix — combined with a
+    compact row it reconstructs the full Observation for the actors.
+    """
+    s_c, enc, r, s2_c = batch
+    B, M, E = enc.shape
+    apply_ = functools.partial(nets.policy_apply, dcfg.policy, cfg)
+    obs_of = lambda row: obs_from_compact(cfg, row, twin_feats)
+
+    def joint_act(actors, row):
+        return jax.vmap(lambda p: apply_(p, obs_of(row)))(actors)
+
+    def joint_enc(a: Action):
+        return encode_action(cfg, a, twin_feats).reshape(M * E)
+
+    # target joint action a' = (pi'_1(s'), ..., pi'_M(s')), encoded (B, M*E)
+    a2 = jax.vmap(lambda row: joint_act(st.target_actor, row))(s2_c)
+    e2 = jax.vmap(joint_enc)(a2)
+    e1 = enc.reshape(B, M * E)
 
     def critic_loss_i(cp, tcp, r_i):
-        q_t = jax.vmap(lambda o, ja: nets.critic_apply(tcp, o, ja))(s2, a2_flat)
-        y = r_i + cfg.gamma * q_t  # Eq. 23 target
-        q = jax.vmap(lambda o, ja: nets.critic_apply(cp, o, ja))(s, a_flat)
+        q_t = jax.vmap(lambda o, je: nets.critic_apply(tcp, o, je))(s2_c, e2)
+        y = r_i + dcfg.gamma * q_t  # Eq. 23 target
+        q = jax.vmap(lambda o, je: nets.critic_apply(cp, o, je))(s_c, e1)
         return jnp.mean((q - jax.lax.stop_gradient(y)) ** 2)
 
     closs, cgrads = jax.vmap(
         jax.value_and_grad(critic_loss_i), in_axes=(0, 0, 1))(
             st.critic, st.target_critic, r)
     critic, c_opt = _opt_update(st.critic, cgrads, st.critic_opt,
-                                cfg.critic_lr)
+                                dcfg.critic_lr)
 
-    # actor update (Eq. 22): ascend Q_i(s, a_1..pi_i(s)..a_M)
+    # actor update (Eq. 22): ascend Q_i(s, pi_1(s)..pi_i(s)..pi_M(s)) with
+    # agent i's slot differentiable — see module docstring for why the
+    # other agents' actions are re-derived rather than replayed.
+    base = jax.lax.stop_gradient(
+        jax.vmap(lambda row: joint_act(st.actor, row))(s_c))  # (B, M, ...)
     agent_ids = jnp.arange(M)
 
     def actor_loss_i(ap, cp, i):
-        my_a = jax.vmap(lambda o: nets.actor_apply(ap, o))(s)  # (B, A)
-        joint = a.at[:, i, :].set(my_a).reshape(B, M * A)
-        q = jax.vmap(lambda o, ja: nets.critic_apply(cp, o, ja))(s, joint)
+        mine = jax.vmap(lambda row: apply_(ap, obs_of(row)))(s_c)
+        joint = Action(
+            scores=base.scores.at[:, i].set(mine.scores),
+            b_ctl=base.b_ctl.at[:, i].set(mine.b_ctl),
+            tau=base.tau.at[:, i].set(mine.tau))
+        e = jax.vmap(joint_enc)(joint)
+        q = jax.vmap(lambda o, je: nets.critic_apply(cp, o, je))(s_c, e)
         return -jnp.mean(q)
 
     aloss, agrads = jax.vmap(
         jax.value_and_grad(actor_loss_i), in_axes=(0, 0, 0))(
             st.actor, critic, agent_ids)
-    actor, a_opt = _opt_update(st.actor, agrads, st.actor_opt, cfg.actor_lr)
+    actor, a_opt = _opt_update(st.actor, agrads, st.actor_opt, dcfg.actor_lr)
 
     # Eq. 24-25 soft target updates
-    beta = cfg.polyak
+    beta = dcfg.polyak
     soft = lambda t, p: jax.tree_util.tree_map(
         lambda tt, pp: (1.0 - beta) * tt + beta * pp, t, p)
     new = MADDPGState(

@@ -1,28 +1,37 @@
 """DTWN edge-association environment — the MDP of paper Section IV-A.
 
 State  s(t) = (f^C, K, D, h): BS CPU frequencies, twins-per-BS counts, twin
-data sizes, channel gains (flattened, normalized).
+data sizes, channel gains — exposed as the structured
+``spaces.Observation`` (per-BS feature matrix + per-twin feature matrix)
+instead of one opaque flat vector; ``observe_flat`` keeps the legacy O(N)
+flattening for the flat-MLP oracle policy.
 Action a_i(t) = (K_i, b_i, tau_i) per BS agent: association scores over the
-N twins, a batch-size control, and per-sub-channel bandwidth bids. Joint
-actions are projected onto the feasible set of problem (18): argmax
-association (18b), softmax bandwidth (18c), clipped batch (18d).
+N twins, a batch-size control, and per-sub-channel bandwidth bids — the
+structured ``spaces.Action``. Joint actions are projected onto the feasible
+set of problem (18): argmax association (18b), softmax bandwidth (18c),
+clipped batch (18d).
 Reward R_i = -T_i(t) (Eq. 19) with the shared system cost max_i T_i
 (Eq. 17) also exposed.
 
 Dynamics: channels follow Gauss-Markov fading; CPU frequencies jitter around
-their nominal values (the paper's "dynamic network states").
+their nominal values (the paper's "dynamic network states"). Episodes
+(``episode_len``) restart the dynamics via ``env_soft_reset`` while keeping
+the twin population fixed — per-twin features stay static within a training
+run, the invariant the N-independent replay relies on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency
-from repro.kernels.segment_reduce import segment_count
+from repro.core.marl import spaces
+from repro.core.marl.spaces import Action, Observation
+from repro.kernels.segment_reduce import segment_count, segment_reduce
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +54,10 @@ class EnvConfig:
 
     @property
     def wl(self) -> comms.WirelessConfig:
-        """Wireless config with n_bs synced to the env's BS count."""
+        """Wireless config with n_bs synced to the env's BS count. Every
+        channel/distance sample and rate computation must go through this
+        (never raw ``cfg.wireless``) or shapes silently break for any
+        ``n_bs != wireless.n_bs`` — regression-tested at n_bs=8."""
         if self.wireless.n_bs == self.n_bs:
             return self.wireless
         return dataclasses.replace(self.wireless, n_bs=self.n_bs)
@@ -57,9 +69,8 @@ class EnvConfig:
 
     @property
     def state_dim(self) -> int:
-        # f^C (M) + K (M) + D (N) + h (M*C)
-        return (self.n_bs * 2 + self.n_twins
-                + self.n_bs * self.wireless.n_subchannels)
+        """Width of the legacy flat observation (``observe_flat``), O(N)."""
+        return spaces.space_spec(self).flat_obs_dim
 
 
 class EnvState(NamedTuple):
@@ -81,25 +92,45 @@ def bs_frequencies(cfg: EnvConfig) -> jnp.ndarray:
     return table[idx] * 1e9
 
 
-def observe(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
-    """Flatten + normalize the system state (blockchain-shared, so every
-    agent observes the global state — paper Section IV-A).
+def observe(cfg: EnvConfig, st: EnvState) -> Observation:
+    """Structured system state (blockchain-shared, so every agent observes
+    the global state — paper Section IV-A).
 
-    Returns (state_dim,) fp32: [freqs/3.6GHz (M,), K_i/N (M,),
-    D_j/data_max (N,), h_up/2 (M*C,)]. The K_i occupancy histogram goes
-    through the segment-reduce dispatch, so observation stays O(N+M) at
-    large twin counts.
+    Returns ``Observation`` with
+      ``bs_feats (M, 4+C)``: [freq/3.6GHz, K_i/N, data-load share,
+      h_up/2 (C cols), dist/max_dist] — everything dynamic is per-BS;
+      ``twin_feats (N, 2)``: [D_j/data_max, D_j/mean(D)] — static within an
+      episode (the paper's state carries per-twin information only through
+      the fixed D).
+    The K_i / load columns go through the segment-reduce dispatch, so
+    observation stays O(N+M) at large twin counts.
     """
     k_counts = segment_count(st.assoc, cfg.n_bs)
-    return jnp.concatenate([
-        st.freqs / 3.6e9,
-        k_counts / cfg.n_twins,
-        st.data_sizes / cfg.data_max,
-        (st.h_up / 2.0).reshape(-1),
-    ]).astype(jnp.float32)
+    d = st.data_sizes / cfg.data_max
+    load = segment_reduce(d, st.assoc, cfg.n_bs) / jnp.maximum(
+        jnp.sum(d), 1e-9)
+    bs_feats = jnp.concatenate([
+        (st.freqs / 3.6e9)[:, None],
+        (k_counts / cfg.n_twins)[:, None],
+        load[:, None],
+        st.h_up / 2.0,
+        (st.dist / cfg.wl.max_dist_m)[:, None],
+    ], axis=1).astype(jnp.float32)
+    twin_feats = jnp.stack(
+        [d, d * cfg.n_twins / jnp.maximum(jnp.sum(d), 1e-9)],
+        axis=1).astype(jnp.float32)
+    return Observation(bs_feats=bs_feats, twin_feats=twin_feats)
+
+
+def observe_flat(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
+    """Legacy flat observation, (state_dim,) fp32 — the flat-MLP oracle's
+    input format; everything else should consume :func:`observe`."""
+    return spaces.flatten_obs(observe(cfg, st))
 
 
 def env_reset(cfg: EnvConfig, key) -> EnvState:
+    """Fresh env: new twin population, channels, distances (all through the
+    n_bs-synced ``cfg.wl``), round-robin association."""
     ks = jax.random.split(key, 5)
     freqs = bs_frequencies(cfg)
     data = jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
@@ -115,17 +146,39 @@ def env_reset(cfg: EnvConfig, key) -> EnvState:
     )
 
 
-def decode_actions(cfg: EnvConfig, actions: jnp.ndarray):
-    """actions: (M, action_dim) in [-1,1] -> (assoc (N,), b (N,), tau (M,C))."""
-    N, C = cfg.n_twins, cfg.wl.n_subchannels
-    scores = actions[:, :N]                      # (M, N)
-    b_ctl = actions[:, N]                        # (M,)
-    tau_logits = actions[:, N + 1:]              # (M, C)
-    assoc = assoc_mod.assoc_from_scores(scores)
+def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
+    """Episode boundary reset: restart the dynamics (fresh channels,
+    distances, nominal frequencies, round-robin association, t=0) while
+    KEEPING the twin population ``data_sizes``. Twin features therefore
+    stay constant across episodes of one training run — required for the
+    N-independent replay (twin_feats are stored once, not per row). Used
+    by the scan trainer's ``episode_len`` gate."""
+    ks = jax.random.split(key, 3)
+    return EnvState(
+        freqs=bs_frequencies(cfg),
+        data_sizes=st.data_sizes,
+        h_up=comms.sample_channel(cfg.wl, ks[0]),
+        h_down=comms.sample_channel(cfg.wl, ks[1]),
+        dist=comms.sample_distances(cfg.wl, ks[2]),
+        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        t=jnp.int32(0),
+    )
+
+
+def decode_actions(cfg: EnvConfig, actions: Union[Action, jnp.ndarray]):
+    """Project a joint action onto the feasible set of problem (18).
+
+    ``actions`` is either the structured ``spaces.Action`` (native) or the
+    legacy flat ``(M, N+1+C)`` array in [-1,1] (auto-unflattened). Returns
+    ``(assoc (N,), b (N,), tau (M,C))``.
+    """
+    if not isinstance(actions, Action):
+        actions = spaces.unflatten_action(cfg, actions)
+    assoc = assoc_mod.assoc_from_scores(actions.scores)
     # each twin uses its chosen BS's batch control
-    b = assoc_mod.project_batch(cfg.lat, b_ctl)[assoc]  # (N,)
+    b = assoc_mod.project_batch(cfg.lat, actions.b_ctl)[assoc]  # (N,)
     # softmax over the BS axis -> each sub-channel's time shares sum to 1 (18c)
-    tau = assoc_mod.project_bandwidth(tau_logits * 4.0)  # (M, C)
+    tau = assoc_mod.project_bandwidth(actions.tau * 4.0)  # (M, C)
     return assoc, b, tau
 
 
@@ -155,8 +208,9 @@ def compare_with_baselines(cfg: EnvConfig, st: EnvState, actions,
             "assoc": assoc_p}
 
 
-def env_step(cfg: EnvConfig, st: EnvState, actions: jnp.ndarray, key):
-    """Returns (next_state, per_agent_reward (M,), info dict)."""
+def env_step(cfg: EnvConfig, st: EnvState, actions, key):
+    """Returns (next_state, per_agent_reward (M,), info dict). ``actions``
+    is a structured ``spaces.Action`` (or the legacy flat layout)."""
     assoc, b, tau = decode_actions(cfg, actions)
     up = comms.uplink_rate(cfg.wl, tau, st.h_up, st.dist)
     down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)

@@ -1,8 +1,41 @@
-"""Actor / critic MLPs for the multi-agent DDPG (paper Section IV)."""
+"""Policies and critics for the multi-agent DDPG (paper Section IV).
+
+The agent-environment boundary is the policy *protocol*: a policy is a
+``(init, apply)`` pair registered in ``POLICIES`` where
+
+    init(key, cfg: EnvConfig, hidden) -> params        (per-agent pytree)
+    apply(cfg, params, obs: Observation) -> Action     (per-agent slice:
+                                                        scores (N,), b (),
+                                                        tau (C,))
+
+Two interchangeable implementations:
+
+``"flat"``
+    The seed's monolithic MLP on the flattened observation, emitting the
+    full ``N + 1 + C`` action vector. Parameters are O(N) (first and last
+    layers scale with the twin count) — kept as the small-N oracle for the
+    parity tests.
+``"factorized"``
+    A shared per-twin scoring head over ``twin_feats`` conditioned on a
+    global context vector, so parameters are O(F + H^2 + C) — independent
+    of N. The global trunk consumes ``compact_obs`` (per-BS features +
+    mean/max/min/std twin pooling) concatenated with a learned
+    attention-pooled twin summary; b and tau heads hang off the trunk.
+    The same parameters therefore run at any N: policies transfer across
+    twin populations of different sizes (the multi-tier / migration
+    follow-up requirement).
+
+The MADDPG critic is policy-agnostic: it consumes ``compact_obs`` plus the
+flattened ``(M, E)`` joint-action encoding from ``spaces.encode_action`` —
+never the O(M*N) raw joint action.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.marl.spaces import (Action, Observation, compact_obs,
+                                    flatten_obs, space_spec)
 
 
 def mlp_init(key, sizes, dtype=jnp.float32):
@@ -22,21 +55,133 @@ def mlp_apply(params, x, *, final_tanh: bool = False):
     return jnp.tanh(x) if final_tanh else x
 
 
-def actor_init(key, state_dim: int, action_dim: int, hidden=(256, 256)):
-    return mlp_init(key, (state_dim, *hidden, action_dim))
+# ---------------------------------------------------------------------------
+# flat policy — the legacy monolithic MLP, O(N) params (small-N oracle)
+# ---------------------------------------------------------------------------
 
 
-def actor_apply(params, state):
-    """pi(s) in [-1, 1]^action_dim (Eq. 21 before exploration noise)."""
-    return mlp_apply(params, state, final_tanh=True)
+def flat_policy_init(key, cfg, hidden=(256, 256)):
+    spec = space_spec(cfg)
+    return {"mlp": mlp_init(key, (spec.flat_obs_dim, *hidden,
+                                  spec.flat_act_dim))}
 
 
-def critic_init(key, state_dim: int, joint_action_dim: int, hidden=(256, 256)):
-    """MADDPG critic: Q(s, a_1..a_M) sees the joint action (paper Eq. 22-23,
-    following Lowe et al. [22])."""
-    return mlp_init(key, (state_dim + joint_action_dim, *hidden, 1))
+def flat_policy_apply(cfg, params, obs: Observation) -> Action:
+    """pi(s) in [-1, 1] over the legacy flat action vector, restructured."""
+    spec = space_spec(cfg)
+    v = mlp_apply(params["mlp"], flatten_obs(obs), final_tanh=True)
+    return Action(scores=v[: spec.n_twins], b_ctl=v[spec.n_twins],
+                  tau=v[spec.n_twins + 1:])
 
 
-def critic_apply(params, state, joint_action):
-    x = jnp.concatenate([state, joint_action], axis=-1)
+# ---------------------------------------------------------------------------
+# factorized policy — shared per-twin scoring head, O(F) params
+# ---------------------------------------------------------------------------
+
+
+def factorized_policy_init(key, cfg, hidden=(256, 256)):
+    spec = space_spec(cfg)
+    h = hidden[-1]
+    hs = max(hidden[-1] // 4, 16)  # per-twin head width
+    ks = jax.random.split(key, 6)
+
+    def lin(k, a, b):
+        return jax.random.normal(k, (a, b)) * (2.0 / a) ** 0.5
+
+    return {
+        # global trunk: compact obs + attention-pooled twin summary -> (H,)
+        "attn_q": jax.random.normal(ks[0], (spec.twin_f,)) * 0.5,
+        "trunk": mlp_init(ks[1], (spec.compact_dim + spec.twin_f, *hidden)),
+        # shared per-twin scoring head: [twin_feat_n ; trunk] -> score_n
+        "wt": lin(ks[2], spec.twin_f, hs), "wg": lin(ks[3], h, hs),
+        "bh": jnp.zeros((hs,)), "wo": lin(ks[4], hs, 1) * 0.5,
+        "bo": jnp.zeros((1,)),
+        # global heads off the trunk: batch control + bandwidth bids
+        "wb": lin(ks[5], h, 1), "bb": jnp.zeros((1,)),
+        "wtau": lin(jax.random.fold_in(key, 9), h, spec.n_subchannels),
+        "btau": jnp.zeros((spec.n_subchannels,)),
+    }
+
+
+def factorized_policy_apply(cfg, params, obs: Observation) -> Action:
+    """Score every twin with one shared head; parameter count has no N.
+
+    Global context = MLP(compact_obs ++ attention-pooled twin features);
+    per-twin score_n = tanh(head([twin_feat_n, context])). The twin axis
+    only appears as a batched matmul, so the same parameters evaluate at
+    any population size.
+    """
+    tf = obs.twin_feats                                   # (N, F)
+    attn = jax.nn.softmax(tf @ params["attn_q"])          # (N,)
+    pooled = attn @ tf                                    # (F,)
+    g = jax.nn.relu(mlp_apply(params["trunk"],
+                              jnp.concatenate([compact_obs(obs), pooled])))
+    h = jax.nn.relu(tf @ params["wt"] + g @ params["wg"] + params["bh"])
+    scores = jnp.tanh(h @ params["wo"] + params["bo"])[:, 0]   # (N,)
+    b = jnp.tanh(g @ params["wb"] + params["bb"])[0]
+    tau = jnp.tanh(g @ params["wtau"] + params["btau"])        # (C,)
+    return Action(scores=scores, b_ctl=b, tau=tau)
+
+
+# ---------------------------------------------------------------------------
+# protocol registry
+# ---------------------------------------------------------------------------
+
+POLICIES = {
+    "flat": (flat_policy_init, flat_policy_apply),
+    "factorized": (factorized_policy_init, factorized_policy_apply),
+}
+
+
+def policy_init(name: str, key, cfg, hidden=(256, 256)):
+    """Per-agent actor parameters for the named policy."""
+    if name not in POLICIES:
+        raise ValueError(f"policy must be one of {tuple(POLICIES)}, "
+                         f"got {name!r}")
+    return POLICIES[name][0](key, cfg, hidden)
+
+
+# key that must be present in each policy's param pytree — used to turn a
+# policy-name/parameter mismatch into a clear error instead of an opaque
+# KeyError deep inside jit
+_PARAM_SIGNATURE = {"flat": "mlp", "factorized": "attn_q"}
+
+
+def policy_apply(name: str, cfg, params, obs: Observation) -> Action:
+    """One agent's structured action for the named policy (Eq. 21 pre-noise)."""
+    if name not in POLICIES:
+        raise ValueError(f"policy must be one of {tuple(POLICIES)}, "
+                         f"got {name!r}")
+    if isinstance(params, dict) and _PARAM_SIGNATURE[name] not in params:
+        other = next((n for n, k in _PARAM_SIGNATURE.items()
+                      if k in params), "unknown")
+        raise ValueError(
+            f"policy={name!r} applied to parameters of a {other!r} actor — "
+            f"pass the same policy name the agent was initialized with "
+            f"(DDPGConfig.policy)")
+    return POLICIES[name][1](cfg, params, obs)
+
+
+def actor_param_count(params) -> int:
+    """Total scalar parameter count of one agent's actor pytree."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# critic — policy-agnostic, consumes the compact encodings only
+# ---------------------------------------------------------------------------
+
+
+def critic_init(key, compact_dim: int, joint_enc_dim: int,
+                hidden=(256, 256)):
+    """MADDPG critic Q(s, a_1..a_M) (paper Eq. 22-23, following Lowe et
+    al. [22]) over the compact state (``spaces.compact_obs``) and the
+    flattened (M, E) joint-action encoding — input width M*E + compact_dim,
+    independent of the twin count."""
+    return mlp_init(key, (compact_dim + joint_enc_dim, *hidden, 1))
+
+
+def critic_apply(params, state_c, joint_enc):
+    """state_c (..., compact_dim), joint_enc (..., M*E) -> Q (...)."""
+    x = jnp.concatenate([state_c, joint_enc], axis=-1)
     return mlp_apply(params, x)[..., 0]

@@ -1,4 +1,10 @@
-"""Ornstein-Uhlenbeck exploration noise (paper Eq. 21, ref [23])."""
+"""Ornstein-Uhlenbeck exploration noise (paper Eq. 21, ref [23]).
+
+Pytree-aware: the noise state may be a bare array (legacy) or any pytree of
+arrays — in particular a ``spaces.Action``, so exploration noise carries
+the same structure as the action it perturbs. ``ou_step`` draws an
+independent normal per leaf from one key.
+"""
 from __future__ import annotations
 
 import jax
@@ -6,12 +12,17 @@ import jax.numpy as jnp
 
 
 def ou_init(shape, mu: float = 0.0):
+    """Constant-``mu`` noise state of the given array shape. For structured
+    actions use ``spaces.zeros_action(cfg)`` (an all-zero Action pytree)."""
     return jnp.full(shape, mu, jnp.float32)
 
 
 def ou_step(state, key, *, mu: float = 0.0, theta: float = 0.15,
             sigma: float = 0.2, dt: float = 1.0):
-    """x' = x + theta (mu - x) dt + sigma sqrt(dt) N(0,1)."""
-    noise = jax.random.normal(key, state.shape)
-    new = state + theta * (mu - state) * dt + sigma * (dt ** 0.5) * noise
-    return new
+    """x' = x + theta (mu - x) dt + sigma sqrt(dt) N(0,1), per pytree leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    keys = jax.random.split(key, len(leaves))
+    new = [x + theta * (mu - x) * dt
+           + sigma * (dt ** 0.5) * jax.random.normal(k, jnp.shape(x))
+           for x, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, new)

@@ -1,7 +1,21 @@
-"""Replay memory as preallocated jnp arrays with jitted add/sample."""
+"""Replay memory as preallocated jnp arrays with jitted add/sample.
+
+Rows are N-independent: the state slots store ``spaces.compact_obs``
+vectors and the action slot stores the ``(M, E)`` joint-action encoding
+(``spaces.encode_action``) — never raw O(N) observations or O(M*N) joint
+actions. One row costs ``(2*compact_dim + M*E + M) * 4`` bytes at any twin
+count; the per-twin feature matrix lives once outside the buffer.
+
+Two samplers: uniform (``replay_sample``) and the prioritized-lite
+``replay_sample_prioritized`` — proportional sampling over stored |reward|
+via a cumulative-sum + ``searchsorted`` inversion (the same
+prefix-sum/boundary-search primitives as the sort backend in
+``repro.kernels.segment_reduce``), selected by ``TrainConfig.prioritized``.
+"""
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -9,19 +23,19 @@ import jax.numpy as jnp
 
 
 class Replay(NamedTuple):
-    state: jnp.ndarray       # (cap, state_dim)
-    action: jnp.ndarray      # (cap, n_agents, act_dim)
+    state: jnp.ndarray       # (cap, compact_dim)
+    act_enc: jnp.ndarray     # (cap, n_agents, enc_dim)
     reward: jnp.ndarray      # (cap, n_agents)
-    next_state: jnp.ndarray  # (cap, state_dim)
+    next_state: jnp.ndarray  # (cap, compact_dim)
     ptr: jnp.ndarray         # scalar int32
     size: jnp.ndarray        # scalar int32
 
 
 def replay_init(capacity: int, state_dim: int, n_agents: int,
-                act_dim: int) -> Replay:
+                enc_dim: int) -> Replay:
     return Replay(
         state=jnp.zeros((capacity, state_dim), jnp.float32),
-        action=jnp.zeros((capacity, n_agents, act_dim), jnp.float32),
+        act_enc=jnp.zeros((capacity, n_agents, enc_dim), jnp.float32),
         reward=jnp.zeros((capacity, n_agents), jnp.float32),
         next_state=jnp.zeros((capacity, state_dim), jnp.float32),
         ptr=jnp.int32(0),
@@ -29,13 +43,20 @@ def replay_init(capacity: int, state_dim: int, n_agents: int,
     )
 
 
+def replay_row_bytes(buf: Replay) -> int:
+    """Bytes one transition occupies — the N-independence figure of merit
+    asserted by the tests and reported by the policy-scaling bench."""
+    return sum(a.dtype.itemsize * math.prod(a.shape[1:])
+               for a in (buf.state, buf.act_enc, buf.reward, buf.next_state))
+
+
 @jax.jit
-def replay_add(buf: Replay, s, a, r, s2) -> Replay:
+def replay_add(buf: Replay, s, e, r, s2) -> Replay:
     cap = buf.state.shape[0]
     i = buf.ptr % cap
     return Replay(
         state=buf.state.at[i].set(s),
-        action=buf.action.at[i].set(a),
+        act_enc=buf.act_enc.at[i].set(e),
         reward=buf.reward.at[i].set(r),
         next_state=buf.next_state.at[i].set(s2),
         ptr=buf.ptr + 1,
@@ -43,8 +64,34 @@ def replay_add(buf: Replay, s, a, r, s2) -> Replay:
     )
 
 
+def _rows(buf: Replay, idx):
+    return (buf.state[idx], buf.act_enc[idx], buf.reward[idx],
+            buf.next_state[idx])
+
+
 @functools.partial(jax.jit, static_argnames=("batch",))
 def replay_sample(buf: Replay, key, batch: int):
     idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
-    return (buf.state[idx], buf.action[idx], buf.reward[idx],
-            buf.next_state[idx])
+    return _rows(buf, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def replay_sample_prioritized(buf: Replay, key, batch: int,
+                              eps: float = 1e-3):
+    """Prioritized-lite sampling: P(row) proportional to the stored mean
+    |reward| (+eps) over valid rows. Inversion sampling — exclusive-style
+    ``cumsum`` over priorities, uniform draws on [0, total), then
+    ``searchsorted`` finds each draw's row — so there is no O(cap)
+    per-draw scan and no data-dependent control flow (jit/scan-safe).
+    With an empty buffer every priority is 0, searchsorted returns cap,
+    and the clip lands every draw on row cap-1 — an all-zero row, so the
+    degenerate-buffer behavior matches the uniform sampler's max(size, 1)
+    convention of returning zero rows.
+    """
+    cap = buf.reward.shape[0]
+    valid = (jnp.arange(cap) < buf.size).astype(jnp.float32)
+    pri = (jnp.abs(buf.reward).mean(axis=1) + eps) * valid
+    csum = jnp.cumsum(pri)
+    u = jax.random.uniform(key, (batch,)) * csum[-1]
+    idx = jnp.clip(jnp.searchsorted(csum, u, side="right"), 0, cap - 1)
+    return _rows(buf, idx)

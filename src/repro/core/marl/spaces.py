@@ -1,0 +1,201 @@
+"""Structured agent-environment spaces for the edge-association MDP.
+
+The seed flattened the paper's state/action (Section IV-A) into opaque
+vectors: the actor emitted ``N + 1 + C`` numbers per agent and the MADDPG
+critic consumed the ``M * (N + 1 + C)`` joint concat, so every network and
+replay row was O(N) and the MARL stack died at a few hundred twins while the
+latency core (Eqs. 12-17) scales to 10^5. This module makes the interface
+structural:
+
+``Observation``
+    ``bs_feats (M, G)`` — the dynamic per-BS state: CPU frequency, twin
+    count K_i/N, data-load share, the C uplink channel gains, distance.
+    ``twin_feats (N, F)`` — per-twin features (normalized data size D_j and
+    its population-relative size). Static within an episode: the paper's
+    state (f^C, K, D, h) only carries per-twin information through D, which
+    is fixed at reset — everything dynamic is per-BS. That invariant is what
+    lets the replay store N-independent rows (see ``compact_obs``).
+``Action``
+    ``scores (M, N)`` association scores (argmax over the BS axis decodes
+    to the (18b)-feasible association), ``b_ctl (M,)`` batch control (18d),
+    ``tau (M, C)`` bandwidth bids (18c). Per-agent slices drop the leading
+    M axis.
+
+Three codecs bridge the structure to fixed-size vectors:
+
+``flatten_obs``    — the O(N) legacy vector the flat-MLP oracle consumes.
+``compact_obs``    — ``(M*G + P,)``: bs_feats + pooled twin statistics.
+                     N-independent; what the critic and the replay see.
+``encode_action``  — ``(M, E)`` compact joint-action summary: per-BS
+                     segment-reduced score statistics (hard counts, winning
+                     -score means, data-load share via PR 2's
+                     ``segment_reduce``), a soft occupancy (softmax over the
+                     BS axis — the differentiable path for the actor
+                     gradient), plus the agent's b and tau. E = 5 + C,
+                     independent of N, so critic input and replay memory
+                     stay O(M) at any twin count.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce import segment_count, segment_reduce
+
+# feature layout constants (documented in docs/ARCHITECTURE.md)
+TWIN_FEAT_DIM = 2       # F: [D_j / data_max, D_j / mean(D)]
+N_POOLS = 4             # mean / max / min / std per twin-feature column
+BS_EXTRA_FEATS = 4      # freq, K_i/N, load share, distance (+ C gains)
+ENC_EXTRA = 5           # hard count, soft count, win-score mean, load, b
+_SOFT_TEMP = 4.0        # softmax sharpness for the soft-occupancy feature
+
+
+class Observation(NamedTuple):
+    """Structured MDP state (paper Section IV-A, blockchain-shared)."""
+    bs_feats: jnp.ndarray    # (M, G) dynamic per-BS features
+    twin_feats: jnp.ndarray  # (N, F) static per-twin features
+
+
+class Action(NamedTuple):
+    """Structured joint action; per-agent slices drop the leading M axis."""
+    scores: jnp.ndarray      # (M, N) association scores in [-1, 1]
+    b_ctl: jnp.ndarray       # (M,) batch controls in [-1, 1]
+    tau: jnp.ndarray         # (M, C) bandwidth bid logits in [-1, 1]
+
+
+class SpaceSpec(NamedTuple):
+    """Static dimensions derived from an EnvConfig (all trace-time ints)."""
+    n_twins: int        # N
+    n_bs: int           # M
+    n_subchannels: int  # C
+    twin_f: int         # F, per-twin feature dim
+    bs_f: int           # G, per-BS feature dim
+    pooled: int         # P = N_POOLS * F
+    compact_dim: int    # M*G + P  (critic state / replay row)
+    flat_obs_dim: int   # M*G + N*F (flat-policy input, O(N))
+    flat_act_dim: int   # N + 1 + C (legacy per-agent action vector)
+    enc_dim: int        # E, per-agent action-encoding width
+
+
+def space_spec(cfg) -> SpaceSpec:
+    """Dimensions of every interface tensor for ``cfg: EnvConfig``."""
+    m, n, c = cfg.n_bs, cfg.n_twins, cfg.wl.n_subchannels
+    g = BS_EXTRA_FEATS + c
+    pooled = N_POOLS * TWIN_FEAT_DIM
+    return SpaceSpec(
+        n_twins=n, n_bs=m, n_subchannels=c,
+        twin_f=TWIN_FEAT_DIM, bs_f=g, pooled=pooled,
+        compact_dim=m * g + pooled,
+        flat_obs_dim=m * g + n * TWIN_FEAT_DIM,
+        flat_act_dim=n + 1 + c,
+        enc_dim=ENC_EXTRA + c,
+    )
+
+
+# ---------------------------------------------------------------------------
+# observation codecs
+# ---------------------------------------------------------------------------
+
+
+def flatten_obs(obs: Observation) -> jnp.ndarray:
+    """Observation -> (M*G + N*F,) legacy flat vector (O(N) — the flat-MLP
+    oracle's input; everything else consumes the structure directly)."""
+    return jnp.concatenate([obs.bs_feats.reshape(-1),
+                            obs.twin_feats.reshape(-1)])
+
+
+def pool_twins(twin_feats: jnp.ndarray) -> jnp.ndarray:
+    """(N, F) -> (N_POOLS*F,) permutation-invariant population summary:
+    per-column mean/max/min/std. The mean-pooling half of the factorized
+    policy's global context (attention pooling lives in networks.py)."""
+    return jnp.concatenate([
+        jnp.mean(twin_feats, axis=0), jnp.max(twin_feats, axis=0),
+        jnp.min(twin_feats, axis=0), jnp.std(twin_feats, axis=0)])
+
+
+def compact_obs(obs: Observation) -> jnp.ndarray:
+    """Observation -> (compact_dim,) N-independent state summary: flattened
+    bs_feats plus pooled twin statistics. This is what the MADDPG critic
+    conditions on and what a replay row stores; ``obs_from_compact``
+    inverts it (twin_feats are static per episode, held once outside the
+    buffer)."""
+    return jnp.concatenate([obs.bs_feats.reshape(-1),
+                            pool_twins(obs.twin_feats)])
+
+
+def obs_from_compact(cfg, row: jnp.ndarray,
+                     twin_feats: jnp.ndarray) -> Observation:
+    """Rebuild the structured Observation from a compact replay row plus
+    the (static) twin feature matrix. Exact — bs_feats round-trips through
+    the row and twin_feats never entered it."""
+    spec = space_spec(cfg)
+    bs = row[: spec.n_bs * spec.bs_f].reshape(spec.n_bs, spec.bs_f)
+    return Observation(bs_feats=bs, twin_feats=twin_feats)
+
+
+# ---------------------------------------------------------------------------
+# action codecs
+# ---------------------------------------------------------------------------
+
+
+def flatten_action(a: Action) -> jnp.ndarray:
+    """Action -> (..., M, N+1+C) legacy flat layout [scores | b | tau]."""
+    return jnp.concatenate([a.scores, a.b_ctl[..., None], a.tau], axis=-1)
+
+
+def unflatten_action(cfg, v: jnp.ndarray) -> Action:
+    """(..., M, N+1+C) legacy flat layout -> Action."""
+    n = cfg.n_twins
+    return Action(scores=v[..., :n], b_ctl=v[..., n], tau=v[..., n + 1:])
+
+
+def zeros_action(cfg) -> Action:
+    """All-zero joint Action — the OU-noise initial state and shape spec."""
+    spec = space_spec(cfg)
+    return Action(
+        scores=jnp.zeros((spec.n_bs, spec.n_twins), jnp.float32),
+        b_ctl=jnp.zeros((spec.n_bs,), jnp.float32),
+        tau=jnp.zeros((spec.n_bs, spec.n_subchannels), jnp.float32))
+
+
+def clip_action(a: Action, lo: float = -1.0, hi: float = 1.0) -> Action:
+    """Elementwise clip of every Action leaf (post-exploration-noise)."""
+    return jax.tree_util.tree_map(lambda x: jnp.clip(x, lo, hi), a)
+
+
+def encode_action(cfg, a: Action, twin_feats: jnp.ndarray) -> jnp.ndarray:
+    """Compact joint-action summary for the MADDPG critic, (M, E) with
+    E = 5 + C — independent of N.
+
+    Columns per BS agent i:
+      0. hard occupancy  K_i/N of the decoded association (``segment_count``
+         over ``argmax`` — the (18b) decode the env applies),
+      1. soft occupancy  mean_n softmax_i(scores * temp) — the
+         differentiable stand-in for column 0 that carries the actor
+         gradient through every agent's scores,
+      2. winning-score mean on BS i's twins (``segment_reduce`` of the
+         per-twin max score; gradient flows to the winning agent),
+      3. data-load share of BS i (``segment_reduce`` of normalized D_j),
+      4. the agent's raw batch control b_i,
+      5+ the agent's raw bandwidth bids tau_i (C,).
+
+    All per-BS statistics route through PR 2's segment-reduce dispatch, so
+    the encoding costs O(N + M) and stays jit/vmap/grad-safe.
+    """
+    from repro.core.association import assoc_from_scores
+
+    m = a.scores.shape[0]
+    n = a.scores.shape[1]
+    assoc = assoc_from_scores(a.scores)       # the same (18b) decode as env
+    win = jnp.max(a.scores, axis=0)                            # (N,)
+    counts = segment_count(assoc, m)                           # (M,)
+    k_hard = counts / n
+    k_soft = jnp.mean(jax.nn.softmax(a.scores * _SOFT_TEMP, axis=0), axis=1)
+    win_mean = segment_reduce(win, assoc, m) / jnp.maximum(counts, 1.0)
+    d = twin_feats[:, 0]
+    load = segment_reduce(d, assoc, m) / jnp.maximum(jnp.sum(d), 1e-9)
+    return jnp.concatenate(
+        [k_hard[:, None], k_soft[:, None], win_mean[:, None], load[:, None],
+         a.b_ctl[:, None], a.tau], axis=1)

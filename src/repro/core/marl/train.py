@@ -8,8 +8,23 @@ and the MADDPG gradient step — is fused into a single ``lax.scan`` body, so a
 full training run is ONE jitted call. Metrics come back as a Python-visible
 trace of (steps,) arrays.
 
+Everything flows through the structured spaces API: actions are
+``spaces.Action`` pytrees (exploration noise shares the structure), the
+replay stores ``compact_obs`` rows plus the ``(M, E)`` joint-action
+encoding, and the per-twin feature matrix — static across episodes because
+``env_soft_reset`` keeps the population — is held once in
+``TrainState.obs.twin_feats``. With the (default) factorized policy the
+whole trainer state outside the env itself is therefore N-independent,
+which is what lets MARL training run at N=10^4+ twins.
+
+Multi-episode training: when ``EnvConfig.episode_len > 0`` the scan body
+soft-resets the env (fresh channels/distances, same twin population) every
+``episode_len`` steps via ``lax.cond`` — the replay row for the boundary
+step still stores the pre-reset next state.
+
 ``benchmarks/bench_scale.py`` measures the speedup vs the host loop (>=10x on
-CPU at the example's scale; larger once dispatch overhead dominates).
+CPU at the example's scale; larger once dispatch overhead dominates) and the
+flat-vs-factorized policy scaling sweep.
 """
 from __future__ import annotations
 
@@ -21,12 +36,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.marl import env as env_mod
+from repro.core.marl import spaces
 from repro.core.marl.ddpg import DDPGConfig, MADDPGState, act, maddpg_init, \
     maddpg_update
 from repro.core.marl.env import EnvConfig, EnvState
-from repro.core.marl.ou_noise import ou_init, ou_step
+from repro.core.marl.ou_noise import ou_step
 from repro.core.marl.replay import Replay, replay_add, replay_init, \
-    replay_sample
+    replay_sample, replay_sample_prioritized
+from repro.core.marl.spaces import Action, Observation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,31 +53,37 @@ class TrainConfig:
     replay_capacity: int = 2048
     sigma0: float = 0.3         # OU noise: linear decay sigma0 -> sigma_min
     sigma_min: float = 0.02
+    prioritized: bool = False   # |reward|-proportional replay sampling
 
 
 class TrainState(NamedTuple):
     env: EnvState
-    obs: jnp.ndarray
+    obs: Observation
     agent: MADDPGState
     buf: Replay
-    noise: jnp.ndarray
+    noise: Action               # OU state, same structure as the action
     key: jnp.ndarray
+
+
+def _sampler(tcfg: TrainConfig):
+    return replay_sample_prioritized if tcfg.prioritized else replay_sample
 
 
 def train_init(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
                key) -> TrainState:
     """Fresh TrainState: reset env (N twins, M BS agents), stacked-agent
-    MADDPG params, empty replay, OU noise state."""
+    MADDPG params for the configured policy, empty compact replay, OU noise
+    as an all-zero Action."""
     k_env, k_agent, k_run = jax.random.split(key, 3)
     st = env_mod.env_reset(cfg, k_env)
+    spec = spaces.space_spec(cfg)
     return TrainState(
         env=st,
         obs=env_mod.observe(cfg, st),
-        agent=maddpg_init(dcfg, k_agent, cfg.n_bs, cfg.state_dim,
-                          cfg.action_dim),
-        buf=replay_init(tcfg.replay_capacity, cfg.state_dim, cfg.n_bs,
-                        cfg.action_dim),
-        noise=ou_init((cfg.n_bs, cfg.action_dim)),
+        agent=maddpg_init(cfg, dcfg, k_agent),
+        buf=replay_init(tcfg.replay_capacity, spec.compact_dim, cfg.n_bs,
+                        spec.enc_dim),
+        noise=spaces.zeros_action(cfg),
         key=k_run,
     )
 
@@ -69,18 +92,23 @@ def train_step(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
                ts: TrainState, i) -> tuple:
     """One fused rollout-and-update step (scan body). ``i`` is the step
     index, used for the noise schedule and the warmup gate."""
-    key, k1, k2, k3 = jax.random.split(ts.key, 4)
+    key, k1, k2, k3, k4 = jax.random.split(ts.key, 5)
     frac = i.astype(jnp.float32) / max(tcfg.steps, 1)
     sigma = jnp.maximum(tcfg.sigma0 * (1.0 - frac), tcfg.sigma_min)
     noise = ou_step(ts.noise, k1, sigma=sigma)
-    a = jnp.clip(act(ts.agent, ts.obs) + noise, -1.0, 1.0)
+    a = spaces.clip_action(jax.tree_util.tree_map(
+        jnp.add, act(cfg, ts.agent, ts.obs, policy=dcfg.policy), noise))
     env2, r, info = env_mod.env_step(cfg, ts.env, a, k2)
     obs2 = env_mod.observe(cfg, env2)
-    buf = replay_add(ts.buf, ts.obs, a, r, obs2)
+    twin_feats = ts.obs.twin_feats
+    buf = replay_add(ts.buf, spaces.compact_obs(ts.obs),
+                     spaces.encode_action(cfg, a, twin_feats), r,
+                     spaces.compact_obs(obs2))
 
     def do_update(agent):
-        new, m = maddpg_update(dcfg, agent,
-                               replay_sample(buf, k3, dcfg.batch_size))
+        new, m = maddpg_update(cfg, dcfg, agent,
+                               _sampler(tcfg)(buf, k3, dcfg.batch_size),
+                               twin_feats)
         return new, m["critic_loss"], m["actor_loss"]
 
     def skip(agent):
@@ -88,14 +116,30 @@ def train_step(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
 
     agent, closs, aloss = jax.lax.cond(i >= tcfg.warmup, do_update, skip,
                                        ts.agent)
+
+    # episode boundary: soft-reset the dynamics (same twin population) so
+    # obs2 stored above is the true pre-reset next state, while the carried
+    # state starts the next episode
+    if cfg.episode_len > 0:
+        def reset(op):
+            env_b, k = op
+            env_n = env_mod.env_soft_reset(cfg, env_b, k)
+            return env_n, env_mod.observe(cfg, env_n)
+
+        env_next, obs_next = jax.lax.cond(
+            env2.t >= cfg.episode_len, reset, lambda op: (op[0], obs2),
+            (env2, k4))
+    else:
+        env_next, obs_next = env2, obs2
+
     metrics = {
         "system_time": info["system_time"],
         "reward": jnp.mean(r),
         "critic_loss": closs,
         "actor_loss": aloss,
     }
-    return TrainState(env=env2, obs=obs2, agent=agent, buf=buf, noise=noise,
-                      key=key), metrics
+    return TrainState(env=env_next, obs=obs_next, agent=agent, buf=buf,
+                      noise=noise, key=key), metrics
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "dcfg", "tcfg"))
@@ -120,20 +164,29 @@ def train_host_loop(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
     transition with the step's info dict."""
     ts = train_init(cfg, dcfg, tcfg, key)
     st, obs, agent, buf, noise, key = ts
+    twin_feats = obs.twin_feats
     step_jit = jax.jit(lambda s, a, k: env_mod.env_step(cfg, s, a, k))
+    act_jit = jax.jit(lambda ag, o: act(cfg, ag, o, policy=dcfg.policy))
     for i in range(tcfg.steps):
-        key, k1, k2, k3 = jax.random.split(key, 4)
+        key, k1, k2, k3, k4 = jax.random.split(key, 5)
         sigma = max(tcfg.sigma0 * (1 - i / max(tcfg.steps, 1)),
                     tcfg.sigma_min)
         noise = ou_step(noise, k1, sigma=sigma)
-        a = jnp.clip(act(agent, obs) + noise, -1, 1)
+        a = spaces.clip_action(jax.tree_util.tree_map(
+            jnp.add, act_jit(agent, obs), noise))
         st, r, info = step_jit(st, a, k2)
         obs2 = env_mod.observe(cfg, st)
-        buf = replay_add(buf, obs, a, r, obs2)
+        buf = replay_add(buf, spaces.compact_obs(obs),
+                         spaces.encode_action(cfg, a, twin_feats), r,
+                         spaces.compact_obs(obs2))
         obs = obs2
         if i >= tcfg.warmup:
             agent, _ = maddpg_update(
-                dcfg, agent, replay_sample(buf, k3, dcfg.batch_size))
+                cfg, dcfg, agent, _sampler(tcfg)(buf, k3, dcfg.batch_size),
+                twin_feats)
+        if cfg.episode_len > 0 and int(st.t) >= cfg.episode_len:
+            st = env_mod.env_soft_reset(cfg, st, k4)
+            obs = env_mod.observe(cfg, st)
         if on_step is not None:
             on_step(i, info)
     return TrainState(env=st, obs=obs, agent=agent, buf=buf, noise=noise,

@@ -113,8 +113,8 @@ def run_baselines(cfg: EnvConfig, batch: ScenarioBatch) -> dict:
                         batch.skew)
 
 
-def _rollout_one(cfg: EnvConfig, agent, n_steps: int, key, data_min,
-                 data_max, skew) -> dict:
+def _rollout_one(cfg: EnvConfig, agent, n_steps: int, policy: str, key,
+                 data_min, data_max, skew) -> dict:
     """Deterministic policy rollout on one scenario's env realization
     (the same realization ``run_baselines`` scores — see scenario_env)."""
     from repro.core.marl.ddpg import act
@@ -123,7 +123,7 @@ def _rollout_one(cfg: EnvConfig, agent, n_steps: int, key, data_min,
 
     def body(carry, k):
         st, obs = carry
-        a = act(agent, obs)
+        a = act(cfg, agent, obs, policy=policy)
         st2, r, info = env_mod.env_step(cfg, st, a, k)
         return (st2, env_mod.observe(cfg, st2)), info["system_time"]
 
@@ -133,12 +133,16 @@ def _rollout_one(cfg: EnvConfig, agent, n_steps: int, key, data_min,
             "final_system_time": times[-1]}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "n_steps"))
+@functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "policy"))
 def run_policy(cfg: EnvConfig, agent, batch: ScenarioBatch,
-               n_steps: int = 10) -> dict:
+               n_steps: int = 10, policy: str = "factorized") -> dict:
     """Evaluate one trained MADDPG policy across the whole scenario batch
-    (vmapped env rollouts, shared agent parameters). Returns a dict of
-    (S,) arrays: mean and final Eq. 17 system time per scenario."""
-    fn = functools.partial(_rollout_one, cfg, agent, n_steps)
+    (vmapped env rollouts, shared agent parameters, structured
+    observations/actions). ``policy`` names the agent's policy protocol
+    ("factorized" by default — the same factorized parameters evaluate at
+    any ``cfg.n_twins``, so one trained agent sweeps populations of
+    different sizes). Returns a dict of (S,) arrays: mean and final Eq. 17
+    system time per scenario."""
+    fn = functools.partial(_rollout_one, cfg, agent, n_steps, policy)
     return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
                         batch.skew)

@@ -8,6 +8,10 @@ MARL controller choosing (association, batch fractions, bandwidth).
 
 ``run_round`` is the faithful one-round reproduction; the Fig. 5/6 benchmarks
 iterate it under the three association policies (proposed / random / average).
+``marl_actions`` is the MARL round hook: it mirrors the system's current
+wireless/compute state into the structured MDP observation, queries a trained
+MADDPG agent (flat or factorized policy), and returns the decoded
+(assoc, b, tau) that ``run_round`` consumes.
 """
 from __future__ import annotations
 
@@ -78,6 +82,46 @@ class DTWNSystem:
         batch = {"images": jnp.asarray(self.x_test[idx]),
                  "labels": jnp.asarray(self.y_test[idx])}
         return float(cnn.accuracy(self.params, batch))
+
+    # ------------------------------------------------------------------
+    def marl_env_config(self):
+        """EnvConfig mirroring this system: N twins, M BSs, freq table, and
+        the observation's data normalization range set from the ACTUAL
+        shard sizes — otherwise twin features land outside the
+        [data_min, data_max] range a trained policy saw."""
+        from repro.core.marl.env import EnvConfig
+
+        return EnvConfig(n_twins=self.cfg.n_users, n_bs=self.cfg.n_bs,
+                         bs_freqs_ghz=tuple(self.cfg.bs_freqs_ghz),
+                         wireless=self.wireless,
+                         data_min=float(self.data_sizes.min()),
+                         data_max=float(self.data_sizes.max()))
+
+    def marl_actions(self, agent, *, policy: str = "factorized",
+                     env_cfg=None):
+        """FL round hook: controller actions for the system's CURRENT state.
+
+        Builds the structured Observation from the live wireless/compute
+        state (channels, distances, frequencies, twin data sizes), applies
+        the trained MADDPG ``agent`` under the named policy protocol, and
+        decodes onto the (18) feasible set. Returns host-side
+        ``(assoc (N,), b (N,), tau (M, C))`` ready for :meth:`run_round`.
+        A factorized agent trained at any population size works here —
+        its parameter count is independent of N.
+        """
+        from repro.core.marl import env as env_mod
+        from repro.core.marl.ddpg import act
+
+        cfg = env_cfg if env_cfg is not None else self.marl_env_config()
+        st = env_mod.EnvState(
+            freqs=jnp.asarray(self.freqs),
+            data_sizes=jnp.asarray(self.data_sizes),
+            h_up=self.h_up, h_down=self.h_down, dist=self.dist,
+            assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+            t=jnp.int32(self._round))
+        a = act(cfg, agent, env_mod.observe(cfg, st), policy=policy)
+        assoc, b, tau = env_mod.decode_actions(cfg, a)
+        return np.asarray(assoc), np.asarray(b), np.asarray(tau)
 
     # ------------------------------------------------------------------
     def run_round(self, assoc: np.ndarray, b: Optional[np.ndarray] = None,

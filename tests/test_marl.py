@@ -1,43 +1,212 @@
-"""MARL tests: env dynamics/constraints, replay, OU noise, MADDPG updates."""
+"""MARL tests: structured spaces, env dynamics/constraints, the policy
+protocol (flat-vs-factorized parity, N-independence, jit/vmap/grad),
+replay (compact rows, prioritized-lite sampling), OU noise, MADDPG
+updates, and the multi-episode scan trainer."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
-from repro.core.marl import (DDPGConfig, act, decode_actions, env_reset,
-                             env_step, maddpg_init, maddpg_update, observe,
-                             ou_init, ou_step, replay_add, replay_init,
-                             replay_sample)
+from repro.core import association as assoc_mod
+from repro.core.marl import (Action, DDPGConfig, Observation, TrainConfig,
+                             act, actor_param_count, clip_action,
+                             compact_obs, decode_actions, encode_action,
+                             env_reset, env_soft_reset, env_step, flatten_obs,
+                             maddpg_init, maddpg_update, obs_from_compact,
+                             observe, observe_flat, ou_init, ou_step,
+                             policy_apply, policy_init, replay_add,
+                             replay_init, replay_row_bytes, replay_sample,
+                             replay_sample_prioritized, space_spec, train,
+                             zeros_action)
 from repro.core.marl.env import EnvConfig
 
 KEY = jax.random.PRNGKey(7)
 CFG = EnvConfig(n_twins=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6))
 
 
-def test_env_reset_and_observe_shapes():
+# ---------------------------------------------------------------------------
+# structured observation / action spaces
+# ---------------------------------------------------------------------------
+
+
+def test_env_reset_and_observe_structured_shapes():
+    spec = space_spec(CFG)
     st = env_reset(CFG, KEY)
     obs = observe(CFG, st)
-    assert obs.shape == (CFG.state_dim,)
-    assert np.isfinite(np.asarray(obs)).all()
+    assert obs.bs_feats.shape == (CFG.n_bs, spec.bs_f)
+    assert obs.twin_feats.shape == (CFG.n_twins, spec.twin_f)
+    assert np.isfinite(np.asarray(obs.bs_feats)).all()
+    assert np.isfinite(np.asarray(obs.twin_feats)).all()
+    flat = observe_flat(CFG, st)
+    assert flat.shape == (CFG.state_dim,) == (spec.flat_obs_dim,)
+    np.testing.assert_allclose(np.asarray(flat),
+                               np.asarray(flatten_obs(obs)))
 
 
-def test_env_actions_projected_to_feasible_set():
-    actions = jax.random.uniform(KEY, (CFG.n_bs, CFG.action_dim),
-                                 minval=-1, maxval=1)
-    assoc, b, tau = decode_actions(CFG, actions)
+def test_compact_obs_roundtrip_and_n_independence():
+    st = env_reset(CFG, KEY)
+    obs = observe(CFG, st)
+    row = compact_obs(obs)
+    assert row.shape == (space_spec(CFG).compact_dim,)
+    rec = obs_from_compact(CFG, row, obs.twin_feats)
+    np.testing.assert_allclose(np.asarray(rec.bs_feats),
+                               np.asarray(obs.bs_feats))
+    # compact width does not depend on the twin count
+    big = EnvConfig(n_twins=10_000, n_bs=3, bs_freqs_ghz=CFG.bs_freqs_ghz)
+    assert space_spec(big).compact_dim == space_spec(CFG).compact_dim
+
+
+def test_env_actions_projected_to_feasible_set_both_formats():
+    # legacy flat layout still decodes
+    flat = jax.random.uniform(KEY, (CFG.n_bs, CFG.action_dim),
+                              minval=-1, maxval=1)
+    assoc, b, tau = decode_actions(CFG, flat)
     assert assoc.shape == (CFG.n_twins,)
     assert bool((assoc >= 0).all() and (assoc < CFG.n_bs).all())  # (18b)
-    np.testing.assert_allclose(np.asarray(tau.sum(0)), 1.0, rtol=1e-5)  # (18c)
+    np.testing.assert_allclose(np.asarray(tau.sum(0)), 1.0, rtol=1e-5)  # 18c
     assert bool((b >= CFG.lat.b_min).all() and (b <= CFG.lat.b_max).all())
+    # structured Action decodes identically when built from the same flat
+    from repro.core.marl import unflatten_action
+
+    a2, b2, tau2 = decode_actions(CFG, unflatten_action(CFG, flat))
+    np.testing.assert_array_equal(np.asarray(assoc), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(b), np.asarray(b2))
+    np.testing.assert_allclose(np.asarray(tau), np.asarray(tau2))
+
+
+def test_encode_action_shape_and_occupancy_column():
+    spec = space_spec(CFG)
+    st = env_reset(CFG, KEY)
+    obs = observe(CFG, st)
+    a = Action(
+        scores=jax.random.uniform(KEY, (CFG.n_bs, CFG.n_twins), minval=-1,
+                                  maxval=1),
+        b_ctl=jnp.zeros((CFG.n_bs,)),
+        tau=jnp.zeros((CFG.n_bs, spec.n_subchannels)))
+    e = encode_action(CFG, a, obs.twin_feats)
+    assert e.shape == (CFG.n_bs, spec.enc_dim)
+    assoc = jnp.argmax(a.scores, axis=0)
+    counts = np.bincount(np.asarray(assoc), minlength=CFG.n_bs)
+    np.testing.assert_allclose(np.asarray(e[:, 0]),
+                               counts / CFG.n_twins, rtol=1e-6)
+    # load-share column sums to 1 (every twin lands on exactly one BS)
+    np.testing.assert_allclose(float(e[:, 3].sum()), 1.0, rtol=1e-5)
 
 
 def test_env_step_reward_negative_latency():
     st = env_reset(CFG, KEY)
-    actions = jnp.zeros((CFG.n_bs, CFG.action_dim))
-    st2, r, info = env_step(CFG, st, actions, KEY)
+    st2, r, info = env_step(CFG, st, zeros_action(CFG), KEY)
     assert r.shape == (CFG.n_bs,)
     assert bool((r < 0).all())  # reward = -T_i, latency positive
     assert float(info["system_time"]) >= float(-r.max()) - 1e-6
     assert int(st2.t) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: wireless config must be n_bs-synced (cfg.wl)
+# ---------------------------------------------------------------------------
+
+
+def test_env_reset_syncs_wireless_shapes_at_n_bs_8():
+    """env_reset/env_step must sample channels and distances through the
+    n_bs-synced ``cfg.wl`` — with the default 5-BS WirelessConfig and
+    n_bs=8, raw ``cfg.wireless`` would produce (5, C) channels and break
+    every downstream (M, C) contraction."""
+    cfg = EnvConfig(n_twins=24, n_bs=8)
+    C = cfg.wl.n_subchannels
+    st = env_reset(cfg, KEY)
+    assert st.h_up.shape == (8, C)
+    assert st.h_down.shape == (8, C)
+    assert st.dist.shape == (8,)
+    obs = observe(cfg, st)
+    assert obs.bs_feats.shape == (8, space_spec(cfg).bs_f)
+    st2, r, _ = env_step(cfg, st, zeros_action(cfg), KEY)
+    assert r.shape == (8,)
+    st3 = env_soft_reset(cfg, st2, KEY)
+    assert st3.h_up.shape == (8, C) and st3.dist.shape == (8,)
+
+
+# ---------------------------------------------------------------------------
+# policy protocol: flat-vs-factorized parity, N-independence, jit/vmap/grad
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["flat", "factorized"])
+def test_policy_parity_shapes_and_feasible_set(policy):
+    """Parity harness: from one shared seed both protocol implementations
+    produce identically-shaped structured actions whose decode satisfies
+    the (18b)-(18d) feasible-set invariants."""
+    st = env_reset(CFG, KEY)
+    obs = observe(CFG, st)
+    dcfg = DDPGConfig(policy=policy, hidden=(32, 32))
+    agent = maddpg_init(CFG, dcfg, KEY)
+    a = act(CFG, agent, obs, policy=policy)
+    assert a.scores.shape == (CFG.n_bs, CFG.n_twins)
+    assert a.b_ctl.shape == (CFG.n_bs,)
+    assert a.tau.shape == (CFG.n_bs, space_spec(CFG).n_subchannels)
+    assert float(jnp.abs(a.scores).max()) <= 1.0 + 1e-6
+    assoc, b, tau = decode_actions(CFG, a)
+    checks = assoc_mod.check_constraints(CFG.lat, assoc, b, tau,
+                                         CFG.n_twins, CFG.n_bs)
+    assert all(checks.values()), checks
+
+
+def test_factorized_params_independent_of_n_and_transfer():
+    """The factorized actor's parameter count must not change with N, and
+    the SAME parameters must evaluate on a population of a different
+    size (the policy-transfer property)."""
+    small = EnvConfig(n_twins=10, n_bs=3, bs_freqs_ghz=CFG.bs_freqs_ghz)
+    big = EnvConfig(n_twins=1000, n_bs=3, bs_freqs_ghz=CFG.bs_freqs_ghz)
+    p_small = policy_init("factorized", KEY, small, (32, 32))
+    p_big = policy_init("factorized", KEY, big, (32, 32))
+    assert actor_param_count(p_small) == actor_param_count(p_big)
+    # transfer: params built at N=10 act on the N=1000 observation
+    obs_big = observe(big, env_reset(big, KEY))
+    a = policy_apply("factorized", big, p_small, obs_big)
+    assert a.scores.shape == (1000,)
+    assert np.isfinite(np.asarray(a.scores)).all()
+    # flat params DO scale with N (the oracle's known limitation)
+    f_small = policy_init("flat", KEY, small, (32, 32))
+    f_big = policy_init("flat", KEY, big, (32, 32))
+    assert actor_param_count(f_big) > actor_param_count(f_small)
+
+
+@pytest.mark.parametrize("policy", ["flat", "factorized"])
+def test_policy_protocol_jit_vmap_grad(policy):
+    cfg = CFG
+    params = policy_init(policy, KEY, cfg, (16, 16))
+    st = env_reset(cfg, KEY)
+    obs = observe(cfg, st)
+
+    # jit
+    a_jit = jax.jit(lambda p, o: policy_apply(policy, cfg, p, o))(params, obs)
+    a_ref = policy_apply(policy, cfg, params, obs)
+    np.testing.assert_allclose(np.asarray(a_jit.scores),
+                               np.asarray(a_ref.scores), rtol=1e-6)
+
+    # vmap over a batch of observations (twin_feats broadcast)
+    rows = jnp.stack([compact_obs(obs)] * 4)
+    batched = jax.vmap(lambda r: policy_apply(
+        policy, cfg, params, obs_from_compact(cfg, r, obs.twin_feats)))(rows)
+    assert batched.scores.shape == (4, cfg.n_twins)
+
+    # grad of a scalar loss through apply + encode_action wrt params
+    def loss(p):
+        a = policy_apply(policy, cfg, p, obs)
+        joint = Action(scores=a.scores[None].repeat(cfg.n_bs, 0),
+                       b_ctl=a.b_ctl[None].repeat(cfg.n_bs, 0),
+                       tau=a.tau[None].repeat(cfg.n_bs, 0))
+        return jnp.sum(encode_action(cfg, joint, obs.twin_feats) ** 2)
+
+    g = jax.grad(loss)(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.isfinite(np.asarray(x)).all() for x in leaves)
+    assert any(float(jnp.abs(x).max()) > 0 for x in leaves)
+
+
+# ---------------------------------------------------------------------------
+# OU noise
+# ---------------------------------------------------------------------------
 
 
 def test_ou_noise_is_mean_reverting():
@@ -45,6 +214,21 @@ def test_ou_noise_is_mean_reverting():
     for i in range(200):
         x = ou_step(x, jax.random.fold_in(KEY, i), sigma=0.05)
     assert float(jnp.abs(x).max()) < 3.0
+
+
+def test_ou_noise_on_action_pytree():
+    a = zeros_action(CFG)
+    a2 = ou_step(a, KEY, sigma=0.3)
+    assert isinstance(a2, Action)
+    assert a2.scores.shape == a.scores.shape
+    assert float(jnp.abs(a2.scores).max()) > 0  # noise actually injected
+    clipped = clip_action(jax.tree_util.tree_map(jnp.add, a, a2))
+    assert float(jnp.abs(clipped.scores).max()) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# replay: ring buffer, N-independent rows, prioritized-lite sampling
+# ---------------------------------------------------------------------------
 
 
 def test_replay_ring_buffer():
@@ -56,54 +240,138 @@ def test_replay_ring_buffer():
     assert int(buf.ptr) == 6
     # oldest entries overwritten: state slot 0 now holds i=4
     assert float(buf.state[0, 0]) == 4.0
-    s, a, r, s2 = replay_sample(buf, KEY, 8)
-    assert s.shape == (8, 3) and a.shape == (8, 2, 5)
+    s, e, r, s2 = replay_sample(buf, KEY, 8)
+    assert s.shape == (8, 3) and e.shape == (8, 2, 5)
+
+
+def test_replay_rows_independent_of_twin_count():
+    """The acceptance invariant: replay memory per transition must not
+    grow with N (the seed stored O(N) observations and O(M*N) actions)."""
+    sizes = {}
+    for n in (16, 4096):
+        cfg = EnvConfig(n_twins=n, n_bs=3, bs_freqs_ghz=CFG.bs_freqs_ghz)
+        spec = space_spec(cfg)
+        buf = replay_init(8, spec.compact_dim, cfg.n_bs, spec.enc_dim)
+        sizes[n] = replay_row_bytes(buf)
+    assert sizes[16] == sizes[4096], sizes
+
+
+def test_prioritized_sampling_prefers_high_reward_rows():
+    buf = replay_init(8, 2, 1, 2)
+    for i in range(8):
+        r = jnp.full((1,), 10.0 if i == 5 else 0.01)
+        buf = replay_add(buf, jnp.full(2, i, jnp.float32),
+                         jnp.zeros((1, 2)), r, jnp.zeros(2))
+    s, _, r, _ = replay_sample_prioritized(buf, KEY, 256)
+    frac_hot = float(jnp.mean((s[:, 0] == 5.0).astype(jnp.float32)))
+    assert frac_hot > 0.8, frac_hot  # ~10/(10+7*0.01) ~ 0.993 expected
+    # uniform sampler for comparison stays near 1/8
+    s_u, *_ = replay_sample(buf, KEY, 256)
+    frac_uni = float(jnp.mean((s_u[:, 0] == 5.0).astype(jnp.float32)))
+    assert frac_uni < 0.5
+
+
+# ---------------------------------------------------------------------------
+# MADDPG updates over compact batches
+# ---------------------------------------------------------------------------
 
 
 def test_maddpg_update_changes_params_and_reduces_critic_loss():
-    dcfg = DDPGConfig(batch_size=16, critic_lr=1e-2, actor_lr=1e-3)
-    m = maddpg_init(dcfg, KEY, n_agents=2, state_dim=6, act_dim=3)
-    ks = jax.random.split(KEY, 4)
-    s = jax.random.normal(ks[0], (16, 6))
-    a = jnp.tanh(jax.random.normal(ks[1], (16, 2, 3)))
-    r = -jnp.abs(jax.random.normal(ks[2], (16, 2)))
-    s2 = jax.random.normal(ks[3], (16, 6))
+    cfg = CFG
+    spec = space_spec(cfg)
+    dcfg = DDPGConfig(batch_size=16, critic_lr=1e-2, actor_lr=1e-3,
+                      hidden=(32, 32), policy="factorized")
+    m = maddpg_init(cfg, dcfg, KEY)
+    ks = jax.random.split(KEY, 5)
+    B, M = 16, cfg.n_bs
+    s = jax.random.normal(ks[0], (B, spec.compact_dim)) * 0.1
+    e = jax.random.uniform(ks[1], (B, M, spec.enc_dim), minval=-1, maxval=1)
+    r = -jnp.abs(jax.random.normal(ks[2], (B, M)))
+    s2 = jax.random.normal(ks[3], (B, spec.compact_dim)) * 0.1
+    twin_feats = observe(cfg, env_reset(cfg, ks[4])).twin_feats
     losses = []
     for _ in range(25):
-        m, metrics = maddpg_update(dcfg, m, (s, a, r, s2))
+        m, metrics = maddpg_update(cfg, dcfg, m, (s, e, r, s2), twin_feats)
         losses.append(float(metrics["critic_loss"]))
     assert losses[-1] < losses[0], losses[:3] + losses[-3:]
-    acts = act(m, s[0])
-    assert acts.shape == (2, 3)
-    assert float(jnp.abs(acts).max()) <= 1.0 + 1e-6
+    obs = obs_from_compact(cfg, s[0], twin_feats)
+    a = act(cfg, m, obs, policy=dcfg.policy)
+    assert a.scores.shape == (M, cfg.n_twins)
+    assert float(jnp.abs(a.scores).max()) <= 1.0 + 1e-6
 
 
 def test_maddpg_learns_toy_assignment():
-    """End-to-end micro-training on the DTWN env: the learned policy should
-    beat the average-association baseline latency in expectation."""
-    from repro.core import association as assoc_mod
-    from repro.core import comms, latency
+    """End-to-end micro-training on the DTWN env through the host loop:
+    training must stay finite and produce feasible decoded actions."""
+    from repro.core.marl import train_host_loop
 
     cfg = EnvConfig(n_twins=8, n_bs=2, bs_freqs_ghz=(3.6, 1.2))
-    dcfg = DDPGConfig(batch_size=32, gamma=0.9)
-    key = jax.random.PRNGKey(1)
-    st = env_reset(cfg, key)
-    obs = observe(cfg, st)
-    m = maddpg_init(dcfg, key, cfg.n_bs, cfg.state_dim, cfg.action_dim)
-    buf = replay_init(256, cfg.state_dim, cfg.n_bs, cfg.action_dim)
-    noise = ou_init((cfg.n_bs, cfg.action_dim))
-    step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
-    rewards = []
-    for i in range(120):
-        key, k1, k2, k3 = jax.random.split(key, 4)
-        noise = ou_step(noise, k1, sigma=max(0.3 * (1 - i / 100), 0.02))
-        a = jnp.clip(act(m, obs) + noise, -1, 1)
-        st, r, info = step_jit(st, a, k2)
-        obs2 = observe(cfg, st)
-        buf = replay_add(buf, obs, a, r, obs2)
-        obs = obs2
-        rewards.append(float(r.mean()))
-        if i > 32:
-            m, _ = maddpg_update(dcfg, m, replay_sample(buf, k3, dcfg.batch_size))
-    # training should not diverge; final rewards finite and bounded
-    assert np.isfinite(rewards).all()
+    dcfg = DDPGConfig(batch_size=32, gamma=0.9, hidden=(32, 32))
+    tcfg = TrainConfig(steps=60, warmup=32, replay_capacity=256)
+    ts = train_host_loop(cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    a = act(cfg, ts.agent, ts.obs, policy=dcfg.policy)
+    assoc, b, tau = decode_actions(cfg, a)
+    checks = assoc_mod.check_constraints(cfg.lat, assoc, b, tau,
+                                         cfg.n_twins, cfg.n_bs)
+    assert all(checks.values()), checks
+    assert int(ts.buf.size) == tcfg.steps
+
+
+# ---------------------------------------------------------------------------
+# episode resets inside the scan trainer (EnvConfig.episode_len)
+# ---------------------------------------------------------------------------
+
+
+def test_scan_trainer_episode_resets_keep_population():
+    cfg = EnvConfig(n_twins=8, n_bs=2, bs_freqs_ghz=(3.6, 1.2),
+                    episode_len=10)
+    dcfg = DDPGConfig(batch_size=8, hidden=(16, 16))
+    tcfg = TrainConfig(steps=25, warmup=5, replay_capacity=64)
+    ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(0))
+    # 25 steps with resets at t=10 and t=20 -> final env.t == 5
+    assert int(ts.env.t) == tcfg.steps % cfg.episode_len
+    # soft resets keep the twin population (the replay invariant)
+    st0 = jax.jit(lambda k: env_reset(cfg, k))(
+        jax.random.split(jax.random.PRNGKey(0), 3)[0])
+    np.testing.assert_allclose(np.asarray(ts.env.data_sizes),
+                               np.asarray(st0.data_sizes), rtol=1e-6)
+    assert np.isfinite(np.asarray(trace["system_time"])).all()
+
+
+def test_scan_trainer_prioritized_flag_runs():
+    cfg = EnvConfig(n_twins=8, n_bs=2, bs_freqs_ghz=(3.6, 1.2),
+                    episode_len=0)
+    dcfg = DDPGConfig(batch_size=8, hidden=(16, 16))
+    tcfg = TrainConfig(steps=20, warmup=4, replay_capacity=32,
+                       prioritized=True)
+    ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(2))
+    assert np.isfinite(np.asarray(trace["critic_loss"])).all()
+    assert float(jnp.abs(trace["critic_loss"][tcfg.warmup:]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# FL round hook
+# ---------------------------------------------------------------------------
+
+
+def test_fl_marl_actions_hook_shapes():
+    from repro.fl import DTWNSystem, FLConfig
+
+    rng = np.random.RandomState(0)
+    n = 64
+    data = ((rng.rand(n, 32, 32, 3).astype(np.float32),
+             rng.randint(0, 10, n)),
+            (rng.rand(16, 32, 32, 3).astype(np.float32),
+             rng.randint(0, 10, 16)), "synthetic")
+    sys = DTWNSystem(FLConfig(n_users=10, n_bs=3,
+                              bs_freqs_ghz=(2.6, 1.8, 3.6),
+                              local_iters=1, batch_size=8), data)
+    env_cfg = sys.marl_env_config()
+    assert env_cfg.n_twins == 10 and env_cfg.n_bs == 3
+    agent = maddpg_init(env_cfg, DDPGConfig(hidden=(16, 16)), KEY)
+    assoc, b, tau = sys.marl_actions(agent)
+    assert assoc.shape == (10,) and b.shape == (10,)
+    assert tau.shape == (3, env_cfg.wl.n_subchannels)
+    assert assoc.min() >= 0 and assoc.max() < 3
+    info = sys.run_round(assoc, b, tau, participating_users=3)
+    assert info["chain_valid"] and info["round_time_s"] > 0

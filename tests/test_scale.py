@@ -77,15 +77,45 @@ def test_round_time_50k_twins_smoke():
 
 @pytest.mark.slow
 def test_env_step_50k_twins_smoke():
+    from repro.core.marl import space_spec
+
     cfg = EnvConfig(n_twins=50_000, n_bs=8)
+    spec = space_spec(cfg)
     st = env_reset(cfg, KEY)
     obs = observe(cfg, st)
-    assert obs.shape == (cfg.state_dim,)
+    assert obs.bs_feats.shape == (cfg.n_bs, spec.bs_f)
+    assert obs.twin_feats.shape == (cfg.n_twins, spec.twin_f)
+    # legacy flat layout still drives the env
     actions = jnp.zeros((cfg.n_bs, cfg.action_dim))
     st2, r, info = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))(
         st, actions, KEY)
     assert r.shape == (cfg.n_bs,)
     assert np.isfinite(float(info["system_time"]))
+
+
+@pytest.mark.slow
+def test_factorized_policy_trains_at_10k_twins():
+    """Acceptance: the factorized policy trains end-to-end at N=10,000
+    through the jitted scan trainer with N-independent actor parameters
+    and replay rows (the flat policy's O(N) layers are infeasible here)."""
+    from repro.core.marl import (actor_param_count, policy_init,
+                                 replay_init, replay_row_bytes, space_spec)
+
+    cfg = EnvConfig(n_twins=10_000, n_bs=5)
+    dcfg = DDPGConfig(batch_size=16, hidden=(64, 64))
+    tcfg = TrainConfig(steps=12, warmup=4, replay_capacity=64)
+    ts, trace = train(cfg, dcfg, tcfg, jax.random.PRNGKey(0))
+    assert np.isfinite(np.asarray(trace["system_time"])).all()
+    assert float(jnp.abs(trace["critic_loss"][tcfg.warmup:]).max()) > 0.0
+    # N-independence of params and replay memory
+    small = EnvConfig(n_twins=100, n_bs=5)
+    assert (actor_param_count(policy_init("factorized", KEY, cfg,
+                                          dcfg.hidden))
+            == actor_param_count(policy_init("factorized", KEY, small,
+                                             dcfg.hidden)))
+    spec_s = space_spec(small)
+    buf_s = replay_init(8, spec_s.compact_dim, 5, spec_s.enc_dim)
+    assert replay_row_bytes(ts.buf) == replay_row_bytes(buf_s)
 
 
 # ---------------------------------------------------------------------------
@@ -101,7 +131,8 @@ def test_bs_frequencies_cycle_past_table_length():
     np.testing.assert_allclose(f, table[np.arange(9) % len(table)])
     st = env_reset(cfg, KEY)
     assert st.freqs.shape == (9,)
-    assert observe(cfg, st).shape == (cfg.state_dim,)
+    from repro.core.marl import observe_flat
+    assert observe_flat(cfg, st).shape == (cfg.state_dim,)
 
 
 # ---------------------------------------------------------------------------
@@ -180,13 +211,13 @@ def test_scenario_batch_baselines_shapes_and_order():
     assert float(out["greedy"].mean()) <= float(out["random"].mean()) + 1e-6
 
 
-def test_scenario_policy_rollout():
+@pytest.mark.parametrize("policy", ["flat", "factorized"])
+def test_scenario_policy_rollout(policy):
     from repro.core.marl import maddpg_init
 
     cfg = EnvConfig(n_twins=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6))
-    agent = maddpg_init(DDPGConfig(), KEY, cfg.n_bs, cfg.state_dim,
-                        cfg.action_dim)
+    agent = maddpg_init(cfg, DDPGConfig(policy=policy, hidden=(32, 32)), KEY)
     batch = scenario.make_batch(jax.random.fold_in(KEY, 1), 4)
-    out = scenario.run_policy(cfg, agent, batch, n_steps=5)
+    out = scenario.run_policy(cfg, agent, batch, n_steps=5, policy=policy)
     assert out["mean_system_time"].shape == (4,)
     assert np.isfinite(np.asarray(out["mean_system_time"])).all()
