@@ -1,7 +1,8 @@
 """Scale benchmarks: the segment-reduce backend sweep, the latency core at
-large N, the jitted scan trainer, and the policy-scaling sweep.
+large N, the jitted scan trainer, the policy-scaling sweep, and the
+twin-sharded vs single-device sweep.
 
-Four measurements:
+Five measurements:
   * segment-reduce backend sweep — us/call of every backend of
     ``repro.kernels.segment_reduce`` (onehot / sort / segment_sum /
     pallas-tiled / auto) over N x M, the table the auto-dispatch
@@ -21,16 +22,31 @@ Four measurements:
     ``_FLAT_MAX_TWINS`` (its first-layer matmul and O(N) action memory make
     larger N infeasible — that cliff is the point of the factorized
     redesign); skips are logged, not silent.
+  * sharded scaling (``--sharded``) — the twin-axis mesh path
+    (repro.core.sharding): us/call of Eq. 17 ``round_time`` and one env
+    observe+step, sharded over 8 forced host devices vs the single-device
+    path, N up to 10^6, plus the measured sharded-vs-single parity error.
+    Runs in a subprocess (the forced device count must precede jax init)
+    and merges ``sharded_scaling`` into ``results/bench/scale.json``.
+    HOST-DEVICE CAVEAT: 8 host "devices" share one CPU's cores, so these
+    numbers measure dispatch + collective overhead, NOT the memory-scaling
+    win — on real multi-chip hardware each shard has its own HBM/compute.
+    See docs/SCALING.md.
 
 ``python -m benchmarks.bench_scale --smoke`` runs a seconds-scale CI gate:
 tiny backend sweep + parity of every backend against the one-hot oracle,
 plus the policy-protocol gate (flat and factorized actions decode onto the
 (18) feasible set from one shared seed; factorized parameter count is
-verified N-independent), exiting nonzero on mismatch — kernel or policy
-regressions fail fast without waiting for the full bench.
+verified N-independent), plus the 8-host-device sharded parity gate
+(``--sharded-gate`` in a subprocess: latency Eqs. 12-17, env
+reset/observe/step, a short scan-train run, and the scenario runner must
+match the single-device path on ragged and empty-shard populations),
+exiting nonzero on mismatch — kernel, policy, or sharding regressions fail
+fast without waiting for the full bench.
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -51,6 +67,24 @@ SWEEP_BACKENDS = ("onehot", "sort", "segment_sum", "pallas", "auto")
 # beyond this twin count the flat policy's O(N) first/last layers and O(M*N)
 # joint-action transients make the sweep cell impractically slow on CPU
 _FLAT_MAX_TWINS = 2000
+
+
+def merge_into_scale(sections: dict) -> None:
+    """Merge ``sections`` into results/bench/scale.json, preserving every
+    key owned by the other entry points (main / --policies / --sharded all
+    write disjoint sections of the same file)."""
+    import json
+    import os
+
+    from benchmarks.common import RESULTS_DIR
+
+    path = os.path.join(RESULTS_DIR, "bench", "scale.json")
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update(sections)
+    save_result("scale", merged)
 
 
 def _time_segment_reduce(n: int, m: int, backend: str,
@@ -205,6 +239,214 @@ def _print_policy_sweep(table: dict) -> None:
             f"N={n:<7}{c}" for n, c in zip(ns, cells)))
 
 
+# ---------------------------------------------------------------------------
+# twin-sharded sweep + parity gate (run in a subprocess with 8 host devices:
+# --xla_force_host_platform_device_count must be set before jax initializes)
+# ---------------------------------------------------------------------------
+
+_SHARDED_DEVICES = 8
+
+
+def _spawn_sharded(flag: str, extra=()) -> str:
+    """Run ``python -m benchmarks.bench_scale <flag>`` under 8 forced host
+    devices and return its stdout (the --sharded-child prints JSON)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " "
+                        "--xla_force_host_platform_device_count="
+                        f"{_SHARDED_DEVICES}").strip()
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scale", flag, *extra],
+        capture_output=True, text=True, timeout=1800, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if out.returncode != 0:
+        raise RuntimeError(f"bench_scale {flag} subprocess failed:\n"
+                           f"{out.stdout[-2000:]}\n{out.stderr[-4000:]}")
+    return out.stdout
+
+
+def sharded_gate() -> None:
+    """The 8-host-device parity gate (CI): sharded latency / env / trainer /
+    scenario must match the single-device path, including ragged-N padding
+    (N % shards != 0) and empty-shard (N < shards) populations. Raises on
+    any mismatch."""
+    import numpy as np
+
+    from repro.core import latency as lat
+    from repro.core import scenario, sharding
+    from repro.core.marl import (act, env_reset, env_step, maddpg_init,
+                                 observe, sharded_env_reset, sharded_env_step,
+                                 sharded_observe, train, train_sharded)
+    from repro.core.marl.spaces import Action
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    assert ts.n_shards == _SHARDED_DEVICES, ts.n_shards
+    lp = lat.LatencyParams()
+
+    # latency Eqs. 12-17: divisible / ragged / empty-shard twin counts
+    for n, m in [(64, 5), (37, 5), (5, 3)]:
+        ks = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(0), n), 5)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+        data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+        freqs = jax.random.uniform(ks[3], (m,), minval=1e9, maxval=4e9)
+        up = jax.random.uniform(ks[4], (m,), minval=1e6, maxval=1e8)
+        pairs = [
+            (sharding.sharded_t_cmp(ts, lp, assoc, b, data, freqs),
+             lat.t_cmp(lp, assoc, b, data, freqs)),
+            (sharding.sharded_t_local_agg(ts, lp, assoc, freqs),
+             lat.t_local_agg(lp, assoc, freqs)),
+            (sharding.sharded_t_broadcast(ts, lp, assoc, up, m),
+             lat.t_broadcast(lp, assoc, up, m)),
+            (sharding.sharded_round_time(ts, lp, assoc, b, data, freqs, up,
+                                         up),
+             lat.round_time(lp, assoc, b, data, freqs, up, up)),
+            (sharding.sharded_round_time_per_bs(ts, lp, assoc, b, data,
+                                                freqs, up, up),
+             lat.round_time_per_bs(lp, assoc, b, data, freqs, up, up)),
+        ]
+        for got, ref in pairs:
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=1e-5, err_msg=f"N={n} M={m}")
+    print("sharded-gate: latency Eqs. 12-17 parity ok (incl. ragged/empty)")
+
+    # env reset/observe/step at ragged N
+    cfg = EnvConfig(n_twins=37, n_bs=5)
+    key = jax.random.PRNGKey(3)
+    st_s, st_r = sharded_env_reset(ts, cfg, key), env_reset(cfg, key)
+    obs_s, obs_r = sharded_observe(ts, cfg, st_s), observe(cfg, st_r)
+    np.testing.assert_allclose(np.asarray(obs_s.bs_feats),
+                               np.asarray(obs_r.bs_feats), rtol=1e-5,
+                               atol=1e-7)
+    agent = maddpg_init(cfg, DDPGConfig(hidden=(32, 32)), key)
+    a_r = act(cfg, agent, obs_r)
+    a_s = Action(scores=ts.pad_twin(a_r.scores, axis=1), b_ctl=a_r.b_ctl,
+                 tau=a_r.tau)
+    (st2_s, r_s, info_s) = sharded_env_step(ts, cfg, st_s, a_s, key)
+    (st2_r, r_r, info_r) = env_step(cfg, st_r, a_r, key)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_r), rtol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(ts.unpad_twin(info_s["assoc"], cfg.n_twins)),
+        np.asarray(info_r["assoc"]))
+    print("sharded-gate: env reset/observe/step parity ok")
+
+    # scan trainer (episode resets + MADDPG updates through the mesh)
+    cfg = EnvConfig(n_twins=23, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                    episode_len=6)
+    dcfg = DDPGConfig(batch_size=8, hidden=(32, 32))
+    tcfg = TrainConfig(steps=12, warmup=4, replay_capacity=32)
+    st1, tr1 = train(cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    st2, tr2 = train_sharded(ts, cfg, dcfg, tcfg, jax.random.PRNGKey(1))
+    for k in tr1:
+        np.testing.assert_allclose(np.asarray(tr1[k]), np.asarray(tr2[k]),
+                                   rtol=2e-3, atol=1e-5, err_msg=k)
+    diffs = [float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+        jax.tree_util.tree_leaves(st1.agent.actor),
+        jax.tree_util.tree_leaves(st2.agent.actor))]
+    assert max(diffs) < 1e-4, max(diffs)
+    print(f"sharded-gate: scan-trainer parity ok "
+          f"(max actor-param diff {max(diffs):.2e})")
+
+    # scenario runner
+    cfg = EnvConfig(n_twins=41, n_bs=7)
+    batch = scenario.make_batch(jax.random.PRNGKey(2), 5)
+    out = scenario.run_baselines_sharded(ts, cfg, batch)
+    ref = scenario.run_baselines(cfg, batch)
+    for k in ("random", "average"):
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, err_msg=k)
+    print("sharded-gate: scenario-runner parity ok")
+
+
+def _time_call(fn, *args, iters: int = 10) -> float:
+    """us/call of a jitted callable, excluding compile."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def sharded_sweep() -> dict:
+    """The sharded-vs-single sweep body (requires the forced-device-count
+    subprocess): Eq. 17 round_time and env-step us/call at each N, both
+    paths, plus parity residuals. N tops out at 10^6."""
+    import numpy as np
+
+    from repro.core import latency as lat
+    from repro.core import sharding
+    from repro.core.marl import (env_reset, env_step, sharded_env_reset,
+                                 sharded_env_step)
+    from repro.core.marl.spaces import Action
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    lp = lat.LatencyParams()
+    m = 8
+    ns = (10_000, 100_000, 1_000_000)
+    out = {"devices": ts.n_shards, "n_bs": m,
+           "round_time_us": {"single": {}, "sharded": {}},
+           "env_step_us": {"single": {}, "sharded": {}}, "parity": {}}
+
+    for n in ns:
+        ks = jax.random.split(jax.random.PRNGKey(n % 97), 3)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        b = jnp.full((n,), 0.5)
+        data = jax.random.uniform(ks[1], (n,), minval=100, maxval=800)
+        freqs = jnp.linspace(1e9, 4e9, m)
+        up = jnp.full((m,), 1e7)
+        f_single = jax.jit(
+            lambda a, bb, d: lat.round_time(lp, a, bb, d, freqs, up, up))
+        f_shard = jax.jit(functools.partial(
+            sharding.sharded_round_time, ts, lp, freqs=freqs, uplink=up,
+            downlink=up))
+        r_s = f_shard(assoc, b, data)
+        r_1 = f_single(assoc, b, data)
+        out["parity"][str(n)] = abs(float(r_s) - float(r_1)) / abs(
+            float(r_1))
+        out["round_time_us"]["single"][str(n)] = _time_call(
+            f_single, assoc, b, data)
+        out["round_time_us"]["sharded"][str(n)] = _time_call(
+            f_shard, assoc, b, data)
+
+        cfg = EnvConfig(n_twins=n, n_bs=m)
+        key = jax.random.fold_in(jax.random.PRNGKey(5), n % 89)
+        a0 = Action(
+            scores=jax.random.uniform(ks[2], (m, n), minval=-1, maxval=1),
+            b_ctl=jnp.zeros((m,)), tau=jnp.zeros((m, cfg.wl.n_subchannels)))
+
+        st8 = sharded_env_reset(ts, cfg, key)
+        a8 = Action(scores=ts.pad_twin(a0.scores, axis=1), b_ctl=a0.b_ctl,
+                    tau=a0.tau)
+        step8 = jax.jit(lambda s, a, k: sharded_env_step(ts, cfg, s, a, k))
+        out["env_step_us"]["sharded"][str(n)] = _time_call(
+            step8, st8, a8, key)
+
+        st1_ = env_reset(cfg, key)
+        step1 = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
+        out["env_step_us"]["single"][str(n)] = _time_call(step1, st1_, a0,
+                                                          key)
+
+        _, r8, _ = step8(st8, a8, key)
+        _, r1, _ = step1(st1_, a0, key)
+        np.testing.assert_allclose(np.asarray(r8), np.asarray(r1), rtol=1e-4)
+        print(f"sharded-sweep: N={n:>9,} round_time "
+              f"{out['round_time_us']['sharded'][str(n)]:>8.0f}us sharded vs "
+              f"{out['round_time_us']['single'][str(n)]:>8.0f}us single | "
+              f"env step {out['env_step_us']['sharded'][str(n)]:>8.0f}us vs "
+              f"{out['env_step_us']['single'][str(n)]:>8.0f}us | "
+              f"rel err {out['parity'][str(n)]:.1e}")
+    return out
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -252,6 +494,12 @@ def smoke() -> None:
     print(f"scale --smoke: flat/factorized decode parity ok; factorized "
           f"actor params N-independent ({p_small:,} at N=48 and N=4800)")
 
+    # --- 8-host-device sharded parity gate (subprocess: the forced device
+    # count must be set before jax initializes) ---
+    print(_spawn_sharded("--sharded-gate").strip())
+    print("scale --smoke: sharded parity gate ok on "
+          f"{_SHARDED_DEVICES} host devices")
+
 
 def main(reduced: bool = True):
     with Timer() as t:
@@ -298,7 +546,7 @@ def main(reduced: bool = True):
         "learning_check": learn,
         "policy_scaling": policy_sweep,
     }
-    save_result("scale", out)
+    merge_into_scale(out)
     _print_sweep(sweep, m=m)
     _print_policy_sweep(policy_sweep)
     print(f"scale: round_time N={n_seg} segment {us_seg:.0f}us | "
@@ -324,29 +572,43 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale backend parity + policy gate CI run")
+                    help="seconds-scale backend parity + policy gate + "
+                         "sharded parity gate CI run")
     ap.add_argument("--reduced", action="store_true",
                     help="CI-scale run instead of the full N=10^6 sweep")
     ap.add_argument("--policies", action="store_true",
                     help="run only the flat-vs-factorized scaling sweep "
                          "(merged into results/bench/scale.json)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the twin-sharded vs single-device sweep on 8 "
+                         "forced host devices (subprocess; merged into "
+                         "results/bench/scale.json as 'sharded_scaling')")
+    ap.add_argument("--sharded-gate", action="store_true",
+                    help="[subprocess child] 8-device sharded parity gate")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help="[subprocess child] sharded sweep body; prints "
+                         "JSON on the last stdout line")
     args = ap.parse_args()
     if args.smoke:
         smoke()
-    elif args.policies:
+    elif args.sharded_gate:
+        sharded_gate()
+    elif args.sharded_child:
         import json
-        import os
 
-        from benchmarks.common import RESULTS_DIR
+        print(json.dumps(sharded_sweep()))
+    elif args.sharded:
+        import json
 
+        stdout = _spawn_sharded("--sharded-child")
+        lines = [ln for ln in stdout.strip().splitlines() if ln]
+        for ln in lines[:-1]:
+            print(ln)
+        merge_into_scale({"sharded_scaling": json.loads(lines[-1])})
+        print("sharded_scaling merged into results/bench/scale.json")
+    elif args.policies:
         table = sweep_policy_scaling()
         _print_policy_sweep(table)
-        path = os.path.join(RESULTS_DIR, "bench", "scale.json")
-        payload = {}
-        if os.path.exists(path):
-            with open(path) as f:
-                payload = json.load(f)
-        payload["policy_scaling"] = table
-        save_result("scale", payload)
+        merge_into_scale({"policy_scaling": table})
     else:
         main(reduced=args.reduced)

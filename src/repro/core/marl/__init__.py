@@ -1,8 +1,10 @@
 from repro.core.marl.ddpg import (DDPGConfig, MADDPGState, act, maddpg_init,
-                                  maddpg_update)
+                                  maddpg_update, maddpg_update_impl)
 from repro.core.marl.env import (EnvConfig, EnvState, compare_with_baselines,
                                  decode_actions, env_reset, env_soft_reset,
-                                 env_step, observe, observe_flat)
+                                 env_step, observe, observe_flat,
+                                 sharded_env_reset, sharded_env_step,
+                                 sharded_observe)
 from repro.core.marl.networks import (POLICIES, actor_param_count,
                                       policy_apply, policy_init)
 from repro.core.marl.ou_noise import ou_init, ou_step
@@ -15,4 +17,5 @@ from repro.core.marl.spaces import (Action, Observation, SpaceSpec,
                                     obs_from_compact, space_spec,
                                     unflatten_action, zeros_action)
 from repro.core.marl.train import (TrainConfig, TrainState, train,
-                                   train_host_loop, train_init, train_step)
+                                   train_host_loop, train_init, train_sharded,
+                                   train_step)

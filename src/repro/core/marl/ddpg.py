@@ -33,6 +33,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import sharding
 from repro.core.marl import networks as nets
 from repro.core.marl.spaces import (Action, Observation, encode_action,
                                     obs_from_compact, space_spec)
@@ -112,15 +113,25 @@ def act(cfg, state: MADDPGState, obs: Observation, *,
         lambda p: nets.policy_apply(policy, cfg, p, obs))(state.actor)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "dcfg"))
-def maddpg_update(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
-                  twin_feats) -> tuple:
+def maddpg_update_impl(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
+                       twin_feats) -> tuple:
     """One gradient step for all agents over a compact replay batch.
 
     batch = (s_c, enc, r, s2_c) with s_c/s2_c: (B, compact_dim) compact
     states, enc: (B, M, E) stored joint-action encodings, r: (B, M).
     ``twin_feats`` is the episode's static (N, F) matrix — combined with a
     compact row it reconstructs the full Observation for the actors.
+
+    Un-jitted body — the sharded scan trainer must trace it inside its
+    twin ``shard_map`` scope, where the jitted wrapper's cache (keyed on
+    shapes only, blind to the scope) could replay a collective-free
+    single-device jaxpr. Inside such a scope the actor forward crosses
+    shards via psum (attention pooling + action encodings), jax's autodiff
+    through those collectives is exact under replication checking, and the
+    gradients are stamped replicated via ``sharding.pmean_in_scope``
+    (value-preserving — see repro.core.sharding). Everything the update
+    *consumes* (replay rows) and *produces* (params, opt state) is
+    replicated: the update itself needs no shard-aware state.
     """
     s_c, enc, r, s2_c = batch
     B, M, E = enc.shape
@@ -147,6 +158,7 @@ def maddpg_update(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
     closs, cgrads = jax.vmap(
         jax.value_and_grad(critic_loss_i), in_axes=(0, 0, 1))(
             st.critic, st.target_critic, r)
+    cgrads = sharding.pmean_in_scope(cgrads)
     critic, c_opt = _opt_update(st.critic, cgrads, st.critic_opt,
                                 dcfg.critic_lr)
 
@@ -170,6 +182,7 @@ def maddpg_update(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
     aloss, agrads = jax.vmap(
         jax.value_and_grad(actor_loss_i), in_axes=(0, 0, 0))(
             st.actor, critic, agent_ids)
+    agrads = sharding.pmean_in_scope(agrads)
     actor, a_opt = _opt_update(st.actor, agrads, st.actor_opt, dcfg.actor_lr)
 
     # Eq. 24-25 soft target updates
@@ -183,3 +196,9 @@ def maddpg_update(cfg, dcfg: DDPGConfig, st: MADDPGState, batch,
         actor_opt=a_opt, critic_opt=c_opt,
     )
     return new, {"critic_loss": jnp.mean(closs), "actor_loss": jnp.mean(aloss)}
+
+
+# jitted convenience wrapper — the public single-device surface (the fl
+# server, examples, and host loop call this directly)
+maddpg_update = functools.partial(jax.jit, static_argnames=("cfg", "dcfg"))(
+    maddpg_update_impl)

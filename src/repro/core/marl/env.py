@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
-from repro.core import comms, latency
+from repro.core import comms, latency, sharding
 from repro.core.marl import spaces
 from repro.core.marl.spaces import Action, Observation
+from repro.core.sharding import TWIN_AXIS, TwinSharding
 from repro.kernels.segment_reduce import segment_count, segment_reduce
 
 
@@ -103,12 +104,16 @@ def observe(cfg: EnvConfig, st: EnvState) -> Observation:
       episode (the paper's state carries per-twin information only through
       the fixed D).
     The K_i / load columns go through the segment-reduce dispatch, so
-    observation stays O(N+M) at large twin counts.
+    observation stays O(N+M) at large twin counts. Inside a twin-sharding
+    scope ``st`` carries this shard's twin block: the per-BS statistics
+    become psum'd partials (``backend="auto"`` resolves to ``"sharded"``),
+    so ``bs_feats`` is replicated and only ``twin_feats`` stays local —
+    the Observation is N-independent per device.
     """
     k_counts = segment_count(st.assoc, cfg.n_bs)
     d = st.data_sizes / cfg.data_max
     load = segment_reduce(d, st.assoc, cfg.n_bs) / jnp.maximum(
-        jnp.sum(d), 1e-9)
+        sharding.twin_sum(d), 1e-9)
     bs_feats = jnp.concatenate([
         (st.freqs / 3.6e9)[:, None],
         (k_counts / cfg.n_twins)[:, None],
@@ -117,7 +122,7 @@ def observe(cfg: EnvConfig, st: EnvState) -> Observation:
         (st.dist / cfg.wl.max_dist_m)[:, None],
     ], axis=1).astype(jnp.float32)
     twin_feats = jnp.stack(
-        [d, d * cfg.n_twins / jnp.maximum(jnp.sum(d), 1e-9)],
+        [d, d * cfg.n_twins / jnp.maximum(sharding.twin_sum(d), 1e-9)],
         axis=1).astype(jnp.float32)
     return Observation(bs_feats=bs_feats, twin_feats=twin_feats)
 
@@ -130,18 +135,29 @@ def observe_flat(cfg: EnvConfig, st: EnvState) -> jnp.ndarray:
 
 def env_reset(cfg: EnvConfig, key) -> EnvState:
     """Fresh env: new twin population, channels, distances (all through the
-    n_bs-synced ``cfg.wl``), round-robin association."""
+    n_bs-synced ``cfg.wl``), round-robin association.
+
+    Inside a twin-sharding scope the twin-indexed fields come back as this
+    shard's (N_local,) block of the *same global draw* (full draw + local
+    slice, so the sharded env is bit-identical to the single-device one);
+    padding rows carry ``data=0`` and ``assoc=n_bs`` (dropped by every
+    segment reduction). The (M,)-shaped fields replicate — every shard
+    draws them from the same key.
+    """
     ks = jax.random.split(key, 5)
     freqs = bs_frequencies(cfg)
-    data = jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
-                              maxval=cfg.data_max)
+    data = sharding.localize(
+        jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
+                           maxval=cfg.data_max), fill=0.0)
     return EnvState(
         freqs=freqs,
         data_sizes=data,
         h_up=comms.sample_channel(cfg.wl, ks[1]),
         h_down=comms.sample_channel(cfg.wl, ks[2]),
         dist=comms.sample_distances(cfg.wl, ks[3]),
-        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        assoc=sharding.localize(
+            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+            fill=cfg.n_bs),
         t=jnp.int32(0),
     )
 
@@ -152,7 +168,8 @@ def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
     KEEPING the twin population ``data_sizes``. Twin features therefore
     stay constant across episodes of one training run — required for the
     N-independent replay (twin_feats are stored once, not per row). Used
-    by the scan trainer's ``episode_len`` gate."""
+    by the scan trainer's ``episode_len`` gate. Scope-aware like
+    :func:`env_reset` (the kept population is already local)."""
     ks = jax.random.split(key, 3)
     return EnvState(
         freqs=bs_frequencies(cfg),
@@ -160,7 +177,9 @@ def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
         h_up=comms.sample_channel(cfg.wl, ks[0]),
         h_down=comms.sample_channel(cfg.wl, ks[1]),
         dist=comms.sample_distances(cfg.wl, ks[2]),
-        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        assoc=sharding.localize(
+            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+            fill=cfg.n_bs),
         t=jnp.int32(0),
     )
 
@@ -170,11 +189,14 @@ def decode_actions(cfg: EnvConfig, actions: Union[Action, jnp.ndarray]):
 
     ``actions`` is either the structured ``spaces.Action`` (native) or the
     legacy flat ``(M, N+1+C)`` array in [-1,1] (auto-unflattened). Returns
-    ``(assoc (N,), b (N,), tau (M,C))``.
+    ``(assoc (N,), b (N,), tau (M,C))`` — shard-local (N_local,) twin
+    vectors inside a twin-sharding scope, where padding columns decode to
+    the out-of-range id ``n_bs`` so they vanish from every reduction.
     """
     if not isinstance(actions, Action):
         actions = spaces.unflatten_action(cfg, actions)
-    assoc = assoc_mod.assoc_from_scores(actions.scores)
+    assoc = sharding.mask_twins(
+        assoc_mod.assoc_from_scores(actions.scores), cfg.n_bs)
     # each twin uses its chosen BS's batch control
     b = assoc_mod.project_batch(cfg.lat, actions.b_ctl)[assoc]  # (N,)
     # softmax over the BS axis -> each sub-channel's time shares sum to 1 (18c)
@@ -240,3 +262,79 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     info = {"system_time": system_t, "assoc": assoc, "b": b, "tau": tau,
             "uplink": up}
     return nxt, reward, info
+
+
+# ---------------------------------------------------------------------------
+# twin-axis sharded entry points (repro.core.sharding)
+# ---------------------------------------------------------------------------
+#
+# Each wrapper shard_maps the UNCHANGED function above over a TwinSharding
+# mesh: the scope flips segment_reduce's dispatch to local-reduce + psum and
+# activates the masked twin_* statistics, so per-BS state is replicated and
+# only (N,)-indexed state is ever local. EnvState/Observation/Action pytrees
+# keep their types; twin-indexed leaves are padded to ts.padded_n(N) and laid
+# out over the mesh. Single-device meshes are a strict no-op (the plain
+# function runs, unpadded).
+
+from jax.sharding import PartitionSpec as _P  # noqa: E402  (wrapper-only)
+
+_ENV_SPECS = EnvState(freqs=_P(), data_sizes=_P(TWIN_AXIS), h_up=_P(),
+                      h_down=_P(), dist=_P(), assoc=_P(TWIN_AXIS), t=_P())
+_OBS_SPECS = Observation(bs_feats=_P(), twin_feats=_P(TWIN_AXIS))
+_ACT_SPECS = Action(scores=_P(None, TWIN_AXIS), b_ctl=_P(), tau=_P())
+
+
+def sharded_env_reset(ts: TwinSharding, cfg: EnvConfig, key) -> EnvState:
+    """:func:`env_reset` over the mesh: twin-indexed fields come back
+    padded to ``ts.padded_n(cfg.n_twins)`` and sharded over ``"twin"``;
+    everything else is replicated. Bit-identical to the single-device
+    reset (full draw + per-shard slice)."""
+    if ts.n_shards == 1:
+        return env_reset(cfg, key)
+
+    def local(k):
+        with ts.scope(cfg.n_twins):
+            return env_reset(cfg, k)
+
+    return ts.shard_map(local, in_specs=(_P(),), out_specs=_ENV_SPECS)(key)
+
+
+def sharded_observe(ts: TwinSharding, cfg: EnvConfig,
+                    st: EnvState) -> Observation:
+    """:func:`observe` over the mesh: ``bs_feats`` replicated (psum'd
+    per-BS statistics), ``twin_feats`` sharded. ``st`` must use the padded
+    sharded layout of :func:`sharded_env_reset`."""
+    if ts.n_shards == 1:
+        return observe(cfg, st)
+
+    def local(s):
+        with ts.scope(cfg.n_twins):
+            return observe(cfg, s)
+
+    return ts.shard_map(local, in_specs=(_ENV_SPECS,),
+                        out_specs=_OBS_SPECS)(st)
+
+
+def sharded_env_step(ts: TwinSharding, cfg: EnvConfig, st: EnvState,
+                     actions: Action, key):
+    """:func:`env_step` over the mesh. ``actions`` must be the structured
+    ``Action`` with ``scores (M, padded_n)`` (pad via
+    ``ts.pad_twin(scores, axis=1)`` — fill value is irrelevant, padding
+    columns are masked at decode). Rewards/info scalars are replicated;
+    ``info["assoc"]``/``info["b"]`` stay twin-sharded."""
+    if ts.n_shards == 1:
+        return env_step(cfg, st, actions, key)
+    if not isinstance(actions, Action):
+        raise TypeError("sharded_env_step requires the structured "
+                        "spaces.Action (legacy flat layouts are "
+                        "single-device only)")
+
+    def local(s, a, k):
+        with ts.scope(cfg.n_twins):
+            return env_step(cfg, s, a, k)
+
+    info_specs = {"system_time": _P(), "assoc": _P(TWIN_AXIS),
+                  "b": _P(TWIN_AXIS), "tau": _P(), "uplink": _P()}
+    return ts.shard_map(
+        local, in_specs=(_ENV_SPECS, _ACT_SPECS, _P()),
+        out_specs=(_ENV_SPECS, _P(), info_specs))(st, actions, key)

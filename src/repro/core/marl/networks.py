@@ -34,6 +34,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import sharding
 from repro.core.marl.spaces import (Action, Observation, compact_obs,
                                     flatten_obs, space_spec)
 
@@ -109,11 +110,14 @@ def factorized_policy_apply(cfg, params, obs: Observation) -> Action:
     Global context = MLP(compact_obs ++ attention-pooled twin features);
     per-twin score_n = tanh(head([twin_feat_n, context])). The twin axis
     only appears as a batched matmul, so the same parameters evaluate at
-    any population size.
+    any population size — and, inside a twin-sharding scope, as this
+    shard's (N_local, F) block: the attention pooling and compact_obs
+    statistics cross shards via psum (``repro.core.sharding``), the trunk
+    and b/tau heads run replicated, and only the per-twin scoring matmul
+    stays local. Scores come back shard-local (N_local,).
     """
     tf = obs.twin_feats                                   # (N, F)
-    attn = jax.nn.softmax(tf @ params["attn_q"])          # (N,)
-    pooled = attn @ tf                                    # (F,)
+    pooled = sharding.twin_softmax_pool(tf @ params["attn_q"], tf)  # (F,)
     g = jax.nn.relu(mlp_apply(params["trunk"],
                               jnp.concatenate([compact_obs(obs), pooled])))
     h = jax.nn.relu(tf @ params["wt"] + g @ params["wg"] + params["bh"])

@@ -17,12 +17,23 @@ def ou_init(shape, mu: float = 0.0):
     return jnp.full(shape, mu, jnp.float32)
 
 
+def ou_leaf_step(x, eps, *, mu: float = 0.0, theta: float = 0.15,
+                 sigma: float = 0.2, dt: float = 1.0):
+    """The OU dynamics for one leaf given a pre-drawn standard normal
+    ``eps`` of the same shape: x + theta (mu - x) dt + sigma sqrt(dt) eps.
+    The single source of the update formula — ``ou_step`` applies it per
+    leaf, and the twin-sharded trainer applies it to sliced global draws
+    (``repro.core.marl.train._ou_step``) so both paths share the same
+    constants and dynamics."""
+    return x + theta * (mu - x) * dt + sigma * (dt ** 0.5) * eps
+
+
 def ou_step(state, key, *, mu: float = 0.0, theta: float = 0.15,
             sigma: float = 0.2, dt: float = 1.0):
     """x' = x + theta (mu - x) dt + sigma sqrt(dt) N(0,1), per pytree leaf."""
     leaves, treedef = jax.tree_util.tree_flatten(state)
     keys = jax.random.split(key, len(leaves))
-    new = [x + theta * (mu - x) * dt
-           + sigma * (dt ** 0.5) * jax.random.normal(k, jnp.shape(x))
+    new = [ou_leaf_step(x, jax.random.normal(k, jnp.shape(x)), mu=mu,
+                        theta=theta, sigma=sigma, dt=dt)
            for x, k in zip(leaves, keys)]
     return jax.tree_util.tree_unflatten(treedef, new)

@@ -42,6 +42,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import sharding
 from repro.kernels.segment_reduce import segment_count, segment_reduce
 
 # feature layout constants (documented in docs/ARCHITECTURE.md)
@@ -109,10 +110,16 @@ def flatten_obs(obs: Observation) -> jnp.ndarray:
 def pool_twins(twin_feats: jnp.ndarray) -> jnp.ndarray:
     """(N, F) -> (N_POOLS*F,) permutation-invariant population summary:
     per-column mean/max/min/std. The mean-pooling half of the factorized
-    policy's global context (attention pooling lives in networks.py)."""
+    policy's global context (attention pooling lives in networks.py).
+
+    Inside a twin-sharding scope ``twin_feats`` is this shard's
+    (N_local, F) block and the statistics are the *global* (masked,
+    psum'd) ones, so the pooled summary — and hence ``compact_obs`` and
+    every replay row — is replicated across shards.
+    """
     return jnp.concatenate([
-        jnp.mean(twin_feats, axis=0), jnp.max(twin_feats, axis=0),
-        jnp.min(twin_feats, axis=0), jnp.std(twin_feats, axis=0)])
+        sharding.twin_mean(twin_feats, 0), sharding.twin_max(twin_feats, 0),
+        sharding.twin_min(twin_feats, 0), sharding.twin_std(twin_feats, 0)])
 
 
 def compact_obs(obs: Observation) -> jnp.ndarray:
@@ -152,10 +159,13 @@ def unflatten_action(cfg, v: jnp.ndarray) -> Action:
 
 
 def zeros_action(cfg) -> Action:
-    """All-zero joint Action — the OU-noise initial state and shape spec."""
+    """All-zero joint Action — the OU-noise initial state and shape spec.
+    Inside a twin-sharding scope the scores leaf is shard-local
+    (M, N_local); b/tau are replicated-shaped either way."""
     spec = space_spec(cfg)
+    n = sharding.local_twin_count(spec.n_twins)
     return Action(
-        scores=jnp.zeros((spec.n_bs, spec.n_twins), jnp.float32),
+        scores=jnp.zeros((spec.n_bs, n), jnp.float32),
         b_ctl=jnp.zeros((spec.n_bs,), jnp.float32),
         tau=jnp.zeros((spec.n_bs, spec.n_subchannels), jnp.float32))
 
@@ -182,20 +192,28 @@ def encode_action(cfg, a: Action, twin_feats: jnp.ndarray) -> jnp.ndarray:
       5+ the agent's raw bandwidth bids tau_i (C,).
 
     All per-BS statistics route through PR 2's segment-reduce dispatch, so
-    the encoding costs O(N + M) and stays jit/vmap/grad-safe.
+    the encoding costs O(N + M) and stays jit/vmap/grad-safe. Inside a
+    twin-sharding scope, ``a.scores``/``twin_feats`` are this shard's
+    (M, N_local)/(N_local, F) blocks: padding columns are masked out of
+    the association and the mean, the segment reductions psum their per-BS
+    partials, and the returned encoding is replicated — which is what keeps
+    the replay buffer shard-free (``repro.core.sharding``).
     """
     from repro.core.association import assoc_from_scores
 
     m = a.scores.shape[0]
-    n = a.scores.shape[1]
-    assoc = assoc_from_scores(a.scores)       # the same (18b) decode as env
+    n = sharding.global_twin_count(a.scores.shape[1])
+    assoc = sharding.mask_twins(           # the same (18b) decode as env;
+        assoc_from_scores(a.scores), m)    # padded twins -> id m (dropped)
     win = jnp.max(a.scores, axis=0)                            # (N,)
     counts = segment_count(assoc, m)                           # (M,)
     k_hard = counts / n
-    k_soft = jnp.mean(jax.nn.softmax(a.scores * _SOFT_TEMP, axis=0), axis=1)
+    k_soft = sharding.twin_mean(
+        jax.nn.softmax(a.scores * _SOFT_TEMP, axis=0), axis=1)
     win_mean = segment_reduce(win, assoc, m) / jnp.maximum(counts, 1.0)
     d = twin_feats[:, 0]
-    load = segment_reduce(d, assoc, m) / jnp.maximum(jnp.sum(d), 1e-9)
+    load = segment_reduce(d, assoc, m) / jnp.maximum(
+        sharding.twin_sum(d), 1e-9)
     return jnp.concatenate(
         [k_hard[:, None], k_soft[:, None], win_mean[:, None], load[:, None],
          a.b_ctl[:, None], a.tau], axis=1)

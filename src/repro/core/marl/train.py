@@ -35,15 +35,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import sharding
 from repro.core.marl import env as env_mod
 from repro.core.marl import spaces
 from repro.core.marl.ddpg import DDPGConfig, MADDPGState, act, maddpg_init, \
-    maddpg_update
+    maddpg_update, maddpg_update_impl
 from repro.core.marl.env import EnvConfig, EnvState
-from repro.core.marl.ou_noise import ou_step
+from repro.core.marl.ou_noise import ou_leaf_step, ou_step
 from repro.core.marl.replay import Replay, replay_add, replay_init, \
     replay_sample, replay_sample_prioritized
 from repro.core.marl.spaces import Action, Observation
+from repro.core.sharding import TWIN_AXIS, TwinSharding
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,63 @@ class TrainState(NamedTuple):
 
 def _sampler(tcfg: TrainConfig):
     return replay_sample_prioritized if tcfg.prioritized else replay_sample
+
+
+def _select(pred, on_true, on_false):
+    """Branchless pytree select — the sharded trainer's stand-in for
+    ``lax.cond`` (see the scope note in ``train_step``). ``pred`` is a
+    scalar bool; both sides are already computed."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(pred, a, b),
+                                  on_true, on_false)
+
+
+def _stamp_carry(ts0: TrainState) -> TrainState:
+    """Tag the replicated leaves of the initial scan carry for the
+    replication checker (``sharding.stamp_replicated`` — value-preserving
+    pmean/pmax): the checker cannot trace zero-initialized replay /
+    optimizer / noise state to a collective, but the scan body returns
+    those leaves psum-derived, and carry tags must match. The four
+    twin-sharded leaves (env data_sizes/assoc, obs.twin_feats,
+    noise.scores) pass through untouched."""
+    stamp = sharding.stamp_replicated
+    return TrainState(
+        env=ts0.env._replace(freqs=stamp(ts0.env.freqs),
+                             h_up=stamp(ts0.env.h_up),
+                             h_down=stamp(ts0.env.h_down),
+                             dist=stamp(ts0.env.dist), t=stamp(ts0.env.t)),
+        obs=Observation(bs_feats=stamp(ts0.obs.bs_feats),
+                        twin_feats=ts0.obs.twin_feats),
+        agent=stamp(ts0.agent),
+        buf=stamp(ts0.buf),
+        noise=Action(scores=ts0.noise.scores, b_ctl=stamp(ts0.noise.b_ctl),
+                     tau=stamp(ts0.noise.tau)),
+        key=stamp(ts0.key),
+    )
+
+
+def _ou_step(cfg: EnvConfig, noise: Action, key, sigma) -> Action:
+    """OU step on the structured noise, twin-sharding aware.
+
+    Outside a scope this is exactly ``ou_noise.ou_step``. Inside, the
+    carried noise's ``scores`` leaf is shard-local (M, N_local) while the
+    single-device trainer draws (M, N): to keep the sharded trainer
+    bit-identical, every shard draws the *full* (M, N) normal from the same
+    per-leaf key ``ou_step`` would use (Action field order: scores, b_ctl,
+    tau) and slices its own columns; the dynamics themselves are the
+    shared ``ou_leaf_step``. The O(M*N) draw is transient; padded columns
+    get noise too, which is harmless — they are masked at decode.
+    """
+    if sharding.in_scope() is None:
+        return ou_step(noise, key, sigma=sigma)
+    k_s, k_b, k_t = jax.random.split(key, 3)
+    step = functools.partial(ou_leaf_step, sigma=sigma)
+    m = noise.scores.shape[0]
+    eps_s = sharding.slice_local(
+        jax.random.normal(k_s, (m, cfg.n_twins)), axis=1)
+    return Action(
+        scores=step(noise.scores, eps_s),
+        b_ctl=step(noise.b_ctl, jax.random.normal(k_b, noise.b_ctl.shape)),
+        tau=step(noise.tau, jax.random.normal(k_t, noise.tau.shape)))
 
 
 def train_init(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
@@ -95,7 +154,7 @@ def train_step(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
     key, k1, k2, k3, k4 = jax.random.split(ts.key, 5)
     frac = i.astype(jnp.float32) / max(tcfg.steps, 1)
     sigma = jnp.maximum(tcfg.sigma0 * (1.0 - frac), tcfg.sigma_min)
-    noise = ou_step(ts.noise, k1, sigma=sigma)
+    noise = _ou_step(cfg, ts.noise, k1, sigma)
     a = spaces.clip_action(jax.tree_util.tree_map(
         jnp.add, act(cfg, ts.agent, ts.obs, policy=dcfg.policy), noise))
     env2, r, info = env_mod.env_step(cfg, ts.env, a, k2)
@@ -106,16 +165,29 @@ def train_step(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
                      spaces.compact_obs(obs2))
 
     def do_update(agent):
-        new, m = maddpg_update(cfg, dcfg, agent,
-                               _sampler(tcfg)(buf, k3, dcfg.batch_size),
-                               twin_feats)
+        # the un-jitted impl: under the sharded trainer this body must be
+        # traced inside the twin scope (the jitted wrapper's cache is
+        # blind to it); under the single-device trainer we are inside the
+        # train() jit anyway, so the wrapper would only be inlined.
+        new, m = maddpg_update_impl(cfg, dcfg, agent,
+                                    _sampler(tcfg)(buf, k3, dcfg.batch_size),
+                                    twin_feats)
         return new, m["critic_loss"], m["actor_loss"]
 
     def skip(agent):
         return agent, jnp.float32(0.0), jnp.float32(0.0)
 
-    agent, closs, aloss = jax.lax.cond(i >= tcfg.warmup, do_update, skip,
-                                       ts.agent)
+    # Inside a twin scope, lax.cond cannot branch-match a psum-carrying
+    # update against the constant skip (the 0.4.x replication checker
+    # rejects the pair), so both branches run and a jnp.where selects —
+    # value-identical, and the elementwise rep rule accepts mixed tags.
+    # Single-device keeps the work-skipping cond.
+    if sharding.in_scope() is None:
+        agent, closs, aloss = jax.lax.cond(i >= tcfg.warmup, do_update,
+                                           skip, ts.agent)
+    else:
+        agent, closs, aloss = _select(i >= tcfg.warmup, do_update(ts.agent),
+                                      skip(ts.agent))
 
     # episode boundary: soft-reset the dynamics (same twin population) so
     # obs2 stored above is the true pre-reset next state, while the carried
@@ -126,9 +198,13 @@ def train_step(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
             env_n = env_mod.env_soft_reset(cfg, env_b, k)
             return env_n, env_mod.observe(cfg, env_n)
 
-        env_next, obs_next = jax.lax.cond(
-            env2.t >= cfg.episode_len, reset, lambda op: (op[0], obs2),
-            (env2, k4))
+        if sharding.in_scope() is None:
+            env_next, obs_next = jax.lax.cond(
+                env2.t >= cfg.episode_len, reset, lambda op: (op[0], obs2),
+                (env2, k4))
+        else:
+            env_next, obs_next = _select(env2.t >= cfg.episode_len,
+                                         reset((env2, k4)), (env2, obs2))
     else:
         env_next, obs_next = env2, obs2
 
@@ -153,6 +229,69 @@ def train(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,
     ts = train_init(cfg, dcfg, tcfg, key)
     body = functools.partial(train_step, cfg, dcfg, tcfg)
     return jax.lax.scan(body, ts, jnp.arange(tcfg.steps))
+
+
+def train_sharded(tsh: TwinSharding, cfg: EnvConfig, dcfg: DDPGConfig,
+                  tcfg: TrainConfig, key) -> tuple:
+    """:func:`train` with the twin population sharded over a device mesh.
+
+    The whole rollout-and-update scan runs inside ONE ``shard_map`` region:
+    per-shard state is the env's twin block ((N_local,) data/assoc, the
+    (N_local, F) twin features, the (M, N_local) score noise); the MADDPG
+    parameters, optimizer state, replay buffer, and PRNG keys are
+    replicated, which the PR 3 compact encoding makes free — replay rows
+    are psum'd (M, E) encodings plus compact states, never per-twin data.
+    Per step the shards meet only in M-sized collectives (the segment
+    reductions, pooled statistics, and gradient stamps).
+
+    Bit-parity with :func:`train` (up to float tolerance): every PRNG draw
+    a shard needs is the same *global* draw the single-device trainer makes,
+    sliced locally (``sharding.slice_local``), and autodiff through the
+    psums is exact under replication checking — ``tests/test_sharding.py``
+    asserts trace and final-parameter parity on an 8-host-device mesh.
+
+    Constraints: ``dcfg.policy`` must be ``"factorized"`` (the flat oracle's
+    O(N) first layer would have to be gathered, defeating the sharding);
+    ``tsh.n_shards == 1`` is the no-op fast path returning ``train(...)``
+    unchanged. The returned TrainState carries padded twin-sharded leaves
+    (global shape ``tsh.padded_n(cfg.n_twins)``); trace metrics are
+    replicated (steps,) arrays exactly like :func:`train`'s.
+    """
+    if tsh.n_shards == 1:
+        return train(cfg, dcfg, tcfg, key)
+    if dcfg.policy != "factorized":
+        raise ValueError(
+            f"train_sharded supports the N-independent 'factorized' policy "
+            f"only (got policy={dcfg.policy!r}: its parameters scale with "
+            f"the twin count, so shards cannot hold replicas)")
+    return _train_sharded_jitted(tsh, cfg, dcfg, tcfg)(key)
+
+
+@functools.lru_cache(maxsize=None)
+def _train_sharded_jitted(tsh: TwinSharding, cfg: EnvConfig,
+                          dcfg: DDPGConfig, tcfg: TrainConfig):
+    """Compiled sharded-train callable per (mesh, configs) — cached so
+    repeated calls (sweeps, reruns with fresh keys) hit one jit program
+    instead of retracing a new closure every time. All four keys are
+    hashable frozen dataclasses."""
+
+    def local(k):
+        with tsh.scope(cfg.n_twins):
+            ts0 = _stamp_carry(train_init(cfg, dcfg, tcfg, k))
+            body = functools.partial(train_step, cfg, dcfg, tcfg)
+            return jax.lax.scan(body, ts0, jnp.arange(tcfg.steps))
+
+    P = jax.sharding.PartitionSpec
+    state_specs = TrainState(
+        env=env_mod._ENV_SPECS,
+        obs=Observation(bs_feats=P(), twin_feats=P(TWIN_AXIS)),
+        agent=P(),                       # whole MADDPG subtree replicated
+        buf=P(),                         # replay is shard-free
+        noise=Action(scores=P(None, TWIN_AXIS), b_ctl=P(), tau=P()),
+        key=P(),
+    )
+    return jax.jit(tsh.shard_map(local, in_specs=(P(),),
+                                 out_specs=(state_specs, P())))
 
 
 def train_host_loop(cfg: EnvConfig, dcfg: DDPGConfig, tcfg: TrainConfig,

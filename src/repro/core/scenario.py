@@ -11,6 +11,14 @@ A scenario's twin data sizes are drawn as
     D_j = data_min + (data_max - data_min) * U^skew,   U ~ Uniform(0, 1)
 so ``skew=1`` is the paper's uniform population and larger skews give the
 heavy-tailed (few data-rich twins) populations studied in follow-up work.
+
+Shape conventions (PR 2 suffix style): per-scenario twin arrays are (N,)
+and batched results are (S,) / (S, M). Under twin-axis mesh sharding
+(``run_baselines_sharded``) the scenario axis S stays vmapped *inside* the
+shard_map region while each twin array becomes this shard's (N_local,)
+block — N_local = ceil(N / n_shards), padding rows carrying D=0 and the
+out-of-range association id — and each returned statistic is replicated
+(psum'd) across shards. See docs/SCALING.md.
 """
 from __future__ import annotations
 
@@ -21,9 +29,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
-from repro.core import comms, latency
+from repro.core import comms, latency, sharding
 from repro.core.marl import env as env_mod
 from repro.core.marl.env import EnvConfig
+from repro.core.sharding import TwinSharding
 
 
 class ScenarioBatch(NamedTuple):
@@ -52,16 +61,23 @@ def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
 def sample_population(cfg: EnvConfig, key, data_min, data_max,
                       skew) -> jnp.ndarray:
     """Twin data sizes D_j for one scenario, (N,) fp32: ``skew=1`` is the
-    paper's uniform population, larger skews are heavy-tailed."""
-    u = jax.random.uniform(key, (cfg.n_twins,))
-    return data_min + (data_max - data_min) * u ** skew
+    paper's uniform population, larger skews are heavy-tailed.
+
+    Twin-sharding aware: inside a scope each shard takes its slice of the
+    identical full draw (so sharded and single-device runners score the
+    same realization) and padding rows are zeroed — D=0 twins with
+    out-of-range association contribute to no reduction."""
+    u = sharding.localize(jax.random.uniform(key, (cfg.n_twins,)))
+    return sharding.mask_twins(
+        data_min + (data_max - data_min) * u ** skew, 0.0)
 
 
 def scenario_env(cfg: EnvConfig, key, data_min, data_max, skew):
     """The env realization of one scenario — channel, distances, and twin
     population all derive from ``key`` the same way for every consumer, so
     ``run_baselines`` and ``run_policy`` on the same ScenarioBatch see
-    identical realizations (paired comparisons)."""
+    identical realizations (paired comparisons). Twin-sharding aware like
+    :func:`env_reset` — per-shard population slice, replicated channels."""
     ks = jax.random.split(key, 4)
     return env_mod.EnvState(
         freqs=env_mod.bs_frequencies(cfg),
@@ -69,7 +85,9 @@ def scenario_env(cfg: EnvConfig, key, data_min, data_max, skew):
         h_up=comms.sample_channel(cfg.wl, ks[1]),
         h_down=comms.sample_channel(cfg.wl, ks[2]),
         dist=comms.sample_distances(cfg.wl, ks[3]),
-        assoc=assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        assoc=sharding.localize(
+            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+            fill=cfg.n_bs),
         t=jnp.int32(0),
     )
 
@@ -131,6 +149,68 @@ def _rollout_one(cfg: EnvConfig, agent, n_steps: int, policy: str, key,
     (_, _), times = jax.lax.scan(body, (st, env_mod.observe(cfg, st)), keys)
     return {"mean_system_time": jnp.mean(times),
             "final_system_time": times[-1]}
+
+
+def _baselines_lite_one(cfg: EnvConfig, key, data_min, data_max,
+                        skew) -> dict:
+    """The shardable slice of ``_baselines_one``: random/average round
+    times + load diagnostics on one scenario realization. The greedy
+    baseline is excluded — its argmin scan assigns twins one at a time
+    against accumulated loads, an O(N)-deep sequential dependence that a
+    twin-sharded mesh cannot split (documented in docs/SCALING.md).
+
+    Shapes per shard under a twin scope: the population and association
+    vectors are (N_local,) blocks; every returned value is a replicated
+    scalar / (M,) array (psum'd per-BS reductions)."""
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    b = jnp.full(st.data_sizes.shape, 0.5)
+    rt = functools.partial(latency.round_time, cfg.lat, b=b,
+                           data_sizes=st.data_sizes, freqs=st.freqs,
+                           uplink=up, downlink=down)
+    rnd = sharding.localize(
+        assoc_mod.random_association(jax.random.fold_in(key, 1),
+                                     cfg.n_twins, cfg.n_bs),
+        fill=cfg.n_bs)
+    load = assoc_mod.bs_loads(st.assoc, st.data_sizes, cfg.n_bs)
+    return {"random": rt(rnd), "average": rt(st.assoc),
+            "average_imbalance": load["imbalance"],
+            "average_bs_loads": load["loads"],
+            "total_data": sharding.twin_sum(st.data_sizes)}
+
+
+@functools.lru_cache(maxsize=None)
+def _baselines_sharded_jitted(ts: TwinSharding, cfg: EnvConfig):
+    """Compiled sharded-baselines callable for (mesh, config) — cached so
+    repeated sweep calls reuse one jit program instead of retracing a
+    fresh closure each time (both keys are hashable frozen dataclasses)."""
+    fn = functools.partial(_baselines_lite_one, cfg)
+    if ts.n_shards == 1:
+        return jax.jit(jax.vmap(fn))
+
+    def local(k, dmin, dmax, skew):
+        with ts.scope(cfg.n_twins):
+            return jax.vmap(fn)(k, dmin, dmax, skew)
+
+    P = jax.sharding.PartitionSpec
+    sm = ts.shard_map(local, in_specs=(P(), P(), P(), P()), out_specs=P())
+    return jax.jit(sm)
+
+
+def run_baselines_sharded(ts: TwinSharding, cfg: EnvConfig,
+                          batch: ScenarioBatch) -> dict:
+    """``run_baselines`` with each scenario's twin population sharded over
+    the mesh: the scenario batch axis is vmapped *inside* the shard_map
+    region, so a single dispatch scores S scenarios x N twins at
+    O(S * N / n_shards) memory per device. Scores the same realizations as
+    the single-device runner (full-draw + slice populations). Returns a
+    dict of replicated (S,) arrays (plus ``average_bs_loads`` (S, M));
+    greedy is omitted — see ``_baselines_lite_one``. ``n_shards == 1``
+    runs the same lite body without a mesh (no-op fast path)."""
+    return _baselines_sharded_jitted(ts, cfg)(
+        batch.key, batch.data_min, batch.data_max, batch.skew)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "policy"))

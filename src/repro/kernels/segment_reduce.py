@@ -40,6 +40,17 @@ module makes the reduction strategy a first-class, swappable backend:
     memory, but O(N*M) bytes so it dies at large N*M. Kept both as the
     numerical oracle for the parity tests and as an auto-dispatch choice
     below ``_ONEHOT_BYTES_BUDGET``.
+``"sharded"``
+    The device-mesh composition: inside a ``shard_map`` region whose mesh
+    carries the ``"twin"`` axis (see ``repro.core.sharding``), each shard
+    reduces its local twin block with whichever single-device backend
+    ``resolve_backend`` picks for the *local* N, then the (M, K) partials
+    are combined with one ``lax.psum`` over the twin axis. Only valid
+    inside such a region; ``"auto"`` resolves to it automatically whenever
+    ``repro.core.sharding`` reports an active twin-axis scope (registered
+    via :func:`register_twin_axis_hook`), so every existing caller —
+    latency Eqs. 12-17, env observe, association loads — shards without
+    source changes.
 
 ``segment_reduce(values, assoc, M, backend="auto")`` dispatches between
 them from static information only (N, M, payload width, platform), so it is
@@ -71,7 +82,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BACKENDS = ("auto", "pallas", "sort", "segment_sum", "onehot")
+BACKENDS = ("auto", "pallas", "sort", "segment_sum", "onehot", "sharded")
+
+# Mesh axis name of the twin dimension (bound by repro.core.sharding /
+# repro.launch.mesh.make_twin_mesh). Lives here so the kernel layer needs no
+# upward import to name the psum axis of the "sharded" backend.
+TWIN_AXIS = "twin"
+
+# Optional hook registered by repro.core.sharding: a zero-arg callable
+# returning the active twin-axis name (str) when tracing inside a twin
+# shard_map region, else None. With it, backend="auto" transparently
+# resolves to "sharded" inside such regions — callers keep their code.
+_TWIN_AXIS_HOOK = None
+
+
+def register_twin_axis_hook(fn) -> None:
+    """Install the scope probe ``fn() -> str | None`` (see module docstring).
+    Called once by ``repro.core.sharding`` at import; identity-checked so a
+    re-import is a no-op."""
+    global _TWIN_AXIS_HOOK
+    _TWIN_AXIS_HOOK = fn
+
+
+def _active_twin_axis():
+    return _TWIN_AXIS_HOOK() if _TWIN_AXIS_HOOK is not None else None
 
 # Auto-dispatch constants, measured on XLA-CPU (results/bench/scale.json:
 # segment_reduce_sweep_us — rerun `python -m benchmarks.bench_scale` after
@@ -255,21 +289,29 @@ _IMPLS = {
 
 
 def segment_reduce(values, assoc, num_segments: int, *, backend: str = "auto",
-                   interpret=None) -> jnp.ndarray:
+                   interpret=None, axis_name: str | None = None
+                   ) -> jnp.ndarray:
     """Sum per-twin ``values`` grouped by BS: out[m] = sum_{j: assoc[j]==m}.
 
     Args:
-        values: (N,) or (N, ...) per-twin payload (any real dtype).
+        values: (N,) or (N, ...) per-twin payload (any real dtype). Under
+            ``backend="sharded"`` this is the *local* shard (N_local, ...)
+            and the result is the global per-BS sum.
         assoc: (N,) integer segment ids in [0, num_segments); out-of-range
-            ids are dropped.
+            ids are dropped (which is how twin-axis padding rows opt out).
         num_segments: M, the static number of output bins.
         backend: one of ``BACKENDS``. ``"auto"`` resolves from static shape
-            and platform via :func:`resolve_backend` at trace time.
+            and platform via :func:`resolve_backend` at trace time — or to
+            ``"sharded"`` when the registered twin-axis hook reports an
+            active mesh scope.
         interpret: Pallas interpret-mode override (pallas backend only);
             default follows ``REPRO_PALLAS_INTERPRET`` / the platform.
+        axis_name: mesh axis for the ``"sharded"`` psum; defaults to the
+            hook's active axis, then ``TWIN_AXIS``.
 
     Returns:
-        (num_segments,) or (num_segments, ...) fp32 sums.
+        (num_segments,) or (num_segments, ...) fp32 sums — per shard *and*
+        global under ``"sharded"`` (the psum replicates the result).
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -289,6 +331,12 @@ def segment_reduce(values, assoc, num_segments: int, *, backend: str = "auto",
         # misbehave below)
         return jnp.zeros((num_segments,) + tail, jnp.float32)
     if backend == "auto":
+        backend = ("sharded" if _active_twin_axis() is not None
+                   else resolve_backend(n, num_segments))
+    psum_axis = None
+    if backend == "sharded":
+        psum_axis = axis_name or _active_twin_axis() or TWIN_AXIS
+        # local block through the best single-device backend for local N
         backend = resolve_backend(n, num_segments)
 
     flat = values.astype(jnp.float32).reshape(n, -1)  # (N, K)
@@ -296,6 +344,10 @@ def segment_reduce(values, assoc, num_segments: int, *, backend: str = "auto",
         out = _seg_pallas(flat, assoc, num_segments, interpret=interpret)
     else:
         out = _IMPLS[backend](flat, assoc.astype(jnp.int32), num_segments)
+    if psum_axis is not None:
+        # one (M, K)-sized collective combines the per-shard partials —
+        # the Eq. 14 "sum over twins on BS i" composed across the mesh
+        out = jax.lax.psum(out, psum_axis)
     return out.reshape((num_segments,) + tail)
 
 

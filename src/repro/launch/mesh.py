@@ -29,3 +29,16 @@ def make_debug_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
         assert n % 2 == 0
         return jax.make_mesh((2, n // 4, 2), ("pod", "data", "model"))
     return jax.make_mesh((n // 2, 2), ("data", "model"))
+
+
+def make_twin_mesh(n_shards: int | None = None):
+    """1-D mesh over the twin axis of the DTWN simulation core.
+
+    The simulation's only large axis is the twin population (N up to 10^6),
+    so its mesh is one-dimensional with the single axis name ``"twin"`` —
+    the axis name ``repro.core.sharding`` binds for its ``psum`` composition
+    of per-BS segment reductions. Defaults to all visible devices; tests and
+    CI force 8 host devices via ``--xla_force_host_platform_device_count``.
+    """
+    n = n_shards or len(jax.devices())
+    return jax.make_mesh((n,), ("twin",))

@@ -1,10 +1,18 @@
 """CI docs gate: verify that every relative markdown link in the repo docs
-resolves to a real file, and that intra-document anchors point at an
-existing heading. External (scheme://) links are not fetched.
+resolves to a real file, that intra-document anchors (``#section``
+fragments, including same-file ``(#...)`` links) point at an existing
+heading, and that every repo code path named in inline code (backticked
+``src/...``, ``tests/...``, ``benchmarks/...``, ``tools/...``,
+``docs/...``, ``examples/...`` spans) exists on disk — so a doc can never
+describe a module that was moved or deleted. ``results/...`` paths are
+exempt: they are runtime bench artifacts, gitignored, so checking them
+would fail every fresh checkout. External (scheme://) links are not
+fetched; globbed paths (``*``) and ``path:symbol`` suffixes are handled
+(the path part is checked).
 
     python tools/check_links.py [files...]   # default: README.md docs/ benchmarks/README.md
 
-Exits nonzero listing every broken link.
+Exits nonzero listing every broken link / anchor / code path.
 """
 from __future__ import annotations
 
@@ -15,6 +23,12 @@ import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+# inline-code spans that name a repo path: `src/...`, `tests/...`, etc.
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+CODE_PATH_RE = re.compile(
+    r"^(?:src|tests|benchmarks|tools|docs|examples)/[\w./*-]+$")
+# code paths resolve against the repo root, not the doc's directory
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def slugify(heading: str) -> str:
@@ -46,6 +60,16 @@ def check_file(path: str) -> list:
         if anchor and dest.endswith(".md"):
             if slugify(anchor) not in anchors_of(dest):
                 errors.append(f"{path}: missing anchor -> {target}")
+    for span in CODE_SPAN_RE.findall(text):
+        ref = span.split(":")[0].strip()  # drop `path:symbol` suffixes
+        if not CODE_PATH_RE.match(ref):
+            continue
+        if "*" in ref:
+            if not glob.glob(os.path.join(REPO_ROOT, ref)):
+                errors.append(f"{path}: code glob matches nothing -> {span}")
+            continue
+        if not os.path.exists(os.path.join(REPO_ROOT, ref)):
+            errors.append(f"{path}: missing code path -> {span}")
     return errors
 
 
