@@ -16,15 +16,22 @@ import numpy as np
 from benchmarks.common import Timer, save_result
 from repro.core import association as assoc_mod
 from repro.core import comms, latency
-from repro.core.marl import (DDPGConfig, TrainConfig, act, decode_actions,
-                             env_reset, env_step, observe, train)
+from repro.core.marl import (DDPGConfig, TrainConfig, act, env_reset,
+                             env_step, observe, train)
 from repro.core.marl.env import EnvConfig
 
 
 def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
         train_steps: int = 150, seed: int = 0,
-        policy: str = "factorized") -> dict:
-    cfg = EnvConfig(n_twins=n_twins, n_bs=n_bs)
+        policy: str = "factorized", migration: float = 0.0) -> dict:
+    """``migration > 0`` turns on between-round twin migration
+    (repro.core.migration) as env dynamics with that per-round move
+    probability — the controller trains and is evaluated against an
+    association that drifts under it."""
+    from repro.core.migration import MigrationConfig
+
+    mig = MigrationConfig(p_move=migration) if migration > 0 else None
+    cfg = EnvConfig(n_twins=n_twins, n_bs=n_bs, migration=mig)
     dcfg = DDPGConfig(batch_size=32, policy=policy)
     key = jax.random.PRNGKey(seed)
 
@@ -43,29 +50,43 @@ def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
     b_mid = jnp.full((cfg.n_twins,), 0.5)
     step_jit = jax.jit(lambda s, a, k: env_step(cfg, s, a, k))
     act_jit = jax.jit(lambda ag, o: act(cfg, ag, o, policy=policy))
+    mig_rates = []
     for rnd in range(n_rounds):
         key_eval, k1, k2 = jax.random.split(key_eval, 3)
         up_uni = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
         down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
 
-        # proposed: MARL action decides assoc/b/tau
+        # proposed: MARL action decides assoc/b/tau; with migration on the
+        # step's system time is the REALIZED (post-drift) latency
         a = act_jit(agent, observe(cfg, st))
-        assoc_p, b_p, tau_p = decode_actions(cfg, a)
-        up_p = comms.uplink_rate(cfg.wl, tau_p, st.h_up, st.dist)
-        rows["proposed"].append(float(latency.round_time(
-            cfg.lat, assoc_p, b_p, st.data_sizes, st.freqs, up_p, down)))
+        st_next, _, info = step_jit(st, a, k2)
+        rows["proposed"].append(float(info["system_time"]))
+        if mig is not None:
+            mig_rates.append(float(info["migration_rate"]))
+
+        # baselines face the same drift: one migration round on their
+        # commanded association through the env's own key derivation
+        # (env.migrate_assoc with the step key — identity when mig is None)
+        def drift(assoc):
+            from repro.core.marl.env import migrate_assoc
+
+            return migrate_assoc(cfg, k2, assoc, st.data_sizes)
 
         rows["random"].append(float(latency.round_time(
-            cfg.lat, assoc_mod.random_association(k1, cfg.n_twins, cfg.n_bs),
+            cfg.lat,
+            drift(assoc_mod.random_association(k1, cfg.n_twins, cfg.n_bs)),
             b_mid, st.data_sizes, st.freqs, up_uni, down)))
         rows["average"].append(float(latency.round_time(
-            cfg.lat, avg_assoc, b_mid, st.data_sizes, st.freqs, up_uni, down)))
+            cfg.lat, drift(avg_assoc), b_mid, st.data_sizes, st.freqs,
+            up_uni, down)))
 
-        st, _, _ = step_jit(st, a, k2)  # environment evolves
+        st = st_next  # environment evolves
 
     out = {
         "rounds": n_rounds,
         "policy": policy,
+        "migration_p_move": migration,
+        "migration_rate": float(np.mean(mig_rates)) if mig_rates else 0.0,
         "series": rows,
         "mean": {k: float(np.mean(v)) for k, v in rows.items()},
     }
@@ -73,15 +94,19 @@ def run(n_rounds: int = 40, n_twins: int = 30, n_bs: int = 5,
     return out
 
 
-def main(reduced: bool = True):
+def main(reduced: bool = True, migration: float = 0.0):
     with Timer() as t:
         out = run(n_rounds=20 if reduced else 100,
                   n_twins=20 if reduced else 100,
-                  train_steps=700 if reduced else 4000)
+                  train_steps=700 if reduced else 4000,
+                  migration=migration)
     m = out["mean"]
     improves = m["proposed"] < m["random"] and m["proposed"] < m["average"]
+    mig = (f" migration_rate={out['migration_rate']:.2f}"
+           if migration > 0 else "")
     print(f"fig5: proposed={m['proposed']:.2f}s random={m['random']:.2f}s "
-          f"average={m['average']:.2f}s improves={improves} ({t.seconds:.0f}s)")
+          f"average={m['average']:.2f}s improves={improves}{mig} "
+          f"({t.seconds:.0f}s)")
     return {"name": "fig5_latency",
             "us_per_call": t.seconds * 1e6,
             "derived": f"proposed/{m['proposed']:.2f}|random/{m['random']:.2f}"
@@ -89,4 +114,12 @@ def main(reduced: bool = True):
 
 
 if __name__ == "__main__":
-    main(reduced=False)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--migration", type=float, default=0.0,
+                    help="per-round twin move probability (0 = paper's "
+                         "static twins)")
+    ap.add_argument("--reduced", action="store_true")
+    a = ap.parse_args()
+    main(reduced=a.reduced, migration=a.migration)

@@ -33,16 +33,30 @@ Five measurements:
     win — on real multi-chip hardware each shard has its own HBM/compute.
     See docs/SCALING.md.
 
+Two heterogeneity sweeps (merged into ``scale.json: heterogeneity``):
+  * ``--alpha`` — population-tail statistics of the ScenarioBatch skew
+    axis (p99/median, nonparametric skewness at skew 1/2/4) and the label
+    concentration ``scenario_partition`` produces across Dirichlet alphas
+    (0.05 .. 5.0 vs IID);
+  * ``--migration`` — the between-round twin-migration runner
+    (repro.core.migration via scenario.run_migration[_sharded]) at N up to
+    10^6: us/round sharded-vs-single, trajectory parity, realized
+    migration rate and final load imbalance. Subprocess with 8 forced host
+    devices, same caveat as ``--sharded``.
+
 ``python -m benchmarks.bench_scale --smoke`` runs a seconds-scale CI gate:
 tiny backend sweep + parity of every backend against the one-hot oracle,
 plus the policy-protocol gate (flat and factorized actions decode onto the
 (18) feasible set from one shared seed; factorized parameter count is
-verified N-independent), plus the 8-host-device sharded parity gate
-(``--sharded-gate`` in a subprocess: latency Eqs. 12-17, env
-reset/observe/step, a short scan-train run, and the scenario runner must
-match the single-device path on ragged and empty-shard populations),
-exiting nonzero on mismatch — kernel, policy, or sharding regressions fail
-fast without waiting for the full bench.
+verified N-independent), plus the migration grouping gate (post-migration
+per-BS latency through the sort backend's contiguous grouping must equal
+the one-hot oracle; bs_segments boundaries must reproduce the occupancy
+counts), plus the 8-host-device sharded parity gate (``--sharded-gate`` in
+a subprocess: latency Eqs. 12-17, env reset/observe/step, a short
+scan-train run, the scenario runner, and the migration step/env/runner
+must match the single-device path on ragged and empty-shard populations),
+exiting nonzero on mismatch — kernel, policy, sharding, or migration
+regressions fail fast without waiting for the full bench.
 """
 from __future__ import annotations
 
@@ -69,10 +83,16 @@ SWEEP_BACKENDS = ("onehot", "sort", "segment_sum", "pallas", "auto")
 _FLAT_MAX_TWINS = 2000
 
 
+# sections whose sub-keys are owned by DIFFERENT entry points (e.g.
+# "heterogeneity" collects --alpha population/partition stats and the
+# --migration sweep) — merged one level deep instead of replaced wholesale
+_DEEP_MERGE_KEYS = ("heterogeneity",)
+
+
 def merge_into_scale(sections: dict) -> None:
     """Merge ``sections`` into results/bench/scale.json, preserving every
-    key owned by the other entry points (main / --policies / --sharded all
-    write disjoint sections of the same file)."""
+    key owned by the other entry points (main / --policies / --sharded /
+    --alpha / --migration all write disjoint sections of the same file)."""
     import json
     import os
 
@@ -83,7 +103,12 @@ def merge_into_scale(sections: dict) -> None:
     if os.path.exists(path):
         with open(path) as f:
             merged = json.load(f)
-    merged.update(sections)
+    for k, v in sections.items():
+        if (k in _DEEP_MERGE_KEYS and isinstance(v, dict)
+                and isinstance(merged.get(k), dict)):
+            merged[k].update(v)
+        else:
+            merged[k] = v
     save_result("scale", merged)
 
 
@@ -363,6 +388,43 @@ def sharded_gate() -> None:
                                    rtol=1e-5, err_msg=k)
     print("sharded-gate: scenario-runner parity ok")
 
+    # migration: raw step, env step with migration dynamics, and the
+    # scenario migration runner — bit-parity with the single-device path on
+    # divisible / ragged / empty-shard populations
+    from repro.core.migration import (MigrationConfig, migration_step,
+                                      sharded_migration_step)
+
+    mcfg = MigrationConfig(p_move=0.4, locality=1.5, load_weight=0.8)
+    key = jax.random.PRNGKey(11)
+    for n, m in [(64, 5), (37, 5), (5, 3)]:
+        ks = jax.random.split(jax.random.fold_in(key, n), 2)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        data = jax.random.uniform(ks[1], (n,), minval=100, maxval=800)
+        got = ts.unpad_twin(
+            sharded_migration_step(ts, mcfg, key, assoc, data, m), n)
+        np.testing.assert_array_equal(
+            np.asarray(got),
+            np.asarray(migration_step(mcfg, key, assoc, data, m)),
+            err_msg=f"N={n} M={m}")
+    cfgm = EnvConfig(n_twins=37, n_bs=5, migration=mcfg)
+    st_s, st_r = sharded_env_reset(ts, cfgm, key), env_reset(cfgm, key)
+    agent = maddpg_init(cfgm, DDPGConfig(hidden=(32, 32)), key)
+    a_r = act(cfgm, agent, observe(cfgm, st_r))
+    a_s = Action(scores=ts.pad_twin(a_r.scores, axis=1), b_ctl=a_r.b_ctl,
+                 tau=a_r.tau)
+    _, r_s, info_s = sharded_env_step(ts, cfgm, st_s, a_s, key)
+    _, r_r, info_r = env_step(cfgm, st_r, a_r, key)
+    np.testing.assert_allclose(np.asarray(r_s), np.asarray(r_r), rtol=1e-5)
+    np.testing.assert_allclose(float(info_s["migration_rate"]),
+                               float(info_r["migration_rate"]), rtol=1e-6)
+    out = scenario.run_migration_sharded(ts, cfg, mcfg, batch, n_rounds=4)
+    ref = scenario.run_migration(cfg, mcfg, batch, n_rounds=4)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, err_msg=k)
+    print("sharded-gate: migration parity ok "
+          "(step/env/runner, incl. ragged/empty)")
+
 
 def _time_call(fn, *args, iters: int = 10) -> float:
     """us/call of a jitted callable, excluding compile."""
@@ -447,6 +509,109 @@ def sharded_sweep() -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# heterogeneity sweeps (scale.json: "heterogeneity")
+# ---------------------------------------------------------------------------
+
+
+def heterogeneity_stats(n_twins: int = 20_000, n_users: int = 100,
+                        n_samples: int = 10_000) -> dict:
+    """The --alpha sweep: population-tail statistics of the ScenarioBatch
+    skew axis (is skew>1 actually heavier-tailed than skew=1?) and label
+    concentration of ``scenario_partition`` across alphas. Host-scale,
+    seconds; merged into scale.json under ``heterogeneity``."""
+    import numpy as np
+
+    from repro.fl.partition import scenario_partition
+
+    key = jax.random.PRNGKey(0)
+    dmin, dmax = 100.0, 1500.0
+    tail = {}
+    for skew in (1.0, 2.0, 4.0):
+        u = jax.random.uniform(jax.random.fold_in(key, int(skew)),
+                               (n_twins,))
+        d = np.asarray(dmin + (dmax - dmin) * u ** skew)
+        tail[str(skew)] = {
+            "mean": float(d.mean()), "median": float(np.median(d)),
+            "p99": float(np.percentile(d, 99)),
+            "tail_ratio_p99_median": float(np.percentile(d, 99)
+                                           / np.median(d)),
+            "nonparametric_skew": float((d.mean() - np.median(d)) / d.std()),
+        }
+
+    labels = np.arange(n_samples) % 10
+    sizes = np.asarray(dmin + (dmax - dmin)
+                       * np.asarray(jax.random.uniform(key, (n_users,)))**3)
+    part = {}
+    for alpha in (0.05, 0.1, 0.5, 5.0, None):
+        shards = scenario_partition(n_samples, sizes, labels=labels,
+                                    alpha=alpha, seed=0)
+        maxfrac = [np.bincount(labels[s], minlength=10).max() / len(s)
+                   for s in shards]
+        part["iid" if alpha is None else str(alpha)] = {
+            "mean_max_class_frac": float(np.mean(maxfrac)),
+            "min_shard": int(min(len(s) for s in shards)),
+        }
+    return {"population_tail": tail, "alpha_partition": part,
+            "n_twins": n_twins, "n_users": n_users}
+
+
+def migration_sweep(ns=(10_000, 100_000, 1_000_000), n_scenarios: int = 2,
+                    n_rounds: int = 5) -> dict:
+    """The --migration sweep body (requires the forced-device-count
+    subprocess): ``run_migration`` vs ``run_migration_sharded`` us/round at
+    each N — association evolving under the Markov mobility + load-aware
+    kernel across FL rounds — plus sharded-vs-single parity of the full
+    round-time trajectories. N tops out at 10^6 (sharded runs to
+    completion there; that cell is the acceptance gate). Parity is
+    ENFORCED, not just recorded: any N whose trajectories diverge beyond
+    fp32 noise raises — a large-N-only sharding bug (padding, psum) fails
+    the sweep instead of landing in scale.json as data."""
+    import numpy as np
+
+    from repro.core import scenario
+    from repro.core.migration import MigrationConfig
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    mcfg = MigrationConfig(p_move=0.2, locality=1.0, load_weight=1.0)
+    m = 8
+    out = {"devices": ts.n_shards, "n_bs": m, "n_scenarios": n_scenarios,
+           "n_rounds": n_rounds,
+           "mcfg": {"p_move": mcfg.p_move, "locality": mcfg.locality,
+                    "load_weight": mcfg.load_weight},
+           "round_us": {"single": {}, "sharded": {}},
+           "parity": {}, "migration_rate": {}, "final_imbalance": {}}
+    for n in ns:
+        cfg = EnvConfig(n_twins=n, n_bs=m)
+        batch = scenario.make_batch(jax.random.PRNGKey(n % 101), n_scenarios)
+        f_sh = lambda: scenario.run_migration_sharded(ts, cfg, mcfg, batch,
+                                                      n_rounds=n_rounds)
+        us_sh = _time_call(lambda *_: f_sh(), iters=3) / (n_scenarios
+                                                          * n_rounds)
+        got = f_sh()
+        ref = scenario.run_migration(cfg, mcfg, batch, n_rounds=n_rounds)
+        f_1 = lambda: scenario.run_migration(cfg, mcfg, batch,
+                                             n_rounds=n_rounds)
+        us_1 = _time_call(lambda *_: f_1(), iters=3) / (n_scenarios
+                                                        * n_rounds)
+        err = float(np.max(np.abs(np.asarray(got["round_times"])
+                                  - np.asarray(ref["round_times"]))
+                           / np.abs(np.asarray(ref["round_times"]))))
+        assert err < 1e-4, f"sharded migration parity broke at N={n}: {err}"
+        out["round_us"]["sharded"][str(n)] = us_sh
+        out["round_us"]["single"][str(n)] = us_1
+        out["parity"][str(n)] = err
+        out["migration_rate"][str(n)] = float(
+            np.mean(np.asarray(ref["migration_rates"])))
+        out["final_imbalance"][str(n)] = float(
+            np.mean(np.asarray(ref["imbalance"])[:, -1]))
+        print(f"migration-sweep: N={n:>9,} {us_sh:>9.0f}us/round sharded vs "
+              f"{us_1:>9.0f}us single | rate "
+              f"{out['migration_rate'][str(n)]:.3f} | rel err {err:.1e}")
+    return out
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -494,8 +659,38 @@ def smoke() -> None:
     print(f"scale --smoke: flat/factorized decode parity ok; factorized "
           f"actor params N-independent ({p_small:,} at N=48 and N=4800)")
 
+    # --- migration parity gate: post-migration per-BS results through the
+    # sort backend's contiguous grouping must equal the one-hot oracle, and
+    # the bs_segments boundaries must reproduce the occupancy counts ---
+    from repro.core import migration as mig
+    from repro.kernels.segment_reduce import segment_count
+
+    mcfg = mig.MigrationConfig(p_move=0.5, locality=1.0, load_weight=1.0)
+    for n in (63, 1024):
+        ks = jax.random.split(jax.random.PRNGKey(n + 1), 3)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        data = jax.random.uniform(ks[1], (n,), minval=100, maxval=800)
+        assoc2 = mig.migration_step(mcfg, ks[2], assoc, data, m)
+        freqs = jnp.linspace(1e9, 4e9, m)
+        up = jnp.full((m,), 1e7)
+        b = jnp.full((n,), 0.5)
+        t_sort = latency.round_time(LP, assoc2, b, data, freqs, up, up,
+                                    backend="sort")
+        t_oracle = latency.round_time_onehot(LP, assoc2, b, data, freqs, up,
+                                             up)
+        np.testing.assert_allclose(float(t_sort), float(t_oracle), rtol=1e-5,
+                                   err_msg=f"migration N={n}")
+        _, bounds = mig.bs_segments(assoc2, m)
+        np.testing.assert_array_equal(
+            np.diff(np.asarray(bounds)),
+            np.asarray(segment_count(assoc2, m, backend="onehot"),
+                       np.int64), err_msg=f"bs_segments N={n}")
+    print("scale --smoke: migration sort-grouping parity vs one-hot oracle "
+          "ok")
+
     # --- 8-host-device sharded parity gate (subprocess: the forced device
-    # count must be set before jax initializes) ---
+    # count must be set before jax initializes; includes the migration
+    # step/env/runner parity block) ---
     print(_spawn_sharded("--sharded-gate").strip())
     print("scale --smoke: sharded parity gate ok on "
           f"{_SHARDED_DEVICES} host devices")
@@ -588,6 +783,18 @@ if __name__ == "__main__":
     ap.add_argument("--sharded-child", action="store_true",
                     help="[subprocess child] sharded sweep body; prints "
                          "JSON on the last stdout line")
+    ap.add_argument("--alpha", action="store_true",
+                    help="heterogeneity stats sweep: ScenarioBatch "
+                         "population-tail + scenario_partition label "
+                         "concentration across alphas (merged into "
+                         "scale.json: heterogeneity)")
+    ap.add_argument("--migration", action="store_true",
+                    help="migration sweep on 8 forced host devices up to "
+                         "N=10^6 (subprocess; merged into scale.json: "
+                         "heterogeneity.migration_sweep)")
+    ap.add_argument("--migration-child", action="store_true",
+                    help="[subprocess child] migration sweep body; prints "
+                         "JSON on the last stdout line")
     args = ap.parse_args()
     if args.smoke:
         smoke()
@@ -606,6 +813,33 @@ if __name__ == "__main__":
             print(ln)
         merge_into_scale({"sharded_scaling": json.loads(lines[-1])})
         print("sharded_scaling merged into results/bench/scale.json")
+    elif args.migration_child:
+        import json
+
+        print(json.dumps(migration_sweep()))
+    elif args.migration:
+        import json
+
+        stdout = _spawn_sharded("--migration-child")
+        lines = [ln for ln in stdout.strip().splitlines() if ln]
+        for ln in lines[:-1]:
+            print(ln)
+        merge_into_scale(
+            {"heterogeneity": {"migration_sweep": json.loads(lines[-1])}})
+        print("heterogeneity.migration_sweep merged into "
+              "results/bench/scale.json")
+    elif args.alpha:
+        stats = heterogeneity_stats()
+        merge_into_scale({"heterogeneity": stats})
+        for skew, row in stats["population_tail"].items():
+            print(f"heterogeneity: skew={skew} p99/median "
+                  f"{row['tail_ratio_p99_median']:.2f} nonparametric skew "
+                  f"{row['nonparametric_skew']:+.3f}")
+        for a, row in stats["alpha_partition"].items():
+            print(f"heterogeneity: alpha={a} mean max-class frac "
+                  f"{row['mean_max_class_frac']:.3f} min shard "
+                  f"{row['min_shard']}")
+        print("heterogeneity stats merged into results/bench/scale.json")
     elif args.policies:
         table = sweep_policy_scaling()
         _print_policy_sweep(table)

@@ -28,12 +28,32 @@ def main():
     ap.add_argument("--train-n", type=int, default=5000)
     ap.add_argument("--policy", choices=("greedy", "random", "average"),
                     default="greedy")
+    ap.add_argument("--alpha", type=float, default=None,
+                    help="Dirichlet label-skew concentration (non-IID "
+                         "clients); default IID")
+    ap.add_argument("--skew", type=float, default=None,
+                    help="population tail exponent: builds a one-row "
+                         "scenario (heavy-tailed twin data sizes D_j, plus "
+                         "--alpha label skew) that drives the partition AND "
+                         "the latency accounting")
     ap.add_argument("--out", default="results/fl_cifar10.csv")
     args = ap.parse_args()
 
     data = cifar10.load(max_train=args.train_n, max_test=1000)
-    cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3)
-    system = DTWNSystem(cfg, data, seed=0)
+    scenario_arg = None
+    if args.skew is not None:
+        from repro.core import scenario as scen
+
+        batch = scen.make_batch(
+            jax.random.PRNGKey(1), 1, skew=(args.skew, args.skew),
+            alpha=None if args.alpha is None else (args.alpha, args.alpha))
+        scenario_arg = (batch, 0)
+        cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3)
+    else:
+        cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3,
+                       partition="iid" if args.alpha is None else "dirichlet",
+                       alpha=args.alpha)
+    system = DTWNSystem(cfg, data, seed=0, scenario=scenario_arg)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w", newline="") as f:

@@ -35,9 +35,18 @@ def main():
                     default="factorized")
     ap.add_argument("--host-loop", action="store_true",
                     help="legacy un-fused Python training loop")
+    ap.add_argument("--migration", type=float, default=0.0,
+                    help="per-round twin move probability: trains the "
+                         "controller against an association that drifts "
+                         "under the Markov mobility + load-aware kernel "
+                         "(repro.core.migration)")
     args = ap.parse_args()
 
-    cfg = EnvConfig(n_twins=args.twins, n_bs=args.bs)
+    from repro.core.migration import MigrationConfig
+
+    cfg = EnvConfig(n_twins=args.twins, n_bs=args.bs,
+                    migration=(MigrationConfig(p_move=args.migration)
+                               if args.migration > 0 else None))
     dcfg = DDPGConfig(policy=args.policy)
     tcfg = TrainConfig(steps=args.steps, warmup=min(48, args.steps // 2))
     key = jax.random.PRNGKey(0)

@@ -22,13 +22,13 @@ run, the invariant the N-independent replay relies on.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple, Union
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
-from repro.core import comms, latency, sharding
+from repro.core import comms, latency, migration as migration_mod, sharding
 from repro.core.marl import spaces
 from repro.core.marl.spaces import Action, Observation
 from repro.core.sharding import TWIN_AXIS, TwinSharding
@@ -52,6 +52,12 @@ class EnvConfig:
     reward_scale: float = 0.02  # keeps |R| ~ O(1) so Q targets stay tame
     shared_reward: bool = True  # paper: "each DRL agent shares the same
     #                             reward function" (-max_i T_i, Eqs. 17/19)
+    # between-round twin migration (repro.core.migration): when set, the
+    # commanded association is perturbed each step by the Markov mobility +
+    # load-aware kernel BEFORE latency accounting — the controller must
+    # hedge against twins drifting off its chosen BSs. None == the paper's
+    # static-twin dynamics (bit-identical to the pre-migration env).
+    migration: Optional[migration_mod.MigrationConfig] = None
 
     @property
     def wl(self) -> comms.WirelessConfig:
@@ -184,6 +190,15 @@ def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
     )
 
 
+def _b_for_assoc(cfg: EnvConfig, actions: Action, assoc) -> jnp.ndarray:
+    """Each twin takes its BS's projected (18d) batch control, (N,). The
+    single source of the gather for both the decoded and the
+    post-migration association: out-of-range padding ids (``n_bs``) are
+    clipped for the index — their rows are inert anyway (D=0)."""
+    return assoc_mod.project_batch(cfg.lat, actions.b_ctl)[
+        jnp.clip(assoc, 0, cfg.n_bs - 1)]
+
+
 def decode_actions(cfg: EnvConfig, actions: Union[Action, jnp.ndarray]):
     """Project a joint action onto the feasible set of problem (18).
 
@@ -198,7 +213,7 @@ def decode_actions(cfg: EnvConfig, actions: Union[Action, jnp.ndarray]):
     assoc = sharding.mask_twins(
         assoc_mod.assoc_from_scores(actions.scores), cfg.n_bs)
     # each twin uses its chosen BS's batch control
-    b = assoc_mod.project_batch(cfg.lat, actions.b_ctl)[assoc]  # (N,)
+    b = _b_for_assoc(cfg, actions, assoc)  # (N,)
     # softmax over the BS axis -> each sub-channel's time shares sum to 1 (18c)
     tau = assoc_mod.project_bandwidth(actions.tau * 4.0)  # (M, C)
     return assoc, b, tau
@@ -230,10 +245,40 @@ def compare_with_baselines(cfg: EnvConfig, st: EnvState, actions,
             "assoc": assoc_p}
 
 
+def migrate_assoc(cfg: EnvConfig, key, assoc, data_sizes) -> jnp.ndarray:
+    """The env's migration application: one ``migration_step`` under the
+    step key's dedicated fold (``fold_in(key, 3)`` — disjoint from the
+    dynamics draws ``env_step`` splits off). The single source of the
+    key derivation: external paired comparisons (e.g. the Fig. 5 bench
+    drifting its baselines) MUST go through this to face the identical
+    drift realization the env applies in the same step. Identity when
+    ``cfg.migration`` is None."""
+    if cfg.migration is None:
+        return assoc
+    return migration_mod.migration_step(
+        cfg.migration, jax.random.fold_in(key, 3), assoc, data_sizes,
+        cfg.n_bs)
+
+
 def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     """Returns (next_state, per_agent_reward (M,), info dict). ``actions``
-    is a structured ``spaces.Action`` (or the legacy flat layout)."""
+    is a structured ``spaces.Action`` (or the legacy flat layout).
+
+    With ``cfg.migration`` set, the decoded association is evolved one
+    migration round (mobility + load-aware re-association,
+    :func:`migrate_assoc`) before latency accounting — the realized
+    association the reward and the next state see
+    (``info["migration_rate"]`` reports the realized move fraction). The
+    migration key is folded independently of the dynamics draws, so a
+    ``migration=None`` config traces the exact pre-migration step."""
+    if not isinstance(actions, Action):
+        actions = spaces.unflatten_action(cfg, actions)
     assoc, b, tau = decode_actions(cfg, actions)
+    commanded = assoc
+    if cfg.migration is not None:
+        assoc = migrate_assoc(cfg, key, assoc, st.data_sizes)
+        # each twin uses the batch control of the BS it LANDED on
+        b = _b_for_assoc(cfg, actions, assoc)
     up = comms.uplink_rate(cfg.wl, tau, st.h_up, st.dist)
     down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
     per_bs = latency.round_time_per_bs(cfg.lat, assoc, b, st.data_sizes,
@@ -261,6 +306,9 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     )
     info = {"system_time": system_t, "assoc": assoc, "b": b, "tau": tau,
             "uplink": up}
+    if cfg.migration is not None:
+        info["migration_rate"] = migration_mod.migration_rate(commanded,
+                                                              assoc)
     return nxt, reward, info
 
 
@@ -335,6 +383,8 @@ def sharded_env_step(ts: TwinSharding, cfg: EnvConfig, st: EnvState,
 
     info_specs = {"system_time": _P(), "assoc": _P(TWIN_AXIS),
                   "b": _P(TWIN_AXIS), "tau": _P(), "uplink": _P()}
+    if cfg.migration is not None:
+        info_specs["migration_rate"] = _P()  # psum'd, replicated
     return ts.shard_map(
         local, in_specs=(_ENV_SPECS, _ACT_SPECS, _P()),
         out_specs=(_ENV_SPECS, _P(), info_specs))(st, actions, key)

@@ -1,0 +1,195 @@
+"""Twin migration between FL rounds (beyond-paper subsystem).
+
+The paper associates each digital twin to a BS once per round; the
+multi-tier / twin-migration follow-up work (arXiv:2411.02323,
+arXiv:2503.15822) makes re-association *between* rounds the core workload:
+end users move, their twins migrate with them, and the edge must rebalance.
+This module evolves the association vector ``assoc: (N,) int`` across
+rounds with
+
+* a **Markov mobility kernel**: each twin moves in a round with probability
+  ``p_move``; a mover's destination is biased toward BSs near its current
+  one on the BS ring (``locality`` — the spatial Markov chain of user
+  mobility), and
+* **load-aware re-association**: destinations are penalized by their
+  current normalized data load (``load_weight``), the edge-side rebalancing
+  pull — loads come from the unified segment-reduce dispatch, so a
+  migration step is O(N + M) like every other per-BS quantity.
+
+A step is one categorical Gumbel draw per twin over the M destination
+logits plus a Bernoulli move mask — no sequential dependence, so it vmaps
+over scenario batches and shards over the twin mesh. Composition with
+``repro.core.sharding`` is the whole point: **migration only rewrites
+association ids; the twin shards never move.** Twin j's state stays on the
+shard that owns row j — only ``assoc[j]`` changes — so a migration step at
+N=10^6 is the same local-draws + one (M,)-psum pattern as every other
+sharded op (``sharded_migration_step``; parity-tested single-device vs 8
+forced host devices, same global PRNG draws sliced per shard).
+
+Once twins are sorted by BS, the sort backend's contiguous grouping hands
+migration its per-BS segment boundaries for free: :func:`bs_segments`
+returns ``(order, bounds)`` from ``repro.kernels.segment_reduce.sort_groups``
+— segment m of the gathered population is exactly BS m's twins, which is
+what per-BS batched hand-off (state transfer, Eq. 4 grouping of movers)
+consumes. :func:`migration_flows` reduces the (old, new) pair ids through
+the same dispatch into the M x M flow matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sharding
+from repro.kernels.segment_reduce import (TWIN_AXIS, segment_reduce,
+                                          sort_groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    """Static knobs of the between-round migration kernel (hashable — this
+    rides inside ``EnvConfig``/jit static args).
+
+    ``p_move``      — per-twin per-round move probability (Markov chain
+                      self-loop weight ``1 - p_move``).
+    ``locality``    — mobility stickiness: destination logits fall off with
+                      ring distance from the current BS (0 = teleporting
+                      uniformly, large = nearest-neighbor moves only).
+    ``load_weight`` — load-aware pull: destination logits are penalized by
+                      the BS's current normalized data load (0 = pure
+                      mobility, large = hard load balancing).
+    """
+    p_move: float = 0.1
+    locality: float = 1.0
+    load_weight: float = 1.0
+
+
+def ring_distance(n_bs: int) -> jnp.ndarray:
+    """(M, M) normalized ring distance between BSs — the static spatial
+    kernel of the mobility chain (BSs on a ring, matching the paper's
+    cell layout abstraction). Row i is twin-on-BS-i's distance to every
+    destination, in [0, 1]."""
+    i = jnp.arange(n_bs)
+    d = jnp.abs(i[:, None] - i[None, :])
+    d = jnp.minimum(d, n_bs - d).astype(jnp.float32)
+    return d / jnp.maximum(n_bs // 2, 1)
+
+
+def bs_segments(assoc, n_bs: int):
+    """Per-BS segment boundaries of the current association, via the sort
+    backend's contiguous grouping (``sort_groups``): ``(order, bounds)``
+    with BS m's twins at sorted positions ``[bounds[m], bounds[m+1])``.
+    Inside a twin-sharding scope this is the *local* grouping of this
+    shard's block — exactly what a per-shard hand-off loop wants, since
+    migration never moves rows between shards."""
+    return sort_groups(jnp.asarray(assoc), n_bs)
+
+
+def migration_step(mcfg: MigrationConfig, key, assoc, data_sizes,
+                   n_bs: int, *, backend: str = "auto") -> jnp.ndarray:
+    """One between-round migration: ``assoc (N,) -> assoc' (N,)`` int32.
+
+    Destination logits per twin j currently on BS i:
+        ``-locality * ring_distance(i, m) - load_weight * load_m / mean``
+    sampled with one Gumbel-argmax per twin; a Bernoulli(``p_move``) mask
+    keeps non-movers in place. O(N*M) transient, O(N+M) persistent.
+
+    Twin-sharding aware: ``assoc``/``data_sizes`` are this shard's local
+    block inside a scope; the Bernoulli/Gumbel draws are sliced from the
+    identical full-N draw (``sharding.localize``) so the sharded step is
+    bit-parity with the single-device one, the load reduction goes through
+    ``backend="auto"`` (-> local reduce + psum), and padding rows are
+    re-stamped with the out-of-range id ``n_bs`` afterwards. ``backend``
+    pins the load reduction for the backend-parity tests (single-device
+    only — inside a scope leave it on ``"auto"``).
+    """
+    assoc = jnp.asarray(assoc)
+    n = sharding.global_twin_count(assoc.shape[0])
+    loads = segment_reduce(jnp.asarray(data_sizes, jnp.float32), assoc,
+                           n_bs, backend=backend)
+    load_pen = loads / jnp.maximum(jnp.mean(loads), 1e-12)
+    # clip padding ids (== n_bs) for the gather; rows are re-masked below
+    ring = ring_distance(n_bs)[jnp.clip(assoc, 0, n_bs - 1)]  # (N, M)
+    logits = -mcfg.locality * ring - mcfg.load_weight * load_pen[None, :]
+
+    k_move, k_dst = jax.random.split(key)
+    move = sharding.localize(
+        jax.random.uniform(k_move, (n,)) < mcfg.p_move, fill=False)
+    gumbel = sharding.localize(jax.random.gumbel(k_dst, (n, n_bs)))
+    choice = jnp.argmax(logits + gumbel, axis=1).astype(jnp.int32)
+    out = jnp.where(move, choice, assoc).astype(jnp.int32)
+    return sharding.mask_twins(out, n_bs)
+
+
+def migration_rate(old, new) -> jnp.ndarray:
+    """Fraction of (real) twins that changed BS — scalar fp32, replicated
+    under a twin-sharding scope (masked local count + psum / true N)."""
+    moved = sharding.mask_twins(jnp.asarray(old) != jnp.asarray(new), False)
+    n = sharding.global_twin_count(jnp.asarray(old).shape[0])
+    return sharding.twin_sum(moved.astype(jnp.float32)) / n
+
+
+def migration_flows(old, new, n_bs: int, *,
+                    backend: str = "auto") -> jnp.ndarray:
+    """(M, M) flow matrix: ``flows[i, j]`` = twins that moved BS i -> j this
+    round (diagonal = stayers), through the segment-reduce dispatch on the
+    flattened ``old * M + new`` pair ids. Padding rows carry ``old == M``,
+    land at pair ids >= M*M, and drop out like every out-of-range id."""
+    old = jnp.asarray(old)
+    pair = old * n_bs + jnp.asarray(new)
+    counts = segment_reduce(jnp.ones(old.shape, jnp.float32), pair,
+                            n_bs * n_bs, backend=backend)
+    return counts.reshape(n_bs, n_bs)
+
+
+# ---------------------------------------------------------------------------
+# twin-axis sharded entry point
+# ---------------------------------------------------------------------------
+
+
+def sharded_migration_step(ts, mcfg: MigrationConfig, key, assoc, data_sizes,
+                           n_bs: int) -> jnp.ndarray:
+    """:func:`migration_step` over a ``TwinSharding`` mesh: ``assoc`` and
+    ``data_sizes`` are global (N,) arrays, padded to ``ts.padded_n(N)`` and
+    laid out over the twin axis; the returned association is padded +
+    sharded the same way (padding rows keep the out-of-range id ``n_bs``).
+    Migration recomputes ids in place — no twin row ever crosses shards, so
+    the only collective is the (M,)-sized load psum. Bit-parity with the
+    single-device step (full draw + per-shard slice); ``n_shards == 1`` is
+    the no-op fast path."""
+    if ts.n_shards == 1:
+        return migration_step(mcfg, key, assoc, data_sizes, n_bs)
+    n = jnp.shape(assoc)[0]
+    assoc_p = ts.pad_twin(assoc, fill=n_bs)
+    data_p = ts.pad_twin(data_sizes, fill=0)
+
+    def local(a, d, k):
+        with ts.scope(n):
+            return migration_step(mcfg, k, a, d, n_bs)
+
+    return ts.shard_map(local, in_specs=(P(TWIN_AXIS), P(TWIN_AXIS), P()),
+                        out_specs=P(TWIN_AXIS))(assoc_p, data_p, key)
+
+
+def evolve_association(mcfg: MigrationConfig, key, assoc, data_sizes,
+                       n_bs: int, n_rounds: int) -> tuple:
+    """Roll the migration chain ``n_rounds`` rounds from ``assoc``.
+
+    Returns ``(final_assoc (N,), trajectory (n_rounds, N), rates
+    (n_rounds,))`` — round r's association and the fraction of twins that
+    moved into it. One ``lax.scan`` over per-round folded keys; works under
+    vmap (the scenario runner maps it over batches) and inside a
+    twin-sharding scope (deliberately NOT jitted here: the scope is
+    trace-time state, so a module-level jit cache could replay a no-scope
+    trace inside a mesh region — callers jit at their own boundary)."""
+    assoc = jnp.asarray(assoc).astype(jnp.int32)
+
+    def body(a, k):
+        a2 = migration_step(mcfg, k, a, data_sizes, n_bs)
+        return a2, (a2, migration_rate(a, a2))
+
+    keys = jax.random.split(key, n_rounds)
+    final, (traj, rates) = jax.lax.scan(body, assoc, keys)
+    return final, traj, rates

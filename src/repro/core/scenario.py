@@ -11,6 +11,13 @@ A scenario's twin data sizes are drawn as
     D_j = data_min + (data_max - data_min) * U^skew,   U ~ Uniform(0, 1)
 so ``skew=1`` is the paper's uniform population and larger skews give the
 heavy-tailed (few data-rich twins) populations studied in follow-up work.
+Two more heterogeneity axes ride the batch: a per-scenario Dirichlet
+label-skew ``alpha`` (consumed by the FL substrate via
+:func:`population_row` -> ``repro.fl.partition.scenario_partition``; the
+label-blind runners here ignore it) and between-round twin migration
+(:func:`run_migration` / :func:`run_migration_sharded`, evolving each
+scenario's association under ``repro.core.migration``'s Markov mobility +
+load-aware kernel).
 
 Shape conventions (PR 2 suffix style): per-scenario twin arrays are (N,)
 and batched results are (S,) / (S, M). Under twin-axis mesh sharding
@@ -29,24 +36,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
-from repro.core import comms, latency, sharding
+from repro.core import comms, latency, migration, sharding
 from repro.core.marl import env as env_mod
 from repro.core.marl.env import EnvConfig
+from repro.core.migration import MigrationConfig
 from repro.core.sharding import TwinSharding
 
 
 class ScenarioBatch(NamedTuple):
-    """Per-scenario parameters; every field has leading axis (S,)."""
+    """Per-scenario parameters; every field has leading axis (S,).
+
+    ``skew`` shapes the *size* heterogeneity of the twin population (the
+    D_j tail); ``alpha`` is the Dirichlet *label*-skew concentration the
+    FL substrate partitions the dataset with when this scenario drives an
+    actual federated run (``repro.fl.partition.scenario_partition`` via
+    :func:`population_row`) — the latency/association core is label-blind,
+    so ``alpha`` rides along untouched by the vmapped runners.
+    """
     key: jnp.ndarray       # (S, 2) uint32 — channel/data seed per scenario
     data_min: jnp.ndarray  # (S,)
     data_max: jnp.ndarray  # (S,)
     skew: jnp.ndarray      # (S,) >= 1; 1 == uniform population
+    alpha: jnp.ndarray = None  # (S,) > 0 Dirichlet label skew; inf == IID
 
 
 def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
-               data_max=(500.0, 1500.0), skew=(1.0, 4.0)) -> ScenarioBatch:
-    """Sample a scenario batch: seeds plus per-scenario population ranges."""
-    k0, k1, k2, k3 = jax.random.split(key, 4)
+               data_max=(500.0, 1500.0), skew=(1.0, 4.0),
+               alpha=(0.1, 10.0)) -> ScenarioBatch:
+    """Sample a scenario batch: seeds plus per-scenario population ranges.
+    ``alpha`` is drawn log-uniformly (label skew is a scale parameter);
+    ``alpha=None`` omits the axis entirely (IID labels)."""
+    k0, k1, k2, k3, k4 = jax.random.split(key, 5)
+    log_a = (None if alpha is None else
+             jax.random.uniform(k4, (n_scenarios,), minval=jnp.log(alpha[0]),
+                                maxval=jnp.log(alpha[1])))
     return ScenarioBatch(
         key=jax.random.split(k0, n_scenarios),
         data_min=jax.random.uniform(k1, (n_scenarios,), minval=data_min[0],
@@ -55,6 +78,7 @@ def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
                                     maxval=data_max[1]),
         skew=jax.random.uniform(k3, (n_scenarios,), minval=skew[0],
                                 maxval=skew[1]),
+        alpha=None if log_a is None else jnp.exp(log_a),
     )
 
 
@@ -182,11 +206,15 @@ def _baselines_lite_one(cfg: EnvConfig, key, data_min, data_max,
 
 
 @functools.lru_cache(maxsize=None)
-def _baselines_sharded_jitted(ts: TwinSharding, cfg: EnvConfig):
-    """Compiled sharded-baselines callable for (mesh, config) — cached so
-    repeated sweep calls reuse one jit program instead of retracing a
-    fresh closure each time (both keys are hashable frozen dataclasses)."""
-    fn = functools.partial(_baselines_lite_one, cfg)
+def _sharded_runner(ts: TwinSharding, cfg: EnvConfig, body, *static_args):
+    """Compiled sharded scenario runner for (mesh, config, body, statics):
+    ``body(cfg, *static_args, key, data_min, data_max, skew)`` is vmapped
+    over the scenario axis inside a twin scope and shard_mapped over the
+    mesh (``n_shards == 1`` skips the mesh — the no-op fast path). Cached
+    so repeated sweep calls reuse one jit program instead of retracing a
+    fresh closure each time; every cache key is hashable (frozen
+    dataclasses + a module-level function)."""
+    fn = functools.partial(body, cfg, *static_args)
     if ts.n_shards == 1:
         return jax.jit(jax.vmap(fn))
 
@@ -209,7 +237,95 @@ def run_baselines_sharded(ts: TwinSharding, cfg: EnvConfig,
     dict of replicated (S,) arrays (plus ``average_bs_loads`` (S, M));
     greedy is omitted — see ``_baselines_lite_one``. ``n_shards == 1``
     runs the same lite body without a mesh (no-op fast path)."""
-    return _baselines_sharded_jitted(ts, cfg)(
+    return _sharded_runner(ts, cfg, _baselines_lite_one)(
+        batch.key, batch.data_min, batch.data_max, batch.skew)
+
+
+def population_row(batch: ScenarioBatch, i: int, n_twins: int):
+    """Host-side view of scenario row ``i``'s twin population: the bridge
+    from a scenario batch to the FL substrate.
+
+    Returns ``(data_sizes (n_twins,) np.float32, alpha float | None)`` —
+    the *same* D_j realization every vmapped runner scores for this row
+    (identical key derivation to :func:`scenario_env`: population = stream
+    0 of the row key), plus the row's Dirichlet label-skew alpha for
+    ``repro.fl.partition.scenario_partition`` (None when the batch carries
+    no alpha axis, i.e. IID labels).
+
+    The same-realization contract holds only at matching population
+    sizes: a uniform draw of shape ``(n,)`` is NOT a prefix of the
+    ``(n',)`` draw from the same key, so pass the ``n_twins`` the runner
+    config used (``EnvConfig.n_twins`` == ``FLConfig.n_users``) — a
+    paired FL-vs-latency comparison at different sizes silently scores
+    two different populations.
+    """
+    import numpy as np
+
+    ks = jax.random.split(batch.key[i], 4)
+    u = jax.random.uniform(ks[0], (n_twins,))
+    d = batch.data_min[i] + (batch.data_max[i] - batch.data_min[i]) \
+        * u ** batch.skew[i]
+    alpha = None if batch.alpha is None else float(batch.alpha[i])
+    return np.asarray(d, np.float32), alpha
+
+
+# ---------------------------------------------------------------------------
+# migration runners — association evolving across FL rounds
+# ---------------------------------------------------------------------------
+
+
+def _migration_one(cfg: EnvConfig, mcfg: MigrationConfig, n_rounds: int,
+                   key, data_min, data_max, skew) -> dict:
+    """One scenario under between-round migration: start from the paper's
+    round-robin association, evolve it ``n_rounds`` rounds with the Markov
+    mobility + load-aware kernel, and score Eq. 17 each round. Twin-sharding
+    aware end-to-end (population/assoc local, loads psum'd, migration draws
+    sliced from the full draw)."""
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    b = jnp.full(st.data_sizes.shape, 0.5)
+
+    def body(assoc, k):
+        assoc2 = migration.migration_step(mcfg, k, assoc, st.data_sizes,
+                                          cfg.n_bs)
+        t = latency.round_time(cfg.lat, assoc2, b, st.data_sizes, st.freqs,
+                               up, down)
+        load = assoc_mod.bs_loads(assoc2, st.data_sizes, cfg.n_bs)
+        return assoc2, (t, migration.migration_rate(assoc, assoc2),
+                        load["imbalance"])
+
+    keys = jax.random.split(jax.random.fold_in(key, 3), n_rounds)
+    _, (times, rates, imbalance) = jax.lax.scan(body, st.assoc, keys)
+    return {"round_times": times, "migration_rates": rates,
+            "imbalance": imbalance}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mcfg", "n_rounds"))
+def run_migration(cfg: EnvConfig, mcfg: MigrationConfig,
+                  batch: ScenarioBatch, n_rounds: int = 10) -> dict:
+    """Migration as a first-class scenario axis: every scenario in the
+    batch evolves its association ``n_rounds`` rounds under ``mcfg``
+    (Markov mobility + load-aware re-association) and reports the Eq. 17
+    round-time trajectory. Returns a dict of (S, n_rounds) arrays:
+    ``round_times``, ``migration_rates`` (fraction of twins that moved each
+    round), and the per-round load ``imbalance`` diagnostic."""
+    fn = functools.partial(_migration_one, cfg, mcfg, n_rounds)
+    return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
+                        batch.skew)
+
+
+def run_migration_sharded(ts: TwinSharding, cfg: EnvConfig,
+                          mcfg: MigrationConfig, batch: ScenarioBatch,
+                          n_rounds: int = 10) -> dict:
+    """``run_migration`` with each scenario's twin population sharded over
+    the mesh — migration recomputes association ids in place, so shards
+    never exchange twin rows and the per-round collectives stay M-sized.
+    Scores the same realizations as the single-device runner (full-draw +
+    slice). Returns replicated (S, n_rounds) arrays; ``n_shards == 1`` is
+    the no-op fast path."""
+    return _sharded_runner(ts, cfg, _migration_one, mcfg, n_rounds)(
         batch.key, batch.data_min, batch.data_max, batch.skew)
 
 

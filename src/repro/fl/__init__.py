@@ -1,2 +1,3 @@
-from repro.fl.partition import dirichlet_partition, iid_partition
+from repro.fl.partition import (dirichlet_partition, iid_partition,
+                                scenario_partition)
 from repro.fl.server import DTWNSystem, FLConfig

@@ -38,19 +38,58 @@ class FLConfig:
     batch_size: int = 32
     use_kernel_aggregation: bool = False  # Pallas fedavg_reduce path
     weighted_global: bool = False         # Eq. 5 unweighted (paper) by default
+    # heterogeneity axes (the paper trains IID; these open the non-IID /
+    # skewed-population workloads of the follow-up papers):
+    partition: str = "iid"       # "iid" | "dirichlet" — ignored when a
+    #                              scenario row is passed to DTWNSystem
+    alpha: Optional[float] = None  # Dirichlet label-skew concentration
 
 
 class DTWNSystem:
-    """Host-level simulation of the full DTWN stack for the paper's CNN."""
+    """Host-level simulation of the full DTWN stack for the paper's CNN.
 
-    def __init__(self, cfg: FLConfig, data, seed: int = 0):
+    ``scenario=(batch, i)`` hands the system scenario row ``i`` of a
+    ``repro.core.scenario.ScenarioBatch``: the twin data sizes D_j become
+    that row's (possibly heavy-tailed) population — the SAME realization the
+    latency/association runners score for the row *at the same population
+    size* (pair with ``EnvConfig(n_twins=cfg.n_users)``; PRNG draws at a
+    different n are a different population — see
+    ``scenario.population_row``) — the dataset is carved
+    proportionally to it by ``scenario_partition`` (with the row's Dirichlet
+    label-skew alpha), and every downstream consumer (Eq. 12-17 latency
+    accounting, Eq. 4 aggregation weights, the MARL observation
+    normalization) reads the one ``data_sizes`` array. No parallel code
+    path: ``run_round`` is identical in all modes.
+    """
+
+    def __init__(self, cfg: FLConfig, data, seed: int = 0, scenario=None):
         from repro.fl.client import make_local_trainer
-        from repro.fl.partition import iid_partition
+        from repro.fl.partition import (dirichlet_partition, iid_partition,
+                                        scenario_partition)
 
         (self.x, self.y), (self.x_test, self.y_test), self.dataset = data
         self.cfg = cfg
-        self.shards = iid_partition(self.x.shape[0], cfg.n_users, seed=seed)
-        self.data_sizes = np.asarray([s.size for s in self.shards], np.float32)
+        n_samples = self.x.shape[0]
+        if scenario is not None:
+            from repro.core.scenario import population_row
+
+            batch, row = scenario
+            sizes, alpha = population_row(batch, row, cfg.n_users)
+            self.shards = scenario_partition(n_samples, sizes, labels=self.y,
+                                             alpha=alpha, seed=seed)
+            # latency/aggregation account the scenario's D_j population —
+            # the one the vmapped runners simulate for this row
+            self.data_sizes = np.asarray(sizes, np.float32)
+        elif cfg.partition == "dirichlet":
+            self.shards = dirichlet_partition(
+                self.y, cfg.n_users,
+                alpha=0.5 if cfg.alpha is None else cfg.alpha, seed=seed)
+            self.data_sizes = np.asarray([s.size for s in self.shards],
+                                         np.float32)
+        else:
+            self.shards = iid_partition(n_samples, cfg.n_users, seed=seed)
+            self.data_sizes = np.asarray([s.size for s in self.shards],
+                                         np.float32)
         self.freqs = np.asarray(cfg.bs_freqs_ghz, np.float32)[: cfg.n_bs] * 1e9
         self.trainer = make_local_trainer(cnn.loss_fn, lr=cfg.lr)
         self.wireless = comms.WirelessConfig(n_bs=cfg.n_bs)
@@ -161,7 +200,10 @@ class DTWNSystem:
                 batch_size=cfg.batch_size, local_iters=cfg.local_iters,
                 seed=self._round * 1000 + int(u))
             twin_models.append(p_u)
-            twin_sizes.append(float(shard.size))
+            # Eq. 4 weights are the twin data sizes D_j — the scenario
+            # population when one drives this system, the shard sizes
+            # otherwise (identical in the IID path)
+            twin_sizes.append(float(self.data_sizes[u]))
             twin_bs.append(int(assoc[u]))
 
         # --- Eq. 4: per-BS aggregation + blockchain transactions ---

@@ -163,18 +163,40 @@ def _seg_segment_sum(values, assoc, num_segments: int):
     return jax.ops.segment_sum(values, assoc, num_segments=num_segments)
 
 
+def sort_groups(assoc, num_segments: int):
+    """Contiguous-grouping primitive of the ``"sort"`` backend.
+
+    Args:
+        assoc: (N,) integer segment ids (any order, out-of-range allowed).
+        num_segments: M, the static number of segments.
+
+    Returns:
+        ``(order, bounds)``: ``order`` (N,) int32 is the stable argsort of
+        ``assoc`` — gathering any per-twin array through it makes every
+        segment a contiguous slice — and ``bounds`` (M+1,) int32 marks the
+        slice boundaries: segment m occupies sorted positions
+        ``[bounds[m], bounds[m+1])``. Ids below 0 sort before ``bounds[0]``
+        and ids >= M after ``bounds[M]``, so out-of-range rows (twin-axis
+        padding) fall outside every segment. This is the free by-product of
+        sorting twins by BS that the migration subsystem
+        (``repro.core.migration``) consumes as per-BS segment boundaries.
+    """
+    order = jnp.argsort(assoc)
+    bounds = jnp.searchsorted(jnp.take(assoc, order),
+                              jnp.arange(num_segments + 1), side="left")
+    return order.astype(jnp.int32), bounds.astype(jnp.int32)
+
+
 def _seg_sorted(values, assoc, num_segments: int):
     """Contiguous grouping: sort by segment id, exclusive prefix sum, then
     difference the prefix sums at segment boundaries. All gathers — no
     scatter for XLA-CPU to serialize."""
-    order = jnp.argsort(assoc)
+    order, bounds = sort_groups(assoc, num_segments)
     sv = jnp.take(values, order, axis=0)
-    sa = jnp.take(assoc, order)
     csum = jnp.concatenate(
         [jnp.zeros_like(sv[:1]), jnp.cumsum(sv, axis=0)], axis=0)  # (N+1, K)
     # bounds[m] = first sorted position with id >= m; bounds[M] ends the last
     # in-range segment, so ids outside [0, M) fall off either end and drop.
-    bounds = jnp.searchsorted(sa, jnp.arange(num_segments + 1), side="left")
     return jnp.take(csum, bounds[1:], axis=0) - jnp.take(csum, bounds[:-1],
                                                          axis=0)
 

@@ -1,0 +1,226 @@
+"""Heterogeneous-population tests: partitioner invariants (hypothesis),
+the ScenarioBatch skew axis' tail statistics, the dirichlet empty-user
+regression, and the end-to-end skewed FL run (slow).
+
+Shared partitioner contract (see repro/fl/partition.py): shards disjoint,
+union covers [0, n_samples) exactly, every user non-empty, deterministic
+under a fixed seed.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:  # hypothesis fuzzes the invariants when available (CI installs it);
+    # the deterministic grid below always runs
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+from repro.core import scenario  # noqa: E402
+from repro.fl.partition import (dirichlet_partition, iid_partition,  # noqa: E402
+                                scenario_partition)
+
+KINDS = ("iid", "dirichlet", "scenario")
+
+
+def _make(kind: str, n_samples: int, n_users: int, seed: int):
+    rng = np.random.RandomState(seed ^ 0x5EED)
+    labels = rng.randint(0, 7, size=n_samples)
+    if kind == "iid":
+        return iid_partition(n_samples, n_users, seed=seed)
+    if kind == "dirichlet":
+        return dirichlet_partition(labels, n_users, alpha=0.3, seed=seed)
+    sizes = rng.uniform(10.0, 500.0, size=n_users)
+    return scenario_partition(n_samples, sizes, labels=labels, alpha=0.2,
+                              seed=seed)
+
+
+def _check_invariants(kind, n_samples, n_users, seed):
+    shards = _make(kind, n_samples, n_users, seed)
+    assert len(shards) == n_users
+    allidx = np.concatenate(shards)
+    # union covers [0, n_samples) exactly <=> disjoint + complete
+    assert allidx.size == n_samples
+    assert np.array_equal(np.sort(allidx), np.arange(n_samples))
+    # every user non-empty
+    assert all(s.size >= 1 for s in shards)
+    # deterministic under the seed
+    for s1, s2 in zip(shards, _make(kind, n_samples, n_users, seed)):
+        np.testing.assert_array_equal(s1, s2)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n_samples,n_users",
+                         [(30, 2), (100, 13), (257, 25), (600, 7)])
+def test_partition_invariants_grid(kind, n_samples, n_users):
+    for seed in (0, 1, 12345):
+        _check_invariants(kind, n_samples, n_users, seed)
+
+
+if HAS_HYPOTHESIS:
+    SET = settings(max_examples=25, deadline=None)
+
+    @pytest.mark.parametrize("kind", KINDS)
+    @given(n_samples=st.integers(30, 600), n_users=st.integers(2, 25),
+           seed=st.integers(0, 2 ** 31 - 1))
+    @SET
+    def test_partition_invariants_fuzzed(kind, n_samples, n_users, seed):
+        _check_invariants(kind, n_samples, min(n_users, n_samples), seed)
+
+
+def test_dirichlet_small_alpha_has_no_empty_users():
+    """Regression for the empty-user bug: alpha=0.05 over 100 users used to
+    leave users with zero samples (no min-1 guard)."""
+    labels = np.repeat(np.arange(10), 100)  # 1000 samples, 10 classes
+    for seed in range(5):
+        shards = dirichlet_partition(labels, 100, alpha=0.05, seed=seed)
+        assert min(s.size for s in shards) >= 1, seed
+        assert len(np.unique(np.concatenate(shards))) == 1000
+
+
+def test_scenario_partition_counts_track_population():
+    """Shard sizes must be (near-)proportional to the scenario's D_j — the
+    point of driving the partition from the population."""
+    rng = np.random.RandomState(0)
+    sizes = rng.uniform(50.0, 1000.0, size=30)
+    shards = scenario_partition(3000, sizes, seed=0)
+    counts = np.asarray([s.size for s in shards], np.float64)
+    corr = np.corrcoef(sizes, counts)[0, 1]
+    assert corr > 0.99, corr
+
+
+def test_scenario_partition_alpha_controls_label_concentration():
+    """Small alpha concentrates users on few classes; large alpha
+    approaches the IID concentration."""
+    labels = np.arange(4000) % 10
+    sizes = np.random.RandomState(1).uniform(50, 500, size=40)
+
+    def conc(alpha):
+        shards = scenario_partition(4000, sizes, labels=labels, alpha=alpha,
+                                    seed=0)
+        return np.mean([np.bincount(labels[s], minlength=10).max() / s.size
+                        for s in shards])
+
+    c_skew, c_mild, c_iid = conc(0.05), conc(5.0), conc(None)
+    assert c_skew > 0.5 > c_mild, (c_skew, c_mild)
+    assert c_mild < c_iid + 0.15, (c_mild, c_iid)
+
+
+def test_scenario_batch_skew_produces_heavier_tail():
+    """Statistical check of the scenario skew axis: skew=4 populations must
+    be right-skewed (heavy upper tail) where skew=1 is symmetric-uniform —
+    measured on the same D_j realizations the runners consume
+    (population_row)."""
+    n = 10_000
+    key = jax.random.split(jax.random.PRNGKey(0), 1)
+
+    def pop(skew):
+        batch = scenario.ScenarioBatch(
+            key=key, data_min=np.array([100.0], np.float32),
+            data_max=np.array([1500.0], np.float32),
+            skew=np.array([skew], np.float32))
+        d, alpha = scenario.population_row(batch, 0, n)
+        assert alpha is None  # no alpha axis on this batch
+        return d
+
+    d1, d4 = pop(1.0), pop(4.0)
+    tail1 = np.percentile(d1, 99) / np.median(d1)
+    tail4 = np.percentile(d4, 99) / np.median(d4)
+    nps1 = (d1.mean() - np.median(d1)) / d1.std()
+    nps4 = (d4.mean() - np.median(d4)) / d4.std()
+    assert tail4 > 2.0 * tail1, (tail1, tail4)
+    assert abs(nps1) < 0.05 < nps4, (nps1, nps4)
+
+
+def test_population_row_matches_runner_realization():
+    """population_row must hand the FL substrate the SAME D_j the vmapped
+    runners score (identical key derivation to scenario_env)."""
+    from repro.core.marl.env import EnvConfig
+
+    batch = scenario.make_batch(jax.random.PRNGKey(3), 3)
+    cfg = EnvConfig(n_twins=25, n_bs=4)
+    for i in range(3):
+        st = scenario.scenario_env(cfg, batch.key[i], batch.data_min[i],
+                                   batch.data_max[i], batch.skew[i])
+        d, alpha = scenario.population_row(batch, i, cfg.n_twins)
+        np.testing.assert_allclose(d, np.asarray(st.data_sizes), rtol=1e-6)
+        assert alpha is not None and alpha > 0.0
+
+
+def test_make_batch_alpha_axis_optional():
+    batch = scenario.make_batch(jax.random.PRNGKey(0), 4)
+    assert batch.alpha.shape == (4,)
+    assert bool((batch.alpha > 0).all())
+    batch_iid = scenario.make_batch(jax.random.PRNGKey(0), 4, alpha=None)
+    assert batch_iid.alpha is None
+    # the latency runners are label-blind: alpha must not change them
+    from repro.core.marl.env import EnvConfig
+
+    cfg = EnvConfig(n_twins=20, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6))
+    a = scenario.run_baselines(cfg, batch)
+    b = scenario.run_baselines(cfg, batch._replace(alpha=None))
+    np.testing.assert_array_equal(np.asarray(a["random"]),
+                                  np.asarray(b["random"]))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: a skewed scenario drives an actual FL round (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_skewed_scenario_fl_two_rounds_and_noniid_gap():
+    """2-round FL through DTWNSystem.run_round on a ScenarioBatch row with
+    Dirichlet alpha=0.1 label skew: the round must complete through the
+    per-BS Eq. 4 stacked aggregation + chain, and the non-IID run must land
+    behind the IID run (higher holdout loss, lower accuracy) — the expected
+    sign of the client-drift gap."""
+    from repro.core import association as assoc_mod
+    from repro.data import cifar10
+    from repro.fl import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=2000, max_test=512)
+    cfg = FLConfig(n_users=20, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=2, batch_size=16)
+    assoc = np.asarray(assoc_mod.average_association(20, 3))
+
+    def run2(alpha):
+        scen = None
+        if alpha is not None:
+            batch = scenario.make_batch(jax.random.PRNGKey(5), 1,
+                                        skew=(2.0, 2.0),
+                                        alpha=(alpha, alpha))
+            scen = (batch, 0)
+        sys_ = DTWNSystem(cfg, data, seed=0, scenario=scen)
+        for _ in range(2):
+            info = sys_.run_round(assoc, participating_users=20)
+        assert info["chain_valid"] and info["n_submitted"] >= 1
+        return info["loss"], sys_.test_accuracy(512)
+
+    loss_iid, acc_iid = run2(None)
+    loss_sk, acc_sk = run2(0.1)
+    assert np.isfinite(loss_sk)
+    assert loss_sk > loss_iid, (loss_sk, loss_iid)
+    assert acc_iid > acc_sk, (acc_iid, acc_sk)
+
+
+@pytest.mark.slow
+def test_scenario_population_reaches_latency_accounting():
+    """The scenario D_j must be the data_sizes run_round accounts Eqs.
+    12-17 with — same population for FL and the latency core."""
+    from repro.core import association as assoc_mod
+    from repro.data import cifar10
+    from repro.fl import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=1000, max_test=256)
+    batch = scenario.make_batch(jax.random.PRNGKey(7), 2, skew=(3.0, 4.0))
+    cfg = FLConfig(n_users=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=1, batch_size=8)
+    sys_ = DTWNSystem(cfg, data, seed=0, scenario=(batch, 1))
+    d_row, _ = scenario.population_row(batch, 1, 12)
+    np.testing.assert_allclose(sys_.data_sizes, d_row, rtol=1e-6)
+    info = sys_.run_round(np.asarray(assoc_mod.average_association(12, 3)),
+                          participating_users=4)
+    assert info["round_time_s"] > 0 and np.isfinite(info["loss"])

@@ -1,0 +1,283 @@
+"""Twin-migration subsystem tests (repro.core.migration).
+
+Fast tests pin the single-device semantics: the Markov kernel's identity
+and determinism properties, the sort-backend contiguous grouping that hands
+migration its per-BS segment boundaries, backend parity (sort grouping vs
+the dense one-hot oracle) of post-migration latency/env results, and the
+1-shard no-op guarantees. The 8-forced-host-device bit-parity suite runs as
+slow subprocess tests (the test_sharding.py pattern) and inside
+``benchmarks.bench_scale.sharded_gate`` for CI.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import latency, migration, scenario
+from repro.core.marl import (DDPGConfig, act, env_reset, env_step,
+                             maddpg_init, observe)
+from repro.core.marl.env import EnvConfig
+from repro.core.migration import MigrationConfig
+from repro.core.sharding import TwinSharding
+from repro.kernels.segment_reduce import segment_count
+
+KEY = jax.random.PRNGKey(0)
+LP = latency.LatencyParams()
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _inputs(n, m, seed=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 2)
+    return (jax.random.randint(ks[0], (n,), 0, m),
+            jax.random.uniform(ks[1], (n,), minval=100, maxval=800))
+
+
+# ---------------------------------------------------------------------------
+# kernel semantics
+# ---------------------------------------------------------------------------
+
+
+def test_zero_move_probability_is_identity():
+    assoc, data = _inputs(60, 5)
+    out = migration.migration_step(MigrationConfig(p_move=0.0), KEY, assoc,
+                                   data, 5)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(assoc))
+    assert float(migration.migration_rate(assoc, out)) == 0.0
+
+
+def test_step_deterministic_and_feasible():
+    assoc, data = _inputs(80, 6, seed=1)
+    mcfg = MigrationConfig(p_move=0.5)
+    a1 = migration.migration_step(mcfg, KEY, assoc, data, 6)
+    a2 = migration.migration_step(mcfg, KEY, assoc, data, 6)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    assert a1.dtype == jnp.int32
+    assert bool(((a1 >= 0) & (a1 < 6)).all())  # (18b) preserved
+    # a different key actually moves someone at p_move=0.5
+    a3 = migration.migration_step(mcfg, jax.random.fold_in(KEY, 1), assoc,
+                                  data, 6)
+    assert float(migration.migration_rate(assoc, a3)) > 0.0
+
+
+def test_locality_biases_destinations_to_ring_neighbors():
+    """With strong locality and no load pull, movers land on adjacent BSs."""
+    n, m = 4000, 8
+    assoc = jnp.zeros((n,), jnp.int32) + 3
+    data = jnp.full((n,), 100.0)
+    mcfg = MigrationConfig(p_move=1.0, locality=8.0, load_weight=0.0)
+    out = np.asarray(migration.migration_step(mcfg, KEY, assoc, data, m))
+    ring = np.minimum(np.abs(out - 3), m - np.abs(out - 3))
+    assert (ring <= 1).mean() > 0.9, (ring <= 1).mean()
+
+
+def test_load_weight_rebalances_over_rounds():
+    """The load-aware pull must shrink imbalance vs the pure mobility
+    kernel from a maximally imbalanced start."""
+    n, m = 2000, 5
+    assoc = jnp.zeros((n,), jnp.int32)  # everyone on BS 0
+    data = jax.random.uniform(KEY, (n,), minval=100, maxval=800)
+
+    def final_imbalance(load_weight):
+        mcfg = MigrationConfig(p_move=0.3, locality=0.0,
+                               load_weight=load_weight)
+        final, _, _ = migration.evolve_association(mcfg, KEY, assoc, data,
+                                                   m, 10)
+        loads = np.asarray(segment_count(final, m))
+        return loads.max() / loads.mean()
+
+    assert final_imbalance(4.0) < final_imbalance(0.0), "no rebalancing"
+
+
+def test_bs_segments_boundaries_match_counts():
+    assoc, data = _inputs(123, 7, seed=2)
+    mcfg = MigrationConfig(p_move=0.4)
+    assoc2 = migration.migration_step(mcfg, KEY, assoc, data, 7)
+    order, bounds = migration.bs_segments(assoc2, 7)
+    counts = np.asarray(segment_count(assoc2, 7, backend="onehot"))
+    np.testing.assert_array_equal(np.diff(np.asarray(bounds)),
+                                  counts.astype(np.int64))
+    # the gathered association is contiguous per BS
+    sorted_assoc = np.asarray(assoc2)[np.asarray(order)]
+    for bs in range(7):
+        seg = sorted_assoc[int(bounds[bs]):int(bounds[bs + 1])]
+        assert (seg == bs).all()
+
+
+def test_flow_matrix_marginals():
+    assoc, data = _inputs(200, 5, seed=3)
+    assoc2 = migration.migration_step(MigrationConfig(p_move=0.5), KEY,
+                                      assoc, data, 5)
+    flows = np.asarray(migration.migration_flows(assoc, assoc2, 5))
+    np.testing.assert_allclose(flows.sum(), 200.0)
+    np.testing.assert_allclose(flows.sum(1),
+                               np.asarray(segment_count(assoc, 5)))
+    np.testing.assert_allclose(flows.sum(0),
+                               np.asarray(segment_count(assoc2, 5)))
+
+
+# ---------------------------------------------------------------------------
+# backend parity: sort-backend grouping vs the one-hot oracle
+# ---------------------------------------------------------------------------
+
+
+def test_post_migration_latency_parity_sort_vs_onehot():
+    """Post-migration per-BS latency must be identical whether the segment
+    reductions run through the sort backend's contiguous grouping or the
+    dense one-hot oracle (satellite gate; also in bench_scale --smoke)."""
+    for n, m in [(64, 5), (123, 7), (1024, 8)]:
+        assoc, data = _inputs(n, m, seed=n)
+        assoc2 = migration.migration_step(
+            MigrationConfig(p_move=0.5, load_weight=1.0), KEY, assoc, data,
+            m)
+        b = jnp.full((n,), 0.5)
+        freqs = jnp.linspace(1e9, 4e9, m)
+        up = jnp.full((m,), 1e7)
+        t_sort = latency.round_time(LP, assoc2, b, data, freqs, up, up,
+                                    backend="sort")
+        t_oracle = latency.round_time_onehot(LP, assoc2, b, data, freqs, up,
+                                             up)
+        np.testing.assert_allclose(float(t_sort), float(t_oracle),
+                                   rtol=1e-5, err_msg=f"N={n} M={m}")
+        per_sort = latency.round_time_per_bs(LP, assoc2, b, data, freqs, up,
+                                             up, backend="sort")
+        per_onehot = latency.round_time_per_bs(LP, assoc2, b, data, freqs,
+                                               up, up, backend="onehot")
+        np.testing.assert_allclose(np.asarray(per_sort),
+                                   np.asarray(per_onehot), rtol=1e-5)
+
+
+def test_env_step_migration_backend_invariance():
+    """The env's post-migration results must not depend on the reduction
+    backend: rerunning the realized association through sort and onehot
+    reductions gives the same reward."""
+    cfg = EnvConfig(n_twins=40, n_bs=5,
+                    migration=MigrationConfig(p_move=0.6))
+    st = env_reset(cfg, KEY)
+    agent = maddpg_init(cfg, DDPGConfig(hidden=(32, 32)), KEY)
+    a = act(cfg, agent, observe(cfg, st))
+    _, r, info = env_step(cfg, st, a, KEY)
+    assert "migration_rate" in info
+    up = np.asarray(info["uplink"])
+    for be in ("sort", "onehot"):
+        per = latency.round_time_per_bs(
+            cfg.lat, info["assoc"], info["b"], st.data_sizes, st.freqs,
+            jnp.asarray(up), jnp.zeros_like(jnp.asarray(up)) + 1e7,
+            backend=be)
+        assert np.isfinite(np.asarray(per)).all()
+    t_sort = latency.round_time(cfg.lat, info["assoc"], info["b"],
+                                st.data_sizes, st.freqs, jnp.asarray(up),
+                                jnp.asarray(up), backend="sort")
+    t_oracle = latency.round_time_onehot(cfg.lat, info["assoc"], info["b"],
+                                         st.data_sizes, st.freqs,
+                                         jnp.asarray(up), jnp.asarray(up))
+    np.testing.assert_allclose(float(t_sort), float(t_oracle), rtol=1e-5)
+
+
+def test_env_without_migration_unchanged():
+    """migration=None must trace the exact pre-migration step (no extra
+    info key, no extra PRNG consumption)."""
+    cfg = EnvConfig(n_twins=30, n_bs=5)
+    st = env_reset(cfg, KEY)
+    agent = maddpg_init(cfg, DDPGConfig(hidden=(32, 32)), KEY)
+    a = act(cfg, agent, observe(cfg, st))
+    _, r, info = env_step(cfg, st, a, KEY)
+    assert "migration_rate" not in info
+    np.testing.assert_array_equal(
+        np.asarray(info["assoc"]),
+        np.asarray(jnp.argmax(a.scores, axis=0).astype(jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# scenario runner + sharding no-op fast paths
+# ---------------------------------------------------------------------------
+
+
+def test_run_migration_shapes_and_rates():
+    cfg = EnvConfig(n_twins=30, n_bs=4)
+    mcfg = MigrationConfig(p_move=0.25)
+    batch = scenario.make_batch(jax.random.fold_in(KEY, 4), 3)
+    out = scenario.run_migration(cfg, mcfg, batch, n_rounds=6)
+    for k in ("round_times", "migration_rates", "imbalance"):
+        assert out[k].shape == (3, 6), (k, out[k].shape)
+    rates = np.asarray(out["migration_rates"])
+    assert ((rates >= 0.0) & (rates <= 1.0)).all()
+    assert rates.mean() > 0.05  # p_move=0.25 actually moves twins
+
+
+def test_single_shard_migration_is_identity():
+    ts = TwinSharding.make(1)
+    assoc, data = _inputs(50, 5, seed=9)
+    mcfg = MigrationConfig(p_move=0.4)
+    got = migration.sharded_migration_step(ts, mcfg, KEY, assoc, data, 5)
+    ref = migration.migration_step(mcfg, KEY, assoc, data, 5)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_single_shard_migration_runner_matches_full():
+    ts = TwinSharding.make(1)
+    cfg = EnvConfig(n_twins=30, n_bs=4)
+    mcfg = MigrationConfig(p_move=0.3)
+    batch = scenario.make_batch(jax.random.fold_in(KEY, 5), 3)
+    lite = scenario.run_migration_sharded(ts, cfg, mcfg, batch, n_rounds=4)
+    full = scenario.run_migration(cfg, mcfg, batch, n_rounds=4)
+    for k in full:
+        np.testing.assert_allclose(np.asarray(lite[k]), np.asarray(full[k]),
+                                   rtol=1e-6, err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# 8-host-device bit-parity (subprocess — the test_sharding.py pattern)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_migration_bit_parity_8_devices():
+    """Single-device vs 8-forced-host-device sharded migration step must be
+    BIT-identical (same global PRNG draws sliced per shard), on divisible,
+    ragged, and empty-shard populations; the sharded scenario migration
+    runner must match the single-device trajectories."""
+    code = """
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import migration, scenario
+        from repro.core.migration import MigrationConfig
+        from repro.core.marl.env import EnvConfig
+        from repro.core.sharding import TwinSharding
+
+        ts = TwinSharding.make()
+        assert ts.n_shards == 8, ts.n_shards
+        mcfg = MigrationConfig(p_move=0.4, locality=1.5, load_weight=0.8)
+        key = jax.random.PRNGKey(7)
+        for n, m in [(64, 5), (37, 5), (5, 3)]:
+            ks = jax.random.split(jax.random.fold_in(key, n), 2)
+            assoc = jax.random.randint(ks[0], (n,), 0, m)
+            data = jax.random.uniform(ks[1], (n,), minval=100, maxval=800)
+            got = ts.unpad_twin(
+                migration.sharded_migration_step(ts, mcfg, key, assoc,
+                                                 data, m), n)
+            ref = migration.migration_step(mcfg, key, assoc, data, m)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+        cfg = EnvConfig(n_twins=41, n_bs=7)
+        batch = scenario.make_batch(jax.random.PRNGKey(2), 4)
+        out = scenario.run_migration_sharded(ts, cfg, mcfg, batch,
+                                             n_rounds=6)
+        ref = scenario.run_migration(cfg, mcfg, batch, n_rounds=6)
+        for k in ref:
+            np.testing.assert_allclose(np.asarray(out[k]),
+                                       np.asarray(ref[k]), rtol=1e-5,
+                                       err_msg=k)
+        print("SHARDED_MIGRATION_BIT_PARITY_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARDED_MIGRATION_BIT_PARITY_OK" in out.stdout

@@ -200,6 +200,7 @@ def test_sharded_parity_gate_8_devices():
         capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "scan-trainer parity ok" in out.stdout, out.stdout
+    assert "migration parity ok" in out.stdout, out.stdout
 
 
 @pytest.mark.slow

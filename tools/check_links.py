@@ -3,10 +3,12 @@ resolves to a real file, that intra-document anchors (``#section``
 fragments, including same-file ``(#...)`` links) point at an existing
 heading, and that every repo code path named in inline code (backticked
 ``src/...``, ``tests/...``, ``benchmarks/...``, ``tools/...``,
-``docs/...``, ``examples/...`` spans) exists on disk — so a doc can never
-describe a module that was moved or deleted. ``results/...`` paths are
-exempt: they are runtime bench artifacts, gitignored, so checking them
-would fail every fresh checkout. External (scheme://) links are not
+``docs/...``, ``examples/...``, plus the committed result sets
+``results/bench/...`` and ``results/ci/...`` spans) exists on disk — so a
+doc can never describe a module that was moved or deleted. Other
+``results/...`` paths (dryrun artifacts, CSVs) are exempt: they are
+runtime outputs, gitignored, so checking them would fail every fresh
+checkout. External (scheme://) links are not
 fetched; globbed paths (``*``) and ``path:symbol`` suffixes are handled
 (the path part is checked).
 
@@ -26,7 +28,8 @@ HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 # inline-code spans that name a repo path: `src/...`, `tests/...`, etc.
 CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
 CODE_PATH_RE = re.compile(
-    r"^(?:src|tests|benchmarks|tools|docs|examples)/[\w./*-]+$")
+    r"^(?:src|tests|benchmarks|tools|docs|examples|results/bench|results/ci)"
+    r"/[\w./*-]+$")
 # code paths resolve against the repo root, not the doc's directory
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,0 +1,93 @@
+"""Tier-1 timing budget gate.
+
+Runs the tier-1 suite (``pytest -m "not slow"``) and fails if its wall time
+regresses more than ``budget_factor`` x over the recorded baseline — the
+guard against a "fast" test quietly turning into a minutes-scale one (the
+failure mode this repo's fast/slow marker split exists to prevent).
+
+    python tools/check_timing.py            # run suite + enforce budget
+    python tools/check_timing.py --record   # (re)record the baseline here
+
+The baseline lives in ``results/ci/timing_baseline.json`` and is
+machine-dependent by nature: re-record it (--record) when the runner class
+changes, and read the gate as catching >2x blowups, not small drift. The
+factor can be widened per-run via ``REPRO_TIMING_BUDGET_FACTOR`` (e.g. a
+known-slow CI pool). A missing baseline file downgrades the gate to a
+warning so forks without one still pass — commit the file to arm it.
+Exits nonzero on test failure or budget breach.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE_PATH = os.path.join(ROOT, "results", "ci", "timing_baseline.json")
+
+
+def run_tier1() -> tuple:
+    """Run the tier-1 suite; returns (returncode, wall_seconds)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    t0 = time.monotonic()
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow"],
+        cwd=ROOT, env=env)
+    return proc.returncode, time.monotonic() - t0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--record", action="store_true",
+                    help="record this run as the new baseline")
+    args = ap.parse_args()
+
+    rc, secs = run_tier1()
+    if rc != 0:
+        print(f"check_timing: tier-1 suite FAILED (rc={rc}) "
+              f"after {secs:.0f}s — budget not evaluated")
+        return rc
+
+    if args.record:
+        os.makedirs(os.path.dirname(BASELINE_PATH), exist_ok=True)
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"tier1_wall_seconds": round(secs, 1),
+                       "budget_factor": 2.0,
+                       "recorded_on": platform.platform()}, f, indent=2)
+            f.write("\n")
+        print(f"check_timing: recorded baseline {secs:.0f}s "
+              f"-> {os.path.relpath(BASELINE_PATH, ROOT)}")
+        return 0
+
+    if not os.path.exists(BASELINE_PATH):
+        print(f"check_timing: tier-1 passed in {secs:.0f}s; no baseline "
+              f"recorded ({os.path.relpath(BASELINE_PATH, ROOT)} missing) — "
+              f"run with --record to arm the budget gate")
+        return 0
+
+    with open(BASELINE_PATH) as f:
+        base = json.load(f)
+    factor = float(os.environ.get("REPRO_TIMING_BUDGET_FACTOR",
+                                  base.get("budget_factor", 2.0)))
+    budget = base["tier1_wall_seconds"] * factor
+    verdict = "within" if secs <= budget else "OVER"
+    print(f"check_timing: tier-1 wall {secs:.0f}s vs budget {budget:.0f}s "
+          f"({base['tier1_wall_seconds']:.0f}s baseline x {factor:g}) — "
+          f"{verdict} budget")
+    if secs > budget:
+        print("check_timing: a previously-fast path regressed >"
+              f"{factor:g}x; mark new heavy tests @pytest.mark.slow or "
+              "re-record the baseline if the machine class changed "
+              "(python tools/check_timing.py --record)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
