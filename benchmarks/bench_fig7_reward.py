@@ -9,7 +9,6 @@ trainer's invariant)."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks.common import Timer, save_result
 from repro.core.marl import (DDPGConfig, act, clip_action, compact_obs,

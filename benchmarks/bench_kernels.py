@@ -26,11 +26,11 @@ def time_call(fn, *args, reps=3):
 
 
 def main(reduced: bool = True):
-    key = jax.random.PRNGKey(0)
+    k_q, k_k, k_v, k_ssd, k_sr = jax.random.split(jax.random.PRNGKey(0), 5)
     S = 512 if reduced else 2048
-    q = jax.random.normal(key, (1, S, 8, 64), jnp.float32)
-    k = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
-    v = jax.random.normal(key, (1, S, 2, 64), jnp.float32)
+    q = jax.random.normal(k_q, (1, S, 8, 64), jnp.float32)
+    k = jax.random.normal(k_k, (1, S, 2, 64), jnp.float32)
+    v = jax.random.normal(k_v, (1, S, 2, 64), jnp.float32)
 
     with Timer() as t:
         chunked = jax.jit(lambda q, k, v: attention_chunked(
@@ -43,7 +43,7 @@ def main(reduced: bool = True):
 
         # ssd at model-realistic chunk
         B, T, H, P, N = 1, 1024 if not reduced else 256, 4, 32, 32
-        ks = jax.random.split(key, 5)
+        ks = jax.random.split(k_ssd, 5)
         x = jax.random.normal(ks[0], (B, T, H, P))
         dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
         A = -jnp.exp(jax.random.normal(ks[2], (H,)))
@@ -55,7 +55,7 @@ def main(reduced: bool = True):
         # segment-reduce parity at a bench shape: the Pallas kernel body
         # (forced through the interpreter) vs the dense one-hot oracle
         n_sr, m_sr = (4096, 8) if reduced else (16384, 16)
-        kr = jax.random.split(key, 2)
+        kr = jax.random.split(k_sr, 2)
         assoc = jax.random.randint(kr[0], (n_sr,), 0, m_sr)
         vals = jax.random.uniform(kr[1], (n_sr,), minval=-1.0, maxval=1.0)
         sr_err = float(jnp.max(jnp.abs(

@@ -371,7 +371,9 @@ def sharded_gate() -> None:
     for k in tr1:
         np.testing.assert_allclose(np.asarray(tr1[k]), np.asarray(tr2[k]),
                                    rtol=2e-3, atol=1e-5, err_msg=k)
-    diffs = [float(jnp.max(jnp.abs(x - y))) for x, y in zip(
+    # host-side per-leaf parity diff, not a cross-twin reduction
+    diffs = [float(jnp.max(jnp.abs(x - y)))  # replint: disable=R004
+             for x, y in zip(
         jax.tree_util.tree_leaves(st1.agent.actor),
         jax.tree_util.tree_leaves(st2.agent.actor))]
     assert max(diffs) < 1e-4, max(diffs)

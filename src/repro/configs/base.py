@@ -8,7 +8,6 @@ family (<=2 layers, d_model<=512, <=4 experts) for CPU smoke tests.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

@@ -58,11 +58,17 @@ def hierarchical_fedavg(models: Sequence, data_sizes, assoc,
                         n_bs: int, *, weighted_global: bool = False) -> object:
     """Two-tier aggregation (Eqs. 4-5) of a host list of N twin models
     grouped by ``assoc`` (N,) int -> BS in [0, n_bs). The small-N reference
-    path; ``hierarchical_fedavg_stacked`` is the jit-safe O(N+M) one."""
+    path; ``hierarchical_fedavg_stacked`` is the O(N+M) one.
+
+    ``assoc`` must be concrete (the grouping is resolved at trace time),
+    but models and ``data_sizes`` may be traced: the per-BS weights stay on
+    device end to end, so the whole function is jit-traceable — no
+    ``float()`` host sync between Eq. 4 and Eq. 5.
+    """
     import numpy as np
 
     assoc = np.asarray(assoc)
-    data_sizes = np.asarray(data_sizes, dtype=np.float32)
+    data_sizes = jnp.asarray(data_sizes, jnp.float32)
     bs_models, bs_data = [], []
     for j in range(n_bs):
         idx = np.nonzero(assoc == j)[0]
@@ -70,7 +76,7 @@ def hierarchical_fedavg(models: Sequence, data_sizes, assoc,
             continue
         bs_models.append(bs_aggregate([models[i] for i in idx],
                                       data_sizes[idx]))
-        bs_data.append(float(data_sizes[idx].sum()))
+        bs_data.append(jnp.sum(data_sizes[idx]))
     return global_aggregate(bs_models, bs_data,
                             weighted_global=weighted_global)
 

@@ -113,6 +113,14 @@ def t_broadcast(params: LatencyParams, assoc, uplink, n_bs: int, *,
 # -- dense one-hot references (the seed implementation) -----------------------
 # Kept as the numerical oracle for the segment-sum paths above: O(N*M) memory,
 # usable only at small N. tests/test_scale.py checks equivalence.
+#
+# replint R001 contract (tools/replint): dense `jnp.eye(M)[assoc]`
+# contractions are banned outside functions named ``*_onehot`` / ``*_oracle``
+# — everything below carries the suffix on purpose, and any new dense path
+# must either live here under the same naming or go through
+# ``repro.kernels.segment_reduce``. Audited 2026-08: t_cmp_onehot,
+# t_local_agg_onehot, t_broadcast_onehot, round_time_onehot are the only
+# dense one-hot sites in src/, each a named oracle with a segment-sum twin.
 
 
 def t_cmp_onehot(params: LatencyParams, assoc, b, data_sizes,

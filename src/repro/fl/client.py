@@ -5,7 +5,6 @@ A twin trains the shared model on its own shard with SGD for
 block interval T, Section II-C) and returns the updated parameters."""
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -30,14 +30,15 @@ def main(argv=None):
     cfg = get_arch_config(args.arch) if args.full else get_smoke_config(args.arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
-    params = model.init(key)
+    k_init, k_frames, k_prompts, k_embeds = jax.random.split(key, 4)
+    params = model.init(k_init)
     B, P, G = args.batch, args.prompt_len, args.gen
     max_len = P + G
 
     if cfg.is_encoder_decoder:
         from repro.models import encdec
 
-        frames = jax.random.normal(key, (B, max(P // 4, 8), cfg.d_model))
+        frames = jax.random.normal(k_frames, (B, max(P // 4, 8), cfg.d_model))
         enc_out = encdec.encode(cfg, params, frames)
         cache = model.init_cache(B, max_len, enc_out.shape[1])
         cache["cross"] = encdec.prefill_cross_cache(cfg, params, enc_out)
@@ -55,9 +56,9 @@ def main(argv=None):
         print(gen[:, :24])
         return 0
 
-    prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+    prompts = jax.random.randint(k_prompts, (B, P), 0, cfg.vocab_size)
     batch = ({"tokens": prompts} if cfg.modality == "text" else {
-        "embeds": jax.random.normal(key, (B, P, cfg.d_model)),
+        "embeds": jax.random.normal(k_embeds, (B, P, cfg.d_model)),
         "positions": jnp.tile(jnp.arange(P)[None, :, None], (B, 1, 3)),
     })
 

@@ -3,7 +3,6 @@ DeepSeek-V2 MLA (multi-head latent attention with compressed KV cache)."""
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ the shape's seq_len.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,10 +10,8 @@ Every architecture exposes:
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
-import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import encdec, transformer

@@ -13,8 +13,7 @@ Caches are pytrees with a leading block axis, scanned alongside the params.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

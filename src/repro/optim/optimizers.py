@@ -14,8 +14,7 @@ All follow the same functional interface:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

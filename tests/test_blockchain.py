@@ -1,0 +1,125 @@
+"""DPoS ledger mechanics (paper Section II-C, Eq. 6; DESIGN.md §9.4)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockchain as bc
+
+
+# ---------------------------------------------------------------------------
+# Eq. 6: stake initialization proportional to hosted twin data
+# ---------------------------------------------------------------------------
+
+
+def test_stake_init_proportional_to_twin_data():
+    chain = bc.DPoSChain(4, [10.0, 30.0, 40.0, 20.0], s_ini=100.0)
+    np.testing.assert_allclose(chain.stakes, [10.0, 30.0, 40.0, 20.0])
+    assert abs(sum(chain.stakes) - 100.0) < 1e-9
+
+
+def test_stake_init_zero_data_does_not_divide_by_zero():
+    chain = bc.DPoSChain(3, [0.0, 0.0, 0.0])
+    assert chain.stakes == [0.0, 0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# leader election / producer rotation
+# ---------------------------------------------------------------------------
+
+
+def test_elect_producers_top_stake_with_deterministic_ties():
+    chain = bc.DPoSChain(5, [5.0, 20.0, 20.0, 1.0, 30.0], n_producers=3)
+    # stakes are proportional, order preserved: top-3 = node 4, then the
+    # 20.0 tie broken by index (1 before 2)
+    assert chain.elect_producers() == [4, 1, 2]
+
+
+def test_producer_rotates_round_robin_over_blocks():
+    chain = bc.DPoSChain(4, [4.0, 3.0, 2.0, 1.0], n_producers=2)
+    seen = []
+    for _ in range(4):
+        seen.append(chain.current_producer())
+        chain.produce_block()
+    assert seen == [0, 1, 0, 1]
+
+
+def test_n_producers_clamped_to_node_count():
+    chain = bc.DPoSChain(2, [1.0, 2.0], n_producers=21)
+    assert chain.elect_producers() == [1, 0]
+
+
+# ---------------------------------------------------------------------------
+# verification gate round-trip (submit -> verify -> block -> audit)
+# ---------------------------------------------------------------------------
+
+
+def _params(v):
+    return {"w": jnp.full((2, 2), v)}
+
+
+def test_verify_round_median_gate_and_rewards():
+    chain = bc.DPoSChain(3, [1.0, 1.0, 1.0], s_ini=9.0, reward=2.0,
+                         tolerance=0.5)
+    stakes0 = list(chain.stakes)
+    chain.submit_model(0, _params(0.1), round_=0, holdout_loss=0.40)
+    chain.submit_model(1, _params(0.2), round_=0, holdout_loss=0.50)
+    chain.submit_model(2, _params(9.9), round_=0, holdout_loss=5.00)
+    verdicts = chain.verify_round()
+    # median = 0.5; accept iff loss <= 1.0 -> node 2's poisoned update fails
+    assert verdicts == {0: True, 1: True, 2: False}
+    assert chain.stakes[0] == stakes0[0] + 2.0
+    assert chain.stakes[1] == stakes0[1] + 2.0
+    assert chain.stakes[2] == stakes0[2]
+
+
+def test_verify_round_empty_pending_is_noop():
+    chain = bc.DPoSChain(2, [1.0, 1.0])
+    assert chain.verify_round() == {}
+
+
+def test_block_round_trip_records_verified_senders():
+    chain = bc.DPoSChain(3, [3.0, 2.0, 1.0])
+    chain.submit_model(0, _params(1.0), round_=0, holdout_loss=0.3)
+    chain.submit_model(1, _params(2.0), round_=0, holdout_loss=0.4)
+    chain.submit_twin_update(2, "ab" * 32, round_=0)
+    chain.verify_round()
+    blk = chain.produce_block()
+    assert chain.pending == []
+    assert blk.index == 0 and blk.prev_hash == bc.GENESIS_HASH
+    assert len(blk.transactions) == 3
+    assert sorted(chain.verified_senders(0)) == [0, 1]
+    assert chain.verified_senders(1) == []
+
+
+def test_validate_chain_accepts_honest_and_rejects_tampered():
+    chain = bc.DPoSChain(3, [1.0, 2.0, 3.0])
+    for r in range(3):
+        chain.submit_model(r % 3, _params(float(r)), round_=r,
+                           holdout_loss=0.1)
+        chain.produce_block()
+    assert chain.validate_chain()
+    # tamper: swap in a transaction with a different payload hash
+    blk = chain.blocks[1]
+    forged = dataclasses.replace(blk.transactions[0],
+                                 payload_hash="f" * 64)
+    chain.blocks[1] = dataclasses.replace(blk, transactions=(forged,))
+    assert not chain.validate_chain()
+
+
+def test_hash_pytree_sensitive_to_values():
+    a = bc.hash_pytree(_params(1.0))
+    b = bc.hash_pytree(_params(1.0))
+    c = bc.hash_pytree(_params(1.0 + 1e-6))
+    assert a == b != c
+
+
+def test_same_loss_models_distinct_hashes_round_trip():
+    # two honest nodes with identical losses both pass; their txs carry
+    # distinct payload hashes so the audit trail distinguishes them
+    chain = bc.DPoSChain(2, [1.0, 1.0])
+    t0 = chain.submit_model(0, _params(1.0), round_=0, holdout_loss=0.2)
+    t1 = chain.submit_model(1, _params(2.0), round_=0, holdout_loss=0.2)
+    assert t0.payload_hash != t1.payload_hash
+    assert chain.verify_round() == {0: True, 1: True}

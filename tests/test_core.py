@@ -224,6 +224,27 @@ def test_paper_unweighted_global_differs_when_unbalanced():
     assert float(flat["w"][0, 0]) > 9.0
 
 
+def test_hierarchical_fedavg_jit_traceable():
+    """Regression: the host-list path must stay jit-traceable given a
+    concrete assoc — the old ``float(data_sizes[idx].sum())`` between
+    Eq. 4 and Eq. 5 raised TracerArrayConversionError and forced a
+    device->host sync per round."""
+    models = _models([1.0, 2.0, 3.0, 4.0])
+    assoc = np.array([0, 1, 1, 0])
+
+    @jax.jit
+    def agg(stacked_w, stacked_b, sizes):
+        ms = [{"w": stacked_w[i], "b": stacked_b[i]} for i in range(4)]
+        return hierarchy.hierarchical_fedavg(ms, sizes, assoc, 2)
+
+    sizes = jnp.array([1.0, 2.0, 3.0, 4.0])
+    out = agg(jnp.stack([m["w"] for m in models]),
+              jnp.stack([m["b"] for m in models]), sizes)
+    ref = hierarchy.hierarchical_fedavg(models, np.array(sizes), assoc, 2)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(ref["w"]),
+                               rtol=1e-6)
+
+
 def test_kernel_aggregation_matches_host():
     models = _models([1.0, 2.0, 5.0])
     sizes = [1.0, 2.0, 2.0]

@@ -1,7 +1,6 @@
 """Distribution tests: sharding specs, small-mesh lowering (8 host devices in
 a subprocess — the dry-run's own machinery at debug scale), hierarchical
 local-SGD equivalence."""
-import json
 import os
 import subprocess
 import sys

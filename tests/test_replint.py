@@ -1,0 +1,146 @@
+"""replint: fixture self-tests + engine behaviors (pragmas, CLI, callgraph).
+
+The fixture corpus under tools/replint/fixtures is the primary spec: every
+rule must fire on its known-bad snippet (``# expect: RXXX`` lines) and stay
+silent on the matching known-good one. These tests wrap that corpus for
+pytest and pin the engine behaviors the fixtures can't express.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from tools.replint import engine  # noqa: E402
+from tools.replint.engine import Project, run_project  # noqa: E402
+import tools.replint.rules  # noqa: E402,F401
+
+
+def _project(tmp_path, source, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(source))
+    return Project.from_paths([name], root=tmp_path)
+
+
+def test_selftest_corpus_green(capsys):
+    assert engine.run_selftest() == 0
+
+
+def test_rules_registered():
+    assert set(engine.RULES) >= {"R001", "R002", "R003", "R004", "R005"}
+
+
+def test_line_pragma_suppresses_single_rule(tmp_path):
+    proj = _project(tmp_path, """\
+        import jax
+        def f(key):
+            a = jax.random.uniform(key, (2,))
+            b = jax.random.normal(key, (2,))  # replint: disable=R002
+            return a + b
+    """)
+    findings, suppressed = run_project(proj)
+    assert findings == []
+    assert suppressed == 1
+
+
+def test_line_pragma_does_not_suppress_other_rules(tmp_path):
+    proj = _project(tmp_path, """\
+        import jax
+        def f(key):
+            a = jax.random.uniform(key, (2,))
+            b = jax.random.normal(key, (2,))  # replint: disable=R001
+            return a + b
+    """)
+    findings, suppressed = run_project(proj)
+    assert [f.rule for f in findings] == ["R002"]
+    assert suppressed == 0
+
+
+def test_file_pragma_suppresses_whole_file(tmp_path):
+    proj = _project(tmp_path, """\
+        # replint: disable-file=R002
+        import jax
+        def f(key):
+            a = jax.random.uniform(key, (2,))
+            return a + jax.random.normal(key, (2,))
+        def g(key):
+            a = jax.random.uniform(key, (2,))
+            return a + jax.random.normal(key, (2,))
+    """)
+    findings, suppressed = run_project(proj)
+    assert findings == []
+    assert suppressed == 2
+
+
+def test_finding_format_is_clickable(tmp_path):
+    proj = _project(tmp_path, """\
+        import jax
+        def f(key):
+            a = jax.random.uniform(key, (2,))
+            return a + jax.random.normal(key, (2,))
+    """)
+    findings, _ = run_project(proj)
+    assert len(findings) == 1
+    out = findings[0].format()
+    assert out.startswith("mod.py:4:") and " R002 " in out
+
+
+def test_callgraph_reachability_through_helper(tmp_path):
+    proj = _project(tmp_path, """\
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            s = jnp.sum(x)
+            return float(s)
+
+        def host_only(x):
+            s = jnp.sum(x)
+            return float(s)
+    """)
+    findings, _ = run_project(proj)
+    # helper is reachable from the jitted entry -> flagged; host_only is not
+    assert [f.rule for f in findings] == ["R003"]
+    assert findings[0].line == 10
+
+
+def test_syntax_error_reported_not_crashed(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    proj = Project.from_paths(["broken.py"], root=tmp_path)
+    findings, _ = run_project(proj)
+    assert [f.rule for f in findings] == ["SYNTAX"]
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.uniform(key, (2,))\n"
+        "    return a + jax.random.normal(key, (2,))\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    env_cmd = [sys.executable, "-m", "tools.replint"]
+    r = subprocess.run(env_cmd + [str(bad)], cwd=REPO,
+                       capture_output=True, text=True)
+    assert r.returncode == 1 and "R002" in r.stdout
+    r = subprocess.run(env_cmd + [str(good)], cwd=REPO,
+                       capture_output=True, text=True)
+    assert r.returncode == 0
+    r = subprocess.run(env_cmd + ["--selftest"], cwd=REPO,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_repo_is_clean():
+    """The gate the CI lint job enforces: zero un-pragma'd findings."""
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.replint", "src", "examples",
+         "benchmarks"], cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout

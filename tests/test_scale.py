@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import association as assoc_mod
 from repro.core import hierarchy, latency, scenario
 from repro.core.marl import (DDPGConfig, TrainConfig, env_reset, env_step,
                              observe, train)

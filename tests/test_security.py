@@ -4,7 +4,6 @@ of the BS are ... verified by other BSs to ensure the quality')."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import blockchain as bc
 from repro.core import hierarchy

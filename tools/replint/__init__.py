@@ -1,0 +1,20 @@
+"""replint — repo-native static analysis for the DTWN hot-path invariants.
+
+The simulation core earns its latency claims through a handful of
+hand-maintained invariants (segment-reduce dispatch instead of dense
+one-hots, PRNG key discipline, no host sync inside traced code, twin-scope
+reductions inside shard_map regions, structurally-stable scan carries).
+This package machine-enforces them: a rule registry over Python ASTs
+(stdlib ``ast`` only — no runtime dependencies), per-line / per-file
+``# replint: disable=<rule>`` pragmas, fixture-driven self-tests, and a CI
+gate (``python -m tools.replint src examples benchmarks``).
+
+See ``tools/replint/README.md`` for the pragma syntax and how to add a
+rule, and ``docs/ARCHITECTURE.md`` ("Enforced invariants") for the mapping
+from each rule to the invariant and the PR that established it.
+"""
+from tools.replint.engine import (Finding, Project, Rule, RULES, register,
+                                  run_paths, run_selftest)
+
+__all__ = ["Finding", "Project", "Rule", "RULES", "register", "run_paths",
+           "run_selftest"]

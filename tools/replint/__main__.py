@@ -1,0 +1,57 @@
+"""CLI: ``python -m tools.replint [paths...] [--selftest] [--list-rules]``.
+
+With no paths, scans the repo defaults (``src examples benchmarks``).
+Exit status: 0 clean, 1 findings (or selftest failures), 2 bad usage.
+Run from the repo root (CI does; so does ``tools/check_timing.py``'s job).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from tools.replint.engine import (DEFAULT_PATHS, RULES, run_paths,
+                                  run_selftest)
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.replint",
+        description="repo-native static analysis for the DTWN hot-path "
+                    "invariants (see tools/replint/README.md)")
+    parser.add_argument("paths", nargs="*", default=None,
+                        help=f"files/directories to scan "
+                             f"(default: {' '.join(DEFAULT_PATHS)})")
+    parser.add_argument("--selftest", action="store_true",
+                        help="run the fixture self-tests instead of a scan")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule registry and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        from tools.replint.engine import _load_rules
+        _load_rules()
+        for rule in sorted(RULES.values(), key=lambda r: r.id):
+            print(f"{rule.id} {rule.name}: {rule.description}")
+        return 0
+
+    if args.selftest:
+        return 1 if run_selftest() else 0
+
+    paths = args.paths or list(DEFAULT_PATHS)
+    root = pathlib.Path.cwd()
+    try:
+        findings, suppressed = run_paths(paths, root=root)
+    except (FileNotFoundError, SyntaxError) as e:
+        print(f"replint: {e}", file=sys.stderr)
+        return 2
+    for f in findings:
+        print(f.format())
+    tail = f" ({suppressed} suppressed by pragma)" if suppressed else ""
+    print(f"replint: {len(findings)} finding(s) over "
+          f"{' '.join(str(p) for p in paths)}{tail}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

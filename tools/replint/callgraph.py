@@ -1,0 +1,338 @@
+"""Function index + traced-reachability call graph for replint.
+
+R003 (host-sync-in-traced-code) needs to know which functions can end up
+inside a jax trace. Exact dynamic dispatch is undecidable statically, so
+the graph is built *conservatively* — over-approximating reachability is
+safe for R003 (a host sync flagged in a function that is also called from
+host code is still a landmine: the traced caller exists).
+
+Model
+-----
+* Every ``def`` (top-level, method, nested) and every ``lambda`` in the
+  project is a node, keyed ``module:qualname`` (lambdas get
+  ``<lambda@line>``).
+* **Traced entries** are functions that jax traces directly:
+
+  - decorated with ``jit`` / ``pmap`` (bare, dotted, or wrapped in
+    ``functools.partial(jax.jit, ...)``), or
+  - passed as a function argument to a tracing combinator —
+    ``jax.jit(f)``, ``lax.scan(body, ...)``, ``shard_map(f, ...)`` (both
+    the module function and the ``TwinSharding.shard_map`` method),
+    ``vmap``, ``pmap``, ``cond``, ``switch``, ``while_loop``,
+    ``fori_loop``, ``checkpoint`` / ``remat``, ``pallas_call``, ``grad`` /
+    ``value_and_grad``.
+
+* **Edges** go from a function to every project function it *references*
+  (calls OR mentions — a mentioned function is usually passed onward into
+  a trace, e.g. ``functools.partial(latency.t_cmp, params)`` handed to a
+  ``shard_map`` helper), and to its lexically nested defs/lambdas.
+* Reachability is the BFS closure of the entries over these edges.
+
+Name resolution covers the idioms this repo actually uses: plain names
+(enclosing scopes, module globals), ``from mod import f [as g]``,
+``import pkg.mod as alias`` + ``alias.f``, and ``functools.partial(f, …)``
+unwrapping. Unresolvable callees (third-party, ``self.x``, dynamic) are
+ignored.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+#: decorator / combinator names that put their function argument(s) in a trace
+TRACING_DECORATORS = {"jit", "pmap"}
+TRACING_CALLS = {
+    "jit", "pmap", "vmap", "scan", "shard_map", "cond", "switch",
+    "while_loop", "fori_loop", "checkpoint", "remat", "pallas_call",
+    "grad", "value_and_grad",
+}
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_name(node: ast.AST) -> Optional[str]:
+    """Rightmost component of a call target (``scan`` for ``jax.lax.scan``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def unwrap_partial(node: ast.AST) -> ast.AST:
+    """``functools.partial(f, ...)`` -> ``f`` (recursively), else ``node``."""
+    while (isinstance(node, ast.Call) and last_name(node.func) == "partial"
+           and node.args):
+        node = node.args[0]
+    return node
+
+
+def partial_bound_args(node: ast.AST) -> int:
+    """Number of positional args a ``functools.partial`` wrapper binds
+    (0 when ``node`` is not a partial call)."""
+    if isinstance(node, ast.Call) and last_name(node.func) == "partial":
+        return len(node.args) - 1
+    return 0
+
+
+class FuncInfo:
+    """One function definition (or lambda) in the project."""
+
+    __slots__ = ("module", "qual", "node", "parent")
+
+    def __init__(self, module: str, qual: str, node: FuncNode,
+                 parent: Optional[str]):
+        self.module = module
+        self.qual = qual
+        self.node = node
+        self.parent = parent  # enclosing function's qual, or None
+
+    @property
+    def key(self) -> str:
+        return f"{self.module}:{self.qual}"
+
+    @property
+    def name(self) -> str:
+        return self.qual.rsplit(".", 1)[-1]
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"FuncInfo({self.key})"
+
+
+class _Indexer(ast.NodeVisitor):
+    """Collects function defs, lambdas, and the module import table."""
+
+    def __init__(self, module: str):
+        self.module = module
+        self.functions: Dict[str, FuncInfo] = {}
+        self.imports: Dict[str, str] = {}
+        self._stack: List[str] = []
+
+    # -- imports ------------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            name = alias.asname or alias.name.split(".")[0]
+            self.imports[name] = alias.name if alias.asname else \
+                alias.name.split(".")[0]
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level:  # relative import: resolve against this module
+            base = self.module.split(".")
+            base = base[: len(base) - node.level]
+            prefix = ".".join(base + ([node.module] if node.module else []))
+        else:
+            prefix = node.module or ""
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            self.imports[alias.asname or alias.name] = \
+                f"{prefix}.{alias.name}" if prefix else alias.name
+
+    # -- defs ---------------------------------------------------------------
+    def _add(self, name: str, node: FuncNode) -> str:
+        qual = ".".join(self._stack + [name]) if self._stack else name
+        parent = self._find_parent()
+        self.functions[qual] = FuncInfo(self.module, qual, node, parent)
+        return qual
+
+    def _find_parent(self) -> Optional[str]:
+        for i in range(len(self._stack), 0, -1):
+            cand = ".".join(self._stack[:i])
+            if cand in self.functions:
+                return cand
+        return None
+
+    def _visit_scope(self, name: str, node: FuncNode) -> None:
+        self._add(name, node)
+        self._stack.append(name)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self._stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_scope(node.name, node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_scope(node.name, node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._stack.append(node.name)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+        self._stack.pop()
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        self._visit_scope(f"<lambda@{node.lineno}>", node)
+
+
+class CallGraph:
+    """Project-wide function index + traced-entry reachability."""
+
+    def __init__(self, project):
+        self.project = project
+        self.modules: Dict[str, _Indexer] = {}
+        for sf in project.files:
+            idx = _Indexer(sf.module)
+            idx.visit(sf.tree)
+            self.modules[sf.module] = idx
+        self._edges: Dict[str, Set[str]] = {}
+        self._traced: Set[str] = set()
+        self._build()
+        self._reachable = self._closure()
+
+    # -- lookup -------------------------------------------------------------
+    def functions_in(self, module: str) -> Iterable[FuncInfo]:
+        idx = self.modules.get(module)
+        return idx.functions.values() if idx else ()
+
+    def owner_of(self, module: str, node: ast.AST) -> Optional[FuncInfo]:
+        """Innermost function whose body lexically contains ``node``."""
+        idx = self.modules.get(module)
+        if idx is None:
+            return None
+        best, best_span = None, None
+        for fi in idx.functions.values():
+            fn = fi.node
+            end = getattr(fn, "end_lineno", fn.lineno)
+            if fn.lineno <= node.lineno <= end:
+                span = end - fn.lineno
+                if best_span is None or span < best_span:
+                    best, best_span = fi, span
+        return best
+
+    def resolve(self, module: str, scope: Optional[str],
+                node: ast.AST) -> Optional[FuncInfo]:
+        """Resolve a function-valued expression to a project FuncInfo."""
+        node = unwrap_partial(node)
+        if isinstance(node, ast.Lambda):
+            idx = self.modules.get(module)
+            if idx:
+                for fi in idx.functions.values():
+                    if fi.node is node:
+                        return fi
+            return None
+        path = dotted(node)
+        if path is None:
+            return None
+        return self._resolve_dotted(module, scope, path)
+
+    def _resolve_dotted(self, module: str, scope: Optional[str],
+                        path: str) -> Optional[FuncInfo]:
+        idx = self.modules.get(module)
+        if idx is None:
+            return None
+        head, _, rest = path.partition(".")
+        # 1. plain name: nested defs of the enclosing scope chain, then
+        #    module-level functions
+        if not rest:
+            cur = scope
+            while cur is not None:
+                cand = idx.functions.get(f"{cur}.{head}")
+                if cand is not None:
+                    return cand
+                cur = idx.functions[cur].parent if cur in idx.functions \
+                    else None
+            if head in idx.functions:
+                return idx.functions[head]
+        # 2. imported symbol (from mod import f as head / import mod as head)
+        target = idx.imports.get(head)
+        if target is None:
+            return None
+        full = f"{target}.{rest}" if rest else target
+        # longest module prefix wins: "repro.core.latency.t_cmp" splits into
+        # module "repro.core.latency" + qual "t_cmp"
+        parts = full.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            mod = ".".join(parts[:cut])
+            if mod in self.modules:
+                qual = ".".join(parts[cut:])
+                return self.modules[mod].functions.get(qual)
+        return None
+
+    # -- graph construction -------------------------------------------------
+    def _build(self) -> None:
+        for module, idx in self.modules.items():
+            for fi in idx.functions.values():
+                self._edges.setdefault(fi.key, set())
+                if self._has_tracing_decorator(fi.node):
+                    self._traced.add(fi.key)
+            # nested defs: outer -> inner
+            for fi in idx.functions.values():
+                if fi.parent is not None:
+                    self._edges.setdefault(
+                        f"{module}:{fi.parent}", set()).add(fi.key)
+            self._scan_bodies(module, idx)
+
+    def _has_tracing_decorator(self, node: FuncNode) -> bool:
+        for dec in getattr(node, "decorator_list", ()):
+            for sub in ast.walk(dec):
+                if isinstance(sub, ast.Name) and sub.id in TRACING_DECORATORS:
+                    return True
+                if isinstance(sub, ast.Attribute) and \
+                        sub.attr in TRACING_DECORATORS:
+                    return True
+        return False
+
+    def _scan_bodies(self, module: str, idx: _Indexer) -> None:
+        # walk each file once; attribute every expression to its innermost
+        # enclosing function (module-level code belongs to no function and
+        # can still *mark* traced entries)
+        sf = self.project.by_module.get(module)
+        if sf is None:
+            return
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call):
+                owner = self.owner_of(module, node)
+                scope = owner.qual if owner else None
+                if last_name(node.func) in TRACING_CALLS:
+                    for arg in list(node.args) + \
+                            [kw.value for kw in node.keywords]:
+                        fi = self.resolve(module, scope, arg)
+                        if fi is not None:
+                            self._traced.add(fi.key)
+            # mentions: any reference to a project function from inside
+            # another function adds an edge
+            if isinstance(node, (ast.Name, ast.Attribute, ast.Lambda)):
+                owner = self.owner_of(module, node)
+                if owner is None:
+                    continue
+                if isinstance(node, ast.Lambda):
+                    continue  # handled via nested-def edges
+                fi = self.resolve(module, owner.qual, node)
+                if fi is not None and fi.key != owner.key:
+                    self._edges.setdefault(owner.key, set()).add(fi.key)
+
+    def _closure(self) -> Set[str]:
+        seen: Set[str] = set()
+        frontier = list(self._traced)
+        while frontier:
+            cur = frontier.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            frontier.extend(self._edges.get(cur, ()))
+        return seen
+
+    # -- queries ------------------------------------------------------------
+    def is_traced_entry(self, fi: FuncInfo) -> bool:
+        return fi.key in self._traced
+
+    def is_reachable(self, fi: FuncInfo) -> bool:
+        """Can this function's body end up inside a jax trace?"""
+        return fi.key in self._reachable
+
+    @property
+    def reachable_keys(self) -> Set[str]:
+        return set(self._reachable)

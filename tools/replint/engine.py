@@ -1,0 +1,273 @@
+"""replint core: source model, pragma handling, rule registry, runners.
+
+Everything is stdlib-only (``ast``, ``re``, ``pathlib``) so the linter can
+run in any environment the repo runs in — including the CI lint job before
+any scientific dependency is installed.
+
+Vocabulary
+----------
+``SourceFile``
+    One parsed Python file: source text, AST, module name, and its pragma
+    tables (per-line and per-file ``# replint: disable=...`` suppressions).
+``Project``
+    The set of ``SourceFile``\\ s a run analyzes together. Rules that need
+    cross-file knowledge (the R003 traced-reachability call graph) get it
+    from here; single-file rules just walk ``sf.tree``.
+``Rule``
+    Subclass with class attrs ``id`` (``"R00x"``), ``name`` (kebab slug),
+    ``description``, and a ``check(sf, project) -> Iterable[Finding]``.
+    Decorate with :func:`register` to enter the registry.
+
+Pragmas
+-------
+``# replint: disable=R001`` on the *reported line* suppresses that rule
+there (comma-separate several ids; ``all`` suppresses every rule).
+``# replint: disable-file=R003`` anywhere in a file suppresses the rule
+for the whole file — the per-module allowlist (e.g. host-side-by-design
+modules under R003). Suppressed findings are counted and reported in the
+summary so allowlists stay visible.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+PRAGMA_RE = re.compile(
+    r"#\s*replint:\s*(disable|disable-file)\s*=\s*([A-Za-z0-9_,\- ]+)")
+
+#: Default scan roots of ``python -m tools.replint`` (repo-relative).
+DEFAULT_PATHS = ("src", "examples", "benchmarks")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line``."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _relpath(path: pathlib.Path, root: Optional[pathlib.Path]) -> str:
+    try:
+        return str(path.relative_to(root)) if root else str(path)
+    except ValueError:
+        return str(path)
+
+
+class SourceFile:
+    """A parsed source file plus its pragma tables."""
+
+    def __init__(self, path: pathlib.Path, root: Optional[pathlib.Path] = None):
+        self.path = path
+        self.rel = _relpath(path, root)
+        self.source = path.read_text()
+        self.lines = self.source.splitlines()
+        self.tree = ast.parse(self.source, filename=str(path))
+        self.module = self._module_name()
+        self.line_pragmas: Dict[int, Set[str]] = {}
+        self.file_pragmas: Set[str] = set()
+        self._scan_pragmas()
+
+    def _module_name(self) -> str:
+        parts = pathlib.Path(self.rel).with_suffix("").parts
+        if parts and parts[0] == "src":
+            parts = parts[1:]
+        if parts and parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def _scan_pragmas(self) -> None:
+        for i, line in enumerate(self.lines, start=1):
+            m = PRAGMA_RE.search(line)
+            if not m:
+                continue
+            kind, ids = m.group(1), {
+                s.strip() for s in m.group(2).split(",") if s.strip()}
+            if kind == "disable":
+                self.line_pragmas.setdefault(i, set()).update(ids)
+            else:
+                self.file_pragmas.update(ids)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        if {rule_id, "all"} & self.file_pragmas:
+            return True
+        at = self.line_pragmas.get(line, ())
+        return rule_id in at or "all" in at
+
+
+class Project:
+    """The file set one replint run analyzes together."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        self.by_module: Dict[str, SourceFile] = {
+            f.module: f for f in self.files if f.module}
+        #: files that failed to parse, surfaced as non-suppressible findings
+        self.broken: List[Finding] = []
+        self._callgraph = None
+
+    @classmethod
+    def from_paths(cls, paths: Sequence[str],
+                   root: Optional[pathlib.Path] = None) -> "Project":
+        root = root or pathlib.Path.cwd()
+        files = []
+        for p in paths:
+            pp = (root / p) if not pathlib.Path(p).is_absolute() \
+                else pathlib.Path(p)
+            if pp.is_dir():
+                files.extend(sorted(pp.rglob("*.py")))
+            elif pp.suffix == ".py":
+                files.append(pp)
+            else:
+                raise FileNotFoundError(f"no such file or directory: {p}")
+        sources, broken = [], []
+        for f in files:
+            try:
+                sources.append(SourceFile(f, root=root))
+            except SyntaxError as e:
+                broken.append(Finding(
+                    path=_relpath(f, root), line=e.lineno or 0,
+                    col=e.offset or 0, rule="SYNTAX",
+                    message=f"cannot parse: {e.msg}"))
+        project = cls(sources)
+        project.broken = broken
+        return project
+
+    @property
+    def callgraph(self):
+        """Lazily-built :class:`tools.replint.callgraph.CallGraph`."""
+        if self._callgraph is None:
+            from tools.replint.callgraph import CallGraph
+            self._callgraph = CallGraph(self)
+        return self._callgraph
+
+
+class Rule:
+    """Base class for replint rules. Subclass, set the class attrs, and
+    implement :meth:`check`; decorate with :func:`register`."""
+    id: str = ""
+    name: str = ""
+    description: str = ""
+
+    def check(self, sf: SourceFile, project: Project) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, sf: SourceFile, node: ast.AST, message: str) -> Finding:
+        return Finding(path=sf.rel, line=getattr(node, "lineno", 0),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       rule=self.id, message=message)
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule to the registry (id-unique)."""
+    inst = cls()
+    if inst.id in RULES:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    RULES[inst.id] = inst
+    return cls
+
+
+def _load_rules() -> None:
+    # importing the package registers every rule module exactly once
+    import tools.replint.rules  # noqa: F401
+
+
+def run_project(project: Project) -> Tuple[List[Finding], int]:
+    """All findings over a project: ``(reported, n_suppressed)``."""
+    _load_rules()
+    reported: List[Finding] = list(project.broken)
+    suppressed = 0
+    seen: Set[Tuple[str, int, int, str]] = set()
+    for sf in project.files:
+        for rule in RULES.values():
+            for f in rule.check(sf, project):
+                at = (f.path, f.line, f.col, f.rule)
+                if at in seen:
+                    continue  # e.g. a site walked by two nested contexts
+                seen.add(at)
+                if sf.suppressed(f.rule, f.line):
+                    suppressed += 1
+                else:
+                    reported.append(f)
+    reported.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return reported, suppressed
+
+
+def run_paths(paths: Sequence[str],
+              root: Optional[pathlib.Path] = None) -> Tuple[List[Finding], int]:
+    return run_project(Project.from_paths(paths, root=root))
+
+
+# ---------------------------------------------------------------------------
+# fixture self-tests
+# ---------------------------------------------------------------------------
+
+EXPECT_RE = re.compile(r"#\s*expect:\s*([A-Za-z0-9_, ]+)")
+
+
+def fixture_dir() -> pathlib.Path:
+    return pathlib.Path(__file__).parent / "fixtures"
+
+
+def _expected(sf: SourceFile) -> Set[Tuple[str, int]]:
+    out: Set[Tuple[str, int]] = set()
+    for i, line in enumerate(sf.lines, start=1):
+        m = EXPECT_RE.search(line)
+        if m:
+            out.update((r.strip(), i) for r in m.group(1).split(",")
+                       if r.strip())
+    return out
+
+
+def run_selftest(out=sys.stdout) -> int:
+    """Prove every rule fires on its known-bad fixture lines and stays
+    silent on the matching known-good file.
+
+    Each fixture file is analyzed as its own single-file project (so bad
+    files cannot leak traced entries or definitions into good ones).
+    ``# expect: R00x`` marks a line that must produce exactly that finding;
+    a fixture with no expectations must come back clean. Returns the number
+    of failures (0 == pass).
+    """
+    _load_rules()
+    failures = 0
+    files = sorted(fixture_dir().rglob("*.py"))
+    if not files:
+        print("replint selftest: no fixtures found", file=out)
+        return 1
+    rules_fired: Set[str] = set()
+    for path in files:
+        sf = SourceFile(path, root=fixture_dir())
+        findings, _ = run_project(Project([sf]))
+        got = {(f.rule, f.line) for f in findings}
+        want = _expected(sf)
+        rules_fired.update(r for r, _ in got)
+        for miss in sorted(want - got):
+            failures += 1
+            print(f"FAIL {sf.rel}: expected {miss[0]} at line {miss[1]}, "
+                  f"not reported", file=out)
+        for extra in sorted(got - want):
+            failures += 1
+            print(f"FAIL {sf.rel}: unexpected {extra[0]} at line {extra[1]}",
+                  file=out)
+    for rule_id in sorted(RULES):
+        if rule_id not in rules_fired:
+            failures += 1
+            print(f"FAIL registry: rule {rule_id} never fired on any "
+                  f"fixture", file=out)
+    status = "ok" if failures == 0 else f"{failures} failure(s)"
+    print(f"replint selftest: {len(files)} fixtures, {len(RULES)} rules "
+          f"— {status}", file=out)
+    return failures

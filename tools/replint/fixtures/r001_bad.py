@@ -1,0 +1,11 @@
+"""R001 fixture: dense one-hot contraction outside a named oracle."""
+import jax.numpy as jnp
+
+
+def per_bs_work(assoc, vals, m):
+    onehot = jnp.eye(m)[assoc]  # expect: R001
+    return onehot.T @ vals
+
+
+def twin_counts(assoc, m):
+    return jnp.sum(jnp.eye(m)[assoc], axis=0)  # expect: R001

@@ -1,0 +1,17 @@
+"""R001 fixture: named oracles may keep the dense path; bare eye is fine."""
+import jax.numpy as jnp
+
+
+def per_bs_work_onehot(assoc, vals, m):
+    # reference oracle: the *_onehot suffix licenses the dense contraction
+    onehot = jnp.eye(m)[assoc]
+    return onehot.T @ vals
+
+
+def twin_counts_oracle(assoc, m):
+    return jnp.sum(jnp.eye(m)[assoc], axis=0)
+
+
+def identity_block(m):
+    # an identity matrix that is never a membership mask is not a one-hot
+    return jnp.eye(m)

@@ -1,0 +1,28 @@
+"""R002 fixture: PRNG keys consumed twice without a split/fold_in rebind."""
+import jax
+
+
+def double_sample(key):
+    a = jax.random.uniform(key, (3,))
+    b = jax.random.normal(key, (3,))  # expect: R002
+    return a + b
+
+
+def sample_after_split(key):
+    subkeys = jax.random.split(key, 4)
+    noise = jax.random.normal(key, (2,))  # expect: R002
+    return subkeys, noise
+
+
+def loop_reuse(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.uniform(key, (2,)))  # expect: R002
+    return out
+
+
+def subscript_reuse(key):
+    ks = jax.random.split(key, 3)
+    a = jax.random.uniform(ks[0], (2,))
+    b = jax.random.normal(ks[0], (2,))  # expect: R002
+    return a, b, ks[1]

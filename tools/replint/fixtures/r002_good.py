@@ -1,0 +1,51 @@
+"""R002 fixture: disciplined key handling — every consumption is fresh."""
+import jax
+
+
+def split_then_sample(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (3,))
+    b = jax.random.normal(k2, (3,))
+    return a + b
+
+
+def rebind_chain(key):
+    key, s1 = jax.random.split(key)
+    x = jax.random.normal(s1, (2,))
+    key, s2 = jax.random.split(key)
+    return x + jax.random.normal(s2, (2,))
+
+
+def fold_in_loop(key, n):
+    # fold_in(key, i) is the sanctioned per-index derivation idiom
+    out = []
+    for i in range(n):
+        out.append(jax.random.uniform(jax.random.fold_in(key, i), (2,)))
+    return out
+
+
+def subscript_keys(key):
+    ks = jax.random.split(key, 3)
+    a = jax.random.uniform(ks[0], (2,))
+    b = jax.random.normal(ks[1], (2,))
+    c = jax.random.gumbel(ks[2], (2,))
+    return a, b, c
+
+
+def loop_over_keys(key, xs):
+    # the loop target is rebound fresh each iteration — never a reuse
+    out = []
+    for k in jax.random.split(key, len(xs)):
+        out.append(jax.random.normal(k, (2,)))
+    return out
+
+
+def comprehension_keys(key):
+    return [jax.random.normal(k, (2,))
+            for k in jax.random.split(key, 4)]
+
+
+def branch_keys(key, flag):
+    if flag:
+        return jax.random.uniform(key, (2,))
+    return jax.random.normal(key, (2,))

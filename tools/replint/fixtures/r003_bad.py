@@ -1,0 +1,26 @@
+"""R003 fixture: host syncs inside functions reachable from a jit entry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def round_step(x):
+    # the jit entry: everything it mentions is traced-reachable
+    return _accumulate(x)
+
+
+def _accumulate(x):
+    s = jnp.sum(x)
+    total = float(s)  # expect: R003
+    host = np.asarray(s)  # expect: R003
+    return total + host.size + s.item()  # expect: R003
+
+
+def scan_driver(xs):
+    def body(carry, x):
+        c = carry + jnp.tanh(x)
+        c.block_until_ready()  # expect: R003
+        return c, c
+
+    return jax.lax.scan(body, jnp.zeros(()), xs)

@@ -1,0 +1,27 @@
+"""R003 fixture: device-resident traced code; host syncs only at the host
+boundary (functions the traced call graph never reaches)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def round_step(x):
+    return _accumulate(x)
+
+
+def _accumulate(x):
+    # stays a jnp scalar on device — no sync
+    s = jnp.sum(x)
+    return s / jnp.maximum(s, 1.0)
+
+
+def _static_shapes(x):
+    # trace-time Python arithmetic on static shape info is fine
+    n = int(x.shape[0] * 0.5)
+    return jnp.zeros((max(n, 1),))
+
+
+def host_report(x):
+    # never reachable from a traced entry: the host boundary may sync
+    s = jnp.sum(x)
+    return float(s)

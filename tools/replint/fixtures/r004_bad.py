@@ -1,0 +1,19 @@
+"""R004 fixture: raw cross-twin reductions / pinned backends inside sharded
+scope."""
+import jax.numpy as jnp
+
+from repro.core.sharding import twin_sum  # noqa: F401
+from repro.kernels.segment_reduce import segment_reduce
+
+
+def sharded_mean_load(data, assoc, m):
+    # sharded_* name puts the whole body in sharded scope
+    per_bs = segment_reduce(data, assoc, m, backend="onehot")  # expect: R004
+    return jnp.mean(data, axis=0)  # expect: R004
+
+
+def run_round(ts, blk):
+    def local(blk):
+        return jnp.sum(blk, axis=0)  # expect: R004
+
+    return ts.shard_map(local, blk)

@@ -1,0 +1,15 @@
+"""R004 fixture: sharded scope uses twin_* helpers and the auto backend."""
+import jax.numpy as jnp
+
+from repro.core.sharding import twin_mean, twin_sum
+from repro.kernels.segment_reduce import segment_reduce
+
+
+def sharded_mean_load(data, assoc, m):
+    per_bs = segment_reduce(data, assoc, m, backend="auto")
+    return twin_mean(data) + twin_sum(per_bs * 0.0)
+
+
+def host_summary(data):
+    # outside sharded scope a plain reduction is fine
+    return jnp.mean(data, axis=0)

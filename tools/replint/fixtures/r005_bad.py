@@ -1,0 +1,34 @@
+"""R005 fixture: scan carries that change structure or dtype across steps."""
+import jax
+import jax.numpy as jnp
+
+
+def carry_grows(xs):
+    def body(carry, x):
+        acc, count = carry
+        return (acc + x, count + 1, x), acc  # expect: R005
+
+    return jax.lax.scan(body, (jnp.zeros(()), jnp.int32(0)), xs)
+
+
+def init_mismatch(xs):
+    def body(carry, x):
+        acc, count, last = carry
+        return (acc + x, count + 1, x), acc
+
+    return jax.lax.scan(body, (jnp.zeros(()), jnp.int32(0)), xs)  # expect: R005
+
+
+def carry_dtype_drift(xs):
+    def body(carry, x):
+        nxt = carry + x
+        return nxt.astype(jnp.float32), nxt  # expect: R005
+
+    return jax.lax.scan(body, jnp.zeros((), jnp.bfloat16), xs)
+
+
+def missing_ys(xs):
+    def body(carry, x):
+        return carry + x  # expect: R005
+
+    return jax.lax.scan(body, jnp.zeros(()), xs)

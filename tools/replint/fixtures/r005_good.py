@@ -1,0 +1,24 @@
+"""R005 fixture: structure- and dtype-stable scan carries."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def stable_carry(xs):
+    def body(carry, x):
+        acc, count = carry
+        return (acc + x, count + 1), acc
+
+    return jax.lax.scan(body, (jnp.zeros(()), jnp.int32(0)), xs)
+
+
+def lambda_body(xs):
+    return jax.lax.scan(lambda c, x: (c + x, c), jnp.zeros(()), xs)
+
+
+def partial_body(xs, scale):
+    def body(scale, carry, x):
+        return carry + scale * x, carry
+
+    return jax.lax.scan(functools.partial(body, scale), jnp.zeros(()), xs)

@@ -1,0 +1,11 @@
+"""Rule registry — importing this package registers every rule.
+
+One module per rule; each module defines a :class:`tools.replint.engine.Rule`
+subclass decorated with :func:`tools.replint.engine.register`. To add a
+rule, drop an ``r0xx_*.py`` module here, import it below, and give it a
+fixture pair under ``tools/replint/fixtures/`` (the selftest fails any
+registered rule that never fires on a fixture).
+"""
+from tools.replint.rules import (r001_onehot, r002_prng, r003_hostsync,
+                                 r004_sharding_scope,
+                                 r005_scan_carry)  # noqa: F401

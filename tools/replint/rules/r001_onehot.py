@@ -1,0 +1,61 @@
+"""R001 no-dense-onehot: ban ``jnp.eye(M)[assoc]``-style contractions.
+
+Every per-BS reduction must route through the unified
+``repro/kernels/segment_reduce.py`` dispatch (O(N+M) memory) instead of
+materializing the dense (N, M) one-hot membership mask the seed used
+(O(N*M) — dead at N=10^6 twins). Dense paths are allowed only as named
+numerical oracles: any enclosing function whose name ends in ``_onehot``
+or ``_oracle`` (e.g. the Eq. 12-17 reference paths in
+``src/repro/core/latency.py`` and the ``_seg_onehot`` parity backend).
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.callgraph import last_name
+from tools.replint.engine import Finding, Project, Rule, SourceFile, register
+
+_EYE_ROOTS = {"jnp", "np", "numpy", "jax"}
+_ORACLE_SUFFIXES = ("_onehot", "_oracle")
+
+
+def _is_eye_call(node: ast.AST) -> bool:
+    if not (isinstance(node, ast.Call) and last_name(node.func) == "eye"):
+        return False
+    root = node.func
+    while isinstance(root, ast.Attribute):
+        root = root.value
+    return isinstance(root, ast.Name) and root.id in _EYE_ROOTS
+
+
+def _in_oracle(sf: SourceFile, project: Project, node: ast.AST) -> bool:
+    fi = project.callgraph.owner_of(sf.module, node)
+    while fi is not None:
+        if fi.name.endswith(_ORACLE_SUFFIXES):
+            return True
+        fi = project.callgraph.modules[fi.module].functions.get(fi.parent) \
+            if fi.parent else None
+    return False
+
+
+@register
+class NoDenseOnehot(Rule):
+    id = "R001"
+    name = "no-dense-onehot"
+    description = ("dense jnp.eye(M)[assoc] one-hot contraction outside a "
+                   "*_onehot/*_oracle function — use "
+                   "repro.kernels.segment_reduce instead")
+
+    def check(self, sf: SourceFile, project: Project):
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Subscript)
+                    and _is_eye_call(node.value)):
+                continue
+            if _in_oracle(sf, project, node):
+                continue
+            yield self.finding(
+                sf, node,
+                "dense one-hot contraction (jnp.eye(...)[assoc]) is "
+                "O(N*M); route per-BS reductions through "
+                "repro.kernels.segment_reduce (or name the function "
+                "*_onehot/*_oracle if it is a reference path)")

@@ -1,0 +1,220 @@
+"""R002 prng-key-reuse: a PRNG key consumed by two ``jax.random`` calls.
+
+Key discipline is what keeps the single-device-vs-sharded parity gates at
+<= 5e-7 (``core/sharding.py`` / ``core/migration.py`` slice *the same
+global draw* per shard — feed two samplers from one key and the paths
+decorrelate silently). The rule runs an intra-function, flow-ordered
+dataflow pass:
+
+* consuming calls: every ``jax.random.*`` sampler (``uniform``,
+  ``normal``, ``gumbel``, ...) **and** ``split`` — sampling from a key
+  that was already split (or splitting twice) overlaps the streams;
+* non-consuming: ``PRNGKey`` (creates), ``fold_in`` (the sanctioned
+  per-index derivation — ``fold_in(key, i)`` in a loop is the idiom the
+  repo uses for paired comparisons), key metadata helpers;
+* any rebinding of the name (``key, sub = jax.random.split(key)``) makes
+  it fresh again.
+
+Keys are tracked as plain names, attribute chains (``ts.key``) and
+constant subscripts (``ks[0]``). ``if``/``else`` branches fork the state
+and merge; ``for``/``while`` bodies (and comprehensions) are analyzed
+twice so a consume of a loop-invariant key is caught on the simulated
+second iteration.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Optional, Set, Tuple
+
+from tools.replint.callgraph import dotted, last_name
+from tools.replint.engine import Project, Rule, SourceFile, register
+
+_NONCONSUMING = {"PRNGKey", "fold_in", "key_data", "wrap_key_data",
+                 "key_impl", "clone"}
+_SKIP_ROOTS = {"np", "numpy", "self"}
+
+
+def _is_jax_random_call(node: ast.Call) -> bool:
+    path = dotted(node.func)
+    if path is None:
+        return False
+    parts = path.split(".")
+    if parts[0] in _SKIP_ROOTS:
+        return False
+    # jax.random.uniform / random.uniform / jr.normal / jrandom.normal
+    return "random" in parts[:-1] or parts[0] in {"jr", "jrandom"}
+
+
+def _key_expr(node: ast.AST) -> Optional[str]:
+    """Stable identifier for a key-valued expression, or None."""
+    path = dotted(node)
+    if path is not None:
+        return path
+    if isinstance(node, ast.Subscript) and isinstance(
+            node.slice, ast.Constant):
+        base = _key_expr(node.value)
+        if base is not None:
+            return f"{base}[{node.slice.value!r}]"
+    return None
+
+
+def _terminates(body) -> bool:
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+class _KeyFlow:
+    """Flow-ordered consumed-key tracking over one function body."""
+
+    def __init__(self, rule: Rule, sf: SourceFile):
+        self.rule = rule
+        self.sf = sf
+        self.consumed: Dict[str, ast.AST] = {}  # key expr -> consuming node
+        self.findings: Dict[Tuple[int, int, str], ast.AST] = {}
+
+    # -- state helpers ------------------------------------------------------
+    def _rebind(self, target: ast.AST) -> None:
+        for node in ast.walk(target):
+            expr = _key_expr(node)
+            if expr is not None:
+                # rebinding a base name refreshes its subscript views too
+                for known in list(self.consumed):
+                    if known == expr or known.startswith(expr + "["):
+                        del self.consumed[known]
+
+    def _consume(self, expr: str, node: ast.AST) -> None:
+        if expr in self.consumed:
+            self.findings[(node.lineno, node.col_offset, expr)] = node
+        self.consumed[expr] = node
+
+    # -- traversal ----------------------------------------------------------
+    def run(self, body) -> None:
+        for stmt in body:
+            self.stmt(stmt)
+
+    def stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # separate scope, analyzed on its own
+        if isinstance(node, ast.Assign):
+            self.expr(node.value)
+            for t in node.targets:
+                self._rebind(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            if node.value is not None:
+                self.expr(node.value)
+            self._rebind(node.target)
+        elif isinstance(node, ast.If):
+            self.expr(node.test)
+            self._branches(node.body, node.orelse)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            self.expr(node.iter)
+            self._loop(node.body, rebinds=[node.target])
+            self.run(node.orelse)
+        elif isinstance(node, ast.While):
+            self.expr(node.test)
+            self._loop(node.body)
+            self.run(node.orelse)
+        elif isinstance(node, ast.With):
+            for item in node.items:
+                self.expr(item.context_expr)
+            self.run(node.body)
+        elif isinstance(node, ast.Try):
+            self.run(node.body)
+            for h in node.handlers:
+                self.run(h.body)
+            self.run(node.orelse)
+            self.run(node.finalbody)
+        elif isinstance(node, ast.Return):
+            if node.value is not None:
+                self.expr(node.value)
+        elif isinstance(node, ast.Expr):
+            self.expr(node.value)
+        else:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.expr):
+                    self.expr(child)
+
+    def _branches(self, *bodies) -> None:
+        before = dict(self.consumed)
+        merged: Dict[str, ast.AST] = dict(before)
+        for body in bodies:
+            self.consumed = dict(before)
+            self.run(body)
+            # a branch that returns/raises never rejoins the fall-through,
+            # so its consumptions must not poison the merged state
+            if not _terminates(body):
+                merged.update(self.consumed)
+        self.consumed = merged
+
+    def _loop(self, body, rebinds=()) -> None:
+        # two passes simulate the second iteration: a consume of a
+        # loop-invariant key shows up as a re-consume on pass 2, while the
+        # loop target itself is rebound fresh every iteration
+        for _ in range(2):
+            for target in rebinds:
+                self._rebind(target)
+            self.run(body)
+
+    def expr(self, node: ast.expr) -> None:
+        if isinstance(node, ast.Lambda):
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            for gen in node.generators:
+                self.expr(gen.iter)
+            inner = [ast.Expr(value=node.elt)] if not isinstance(
+                node, ast.DictComp) else [ast.Expr(value=node.key),
+                                          ast.Expr(value=node.value)]
+            self._loop(inner,
+                       rebinds=[gen.target for gen in node.generators])
+            return
+        if isinstance(node, ast.Call):
+            # evaluate arguments first (inner calls consume before outer)
+            for arg in node.args:
+                self.expr(arg)
+            for kw in node.keywords:
+                self.expr(kw.value)
+            if _is_jax_random_call(node) and \
+                    last_name(node.func) not in _NONCONSUMING and node.args:
+                expr = _key_expr(node.args[0])
+                if expr is not None:
+                    self._consume(expr, node)
+            return
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                self.expr(child)
+
+
+@register
+class PrngKeyReuse(Rule):
+    id = "R002"
+    name = "prng-key-reuse"
+    description = ("a PRNG key fed to two jax.random calls without an "
+                   "intervening split/fold_in rebind")
+
+    def check(self, sf: SourceFile, project: Project):
+        cg = project.callgraph
+        for fi in cg.functions_in(sf.module):
+            node = fi.node
+            if isinstance(node, ast.Lambda):
+                continue
+            flow = _KeyFlow(self, sf)
+            flow.run(node.body)
+            for (_, _, expr), call in sorted(flow.findings.items()):
+                yield self.finding(
+                    sf, call,
+                    f"PRNG key {expr!r} is consumed again here — keys are "
+                    f"single-use; derive fresh ones with jax.random.split "
+                    f"or fold_in first")
+        # module-level statements (scripts, benchmarks)
+        flow = _KeyFlow(self, sf)
+        flow.run([s for s in sf.tree.body
+                  if not isinstance(s, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef, ast.ClassDef))])
+        for (_, _, expr), call in sorted(flow.findings.items()):
+            yield self.finding(
+                sf, call,
+                f"PRNG key {expr!r} is consumed again here — keys are "
+                f"single-use; derive fresh ones with jax.random.split "
+                f"or fold_in first")

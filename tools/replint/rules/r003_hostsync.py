@@ -1,0 +1,146 @@
+"""R003 host-sync-in-traced-code: no device->host sync inside traced code.
+
+A ``float()``/``int()`` cast, ``.item()``, ``np.asarray`` or
+``.block_until_ready()`` on an array value inside a jitted region either
+fails to trace (TracerArrayConversionError) or — worse, when it survives
+via a leaked concrete value — blocks dispatch and silently serializes the
+round step the latency claims rest on. The rule flags host-sync operations
+inside any function the call graph marks *traced-reachable*
+(``tools.replint.callgraph``: reachable from a ``jax.jit`` / ``shard_map``
+/ ``lax.scan`` / ... entry).
+
+Array-ness is approximated by local dataflow: a name is array-like when it
+was assigned from a ``jnp.*`` / ``jax.*`` / ``lax.*`` expression or from
+the segment-reduce / twin-scope primitives. ``float(x.shape[0])``-style
+static-shape arithmetic therefore stays legal, which is exactly the
+trace-time computation jitted code is allowed to do. Host-side-by-design
+modules (e.g. ``repro/core/blockchain.py``) sit outside the traced call
+graph; if one ever gets pulled in, allowlist it with a file pragma
+(``# replint: disable-file=R003``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from tools.replint.callgraph import FuncInfo, dotted, last_name
+from tools.replint.engine import Project, Rule, SourceFile, register
+
+_ARRAY_ROOTS = {"jnp", "lax", "jax"}
+_ARRAY_FUNCS = {"segment_reduce", "segment_count", "twin_sum", "twin_mean",
+                "twin_max", "twin_min", "twin_std", "twin_softmax_pool",
+                "bs_sum", "twin_counts"}
+_SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+_CAST_FUNCS = {"float", "int", "bool", "complex"}
+_NP_SYNC = {"asarray", "array"}
+_REDUCE_METHODS = {"sum", "mean", "max", "min", "prod", "std", "var", "all",
+                   "any"}
+
+
+def _mentions_array_source(node: ast.AST, arraylike: Set[str]) -> bool:
+    """Does this expression involve an array-like name or a jnp/jax call?"""
+    for sub in ast.walk(node):
+        path = dotted(sub)
+        if path is not None:
+            root = path.split(".")[0]
+            if root in _ARRAY_ROOTS and "." in path:
+                return True
+            if path in arraylike or root in arraylike:
+                return True
+        if isinstance(sub, ast.Call):
+            name = last_name(sub.func)
+            if name in _ARRAY_FUNCS:
+                return True
+            if name in _REDUCE_METHODS and isinstance(
+                    sub.func, ast.Attribute) and _mentions_array_source(
+                        sub.func.value, arraylike):
+                return True
+    return False
+
+
+def _collect_arraylike(fn: ast.AST) -> Set[str]:
+    """Names assigned (anywhere in the function) from array expressions."""
+    arraylike: Set[str] = set()
+    for _ in range(2):  # two passes: propagate through one chained assign
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and sub is not fn:
+                continue
+            targets = ()
+            value = None
+            if isinstance(sub, ast.Assign):
+                targets, value = sub.targets, sub.value
+            elif isinstance(sub, (ast.AnnAssign, ast.AugAssign)):
+                targets, value = (sub.target,), sub.value
+            if value is None or not _mentions_array_source(value, arraylike):
+                continue
+            for t in targets:
+                for leaf in ast.walk(t):
+                    if isinstance(leaf, ast.Name):
+                        arraylike.add(leaf.id)
+    return arraylike
+
+
+def _np_call(node: ast.Call) -> bool:
+    path = dotted(node.func)
+    return (path is not None
+            and path.split(".")[0] in {"np", "numpy", "onp"}
+            and last_name(node.func) in _NP_SYNC)
+
+
+@register
+class HostSyncInTracedCode(Rule):
+    id = "R003"
+    name = "host-sync-in-traced-code"
+    description = ("float()/int()/.item()/np.asarray/.block_until_ready on "
+                   "an array value inside a traced-reachable function")
+
+    def check(self, sf: SourceFile, project: Project):
+        cg = project.callgraph
+        for fi in cg.functions_in(sf.module):
+            if not cg.is_reachable(fi):
+                continue
+            if isinstance(fi.node, ast.Lambda):
+                continue
+            yield from self._check_function(sf, fi)
+
+    def _check_function(self, sf: SourceFile, fi: FuncInfo):
+        fn = fi.node
+        arraylike = _collect_arraylike(fn)
+        for node in ast.walk(fn):
+            # skip nested defs — they are their own (reachable) FuncInfos
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is not fn:
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = last_name(node.func)
+            if name in _SYNC_METHODS and isinstance(node.func, ast.Attribute):
+                yield self.finding(
+                    sf, node,
+                    f".{name}() forces a device->host sync inside traced "
+                    f"code (function {fi.qual!r} is reachable from a "
+                    f"jit/shard_map/scan entry)")
+            elif name == "device_get" and isinstance(node.func,
+                                                     ast.Attribute):
+                yield self.finding(
+                    sf, node,
+                    f"jax.device_get inside traced-reachable function "
+                    f"{fi.qual!r} blocks dispatch — keep the value on "
+                    f"device")
+            elif _np_call(node) and node.args and _mentions_array_source(
+                    node.args[0], arraylike):
+                yield self.finding(
+                    sf, node,
+                    f"np.{name} on a device value inside traced-reachable "
+                    f"function {fi.qual!r} — use jnp, or hoist to the host "
+                    f"boundary")
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in _CAST_FUNCS and node.args
+                  and _mentions_array_source(node.args[0], arraylike)):
+                yield self.finding(
+                    sf, node,
+                    f"{node.func.id}() on an array value inside "
+                    f"traced-reachable function {fi.qual!r} forces a "
+                    f"host sync — keep it a jnp scalar, or hoist it out "
+                    f"of the traced region")

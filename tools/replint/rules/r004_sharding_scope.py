@@ -1,0 +1,122 @@
+"""R004 sharding-scope-discipline: twin reductions inside sharded regions.
+
+Inside a ``shard_map`` body (or a ``sharded_*`` entry point, or any
+function tracing under a ``with ts.scope(...)`` / ``twin_scope(...)``
+region) every local array holds only this shard's twin block. A bare
+``jnp.sum`` / ``jnp.mean`` / ``jnp.max`` / ``jnp.min`` / ``jnp.std`` over
+it silently computes a *per-shard* statistic where the single-device code
+computed a population one — the bug class the masked ``twin_*`` helpers in
+``repro/core/sharding.py`` exist to prevent (they psum/pmax across the
+mesh and mask padding rows). Likewise, ``segment_reduce``/``segment_count``
+call sites must not pin ``backend="..."`` where the scope hook should
+dispatch: a hard-coded single-device backend skips the cross-shard psum
+and returns partial per-BS sums.
+
+The rule is lexical: it applies to functions named ``sharded_*``,
+functions passed to a ``shard_map`` call, functions containing a
+``with ...scope(...)`` block, and everything nested inside those. The
+``twin_*`` helper implementations themselves live outside any such
+context, so they lint clean by construction.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from tools.replint.callgraph import dotted, last_name, unwrap_partial
+from tools.replint.engine import Project, Rule, SourceFile, register
+
+_CROSS_TWIN_REDUCTIONS = {"sum", "mean", "max", "min", "std"}
+_ARRAY_ROOTS = {"jnp", "np", "numpy"}
+_SEGMENT_CALLS = {"segment_reduce", "segment_count"}
+
+
+def _is_scope_with(node: ast.With) -> bool:
+    for item in node.items:
+        name = last_name(item.context_expr.func) if isinstance(
+            item.context_expr, ast.Call) else None
+        if name in {"scope", "twin_scope"}:
+            return True
+    return False
+
+
+def _sharded_contexts(sf: SourceFile, project: Project) -> Set[str]:
+    """Quals of functions that trace inside a twin-sharded region."""
+    cg = project.callgraph
+    idx = cg.modules.get(sf.module)
+    if idx is None:
+        return set()
+    base: Set[str] = set()
+    for fi in idx.functions.values():
+        if fi.name.startswith("sharded_"):
+            base.add(fi.qual)
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.With) and _is_scope_with(node):
+                base.add(fi.qual)
+                break
+    # functions passed to a shard_map(...) call anywhere in this file
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and last_name(node.func) == "shard_map":
+            owner = cg.owner_of(sf.module, node)
+            scope = owner.qual if owner else None
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                fi = cg.resolve(sf.module, scope, unwrap_partial(arg))
+                if fi is not None and fi.module == sf.module:
+                    base.add(fi.qual)
+    # closure: anything lexically nested inside a context is in context
+    changed = True
+    while changed:
+        changed = False
+        for fi in idx.functions.values():
+            if fi.qual not in base and fi.parent in base:
+                base.add(fi.qual)
+                changed = True
+    return base
+
+
+@register
+class ShardingScopeDiscipline(Rule):
+    id = "R004"
+    name = "sharding-scope-discipline"
+    description = ("cross-twin jnp reduction or pinned segment_reduce "
+                   "backend inside a shard_map / sharded_* region")
+
+    def check(self, sf: SourceFile, project: Project):
+        contexts = _sharded_contexts(sf, project)
+        if not contexts:
+            return
+        cg = project.callgraph
+        idx = cg.modules[sf.module]
+        for qual in sorted(contexts):
+            fi = idx.functions.get(qual)
+            if fi is None:
+                continue
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not fi.node:
+                    continue  # nested defs are contexts of their own
+                if not isinstance(node, ast.Call):
+                    continue
+                name = last_name(node.func)
+                path = dotted(node.func) or ""
+                root = path.split(".")[0] if path else ""
+                if (name in _CROSS_TWIN_REDUCTIONS
+                        and root in _ARRAY_ROOTS):
+                    yield self.finding(
+                        sf, node,
+                        f"jnp.{name} inside twin-sharded context "
+                        f"{qual!r} reduces only this shard's block — use "
+                        f"sharding.twin_{name} (masked local reduction + "
+                        f"collective) for cross-twin statistics")
+                elif name in _SEGMENT_CALLS:
+                    for kw in node.keywords:
+                        if kw.arg == "backend" and isinstance(
+                                kw.value, ast.Constant) and \
+                                kw.value.value != "auto":
+                            yield self.finding(
+                                sf, kw.value,
+                                f"{name}(backend={kw.value.value!r}) pinned "
+                                f"inside twin-sharded context {qual!r} "
+                                f"skips the scope hook's sharded dispatch "
+                                f"(local reduce + psum) — leave "
+                                f"backend='auto'")

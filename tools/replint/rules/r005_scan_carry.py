@@ -1,0 +1,208 @@
+"""R005 scan-carry-hygiene: ``lax.scan`` carries must keep structure/dtype.
+
+``jax.lax.scan`` requires the carry pytree to have identical structure,
+shape, and dtype on entry and exit of the body — violations surface as
+opaque "scan carry has wrong pytree structure / dtype mismatch" trace
+errors, and the sharded trainer adds a second failure mode: the PR 4
+rep-stamping of carries (``sharding.stamp_replicated``) only lines up when
+the body returns exactly the structure it received. Statically checkable
+slices of that contract:
+
+* a scan body must return a 2-tuple ``(carry, aux)`` — returning a bare
+  carry or a 3-tuple mis-nests the carry into the stacked outputs;
+* when both the ``init`` argument and the body's returned carry are tuple
+  literals, their lengths must match;
+* the returned carry expression must not cast values derived from the
+  carry parameter (``.astype(...)`` / ``jnp.float32(...)`` and friends) —
+  a dtype change relative to the init fails the trace; cast the *init*
+  once instead.
+
+Bodies wrapped in ``functools.partial`` are unwrapped (bound positional
+args shift which parameter is the carry); bodies that cannot be resolved
+statically (e.g. conditional ``body_fn = jax.checkpoint(body) if ...``)
+are skipped.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from tools.replint.callgraph import (dotted, last_name, partial_bound_args,
+                                     unwrap_partial)
+from tools.replint.engine import Project, Rule, SourceFile, register
+
+_DTYPE_CTORS = {"float16", "float32", "float64", "bfloat16", "int8", "int16",
+                "int32", "int64", "uint8", "uint16", "uint32", "uint64"}
+
+
+def _is_scan_call(node: ast.Call) -> bool:
+    if last_name(node.func) != "scan":
+        return False
+    path = dotted(node.func) or "scan"
+    root = path.split(".")[0]
+    return root in {"jax", "lax", "scan"} or "lax" in path.split(".")
+
+
+def _mentions(node: ast.AST, name: str) -> bool:
+    return any(isinstance(s, ast.Name) and s.id == name
+               for s in ast.walk(node))
+
+
+def _carry_param(fn: ast.AST, bound: int) -> Optional[str]:
+    args = fn.args.args
+    if bound < len(args):
+        return args[bound].arg
+    return None
+
+
+def _unpack_arity(fn: ast.AST, carry_name: Optional[str]) -> Optional[int]:
+    """Arity of ``a, b = carry`` inside the body, if present."""
+    if carry_name is None or isinstance(fn, ast.Lambda):
+        return None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], (ast.Tuple, ast.List)) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == carry_name:
+            return len(node.targets[0].elts)
+    return None
+
+
+def _dtype_name(node: Optional[ast.AST]) -> Optional[str]:
+    """Dtype spelled by ``jnp.float32`` / ``'float32'``, else None."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    name = last_name(node)
+    return name if name in _DTYPE_CTORS else None
+
+
+def _init_dtype(init: Optional[ast.AST]) -> Optional[str]:
+    """Dtype of the scan init, when spelled literally."""
+    if not isinstance(init, ast.Call):
+        return None
+    name = last_name(init.func)
+    if name in _DTYPE_CTORS:
+        return name
+    for kw in init.keywords:
+        if kw.arg == "dtype":
+            return _dtype_name(kw.value)
+    if name in {"zeros", "ones", "empty"} and len(init.args) > 1:
+        return _dtype_name(init.args[1])
+    if name == "full" and len(init.args) > 2:
+        return _dtype_name(init.args[2])
+    return None
+
+
+# expression kinds that can never evaluate to the required (carry, aux) pair
+_NEVER_TUPLE = (ast.BinOp, ast.UnaryOp, ast.Compare, ast.Constant,
+                ast.Dict, ast.Set, ast.JoinedStr)
+
+
+@register
+class ScanCarryHygiene(Rule):
+    id = "R005"
+    name = "scan-carry-hygiene"
+    description = ("lax.scan body changes the carry's structure or dtype "
+                   "(or does not return a (carry, aux) 2-tuple)")
+
+    def check(self, sf: SourceFile, project: Project):
+        cg = project.callgraph
+        for node in ast.walk(sf.tree):
+            if not (isinstance(node, ast.Call) and _is_scan_call(node)):
+                continue
+            if not node.args:
+                continue
+            owner = cg.owner_of(sf.module, node)
+            scope = owner.qual if owner else None
+            body_expr = node.args[0]
+            bound = partial_bound_args(body_expr)
+            fi = cg.resolve(sf.module, scope, unwrap_partial(body_expr))
+            if fi is None:
+                continue
+            init = node.args[1] if len(node.args) > 1 else None
+            yield from self._check_body(sf, fi.node, bound, init)
+
+    def _check_body(self, sf: SourceFile, fn: ast.AST, bound: int, init):
+        carry_name = _carry_param(fn, bound)
+        unpack = _unpack_arity(fn, carry_name)
+        if isinstance(fn, ast.Lambda):
+            returns = [(fn.body, fn.body)]
+        else:
+            returns = [(r, r.value) for r in ast.walk(fn)
+                       if isinstance(r, ast.Return) and r.value is not None]
+        for anchor, value in returns:
+            if isinstance(value, _NEVER_TUPLE):
+                yield self.finding(
+                    sf, anchor,
+                    "scan body must return a (carry, aux) 2-tuple — this "
+                    "returns a bare expression; add an aux slot "
+                    "(e.g. `return carry, None`)")
+                continue
+            if not isinstance(value, (ast.Tuple, ast.List)):
+                continue  # a Name/Call return — not statically checkable
+            if len(value.elts) != 2:
+                yield self.finding(
+                    sf, anchor,
+                    f"scan body must return (carry, aux) — got a "
+                    f"{len(value.elts)}-tuple; wrap auxiliary outputs in "
+                    f"one pytree")
+                continue
+            carry_expr = value.elts[0]
+            ret_arity = len(carry_expr.elts) if isinstance(
+                carry_expr, (ast.Tuple, ast.List)) else None
+            if ret_arity is not None and unpack is not None and \
+                    unpack != ret_arity:
+                # the body itself is inconsistent: unpacks one shape,
+                # returns another — anchor at the return
+                yield self.finding(
+                    sf, carry_expr,
+                    f"scan carry structure changed: the body unpacks a "
+                    f"{unpack}-tuple carry but returns a {ret_arity}-tuple "
+                    f"— the carry pytree must be invariant across "
+                    f"iterations")
+            elif ret_arity is not None and isinstance(
+                    init, (ast.Tuple, ast.List)) and \
+                    len(init.elts) != ret_arity:
+                # body is self-consistent; the init disagrees — anchor
+                # at the scan call's init argument
+                yield self.finding(
+                    sf, init,
+                    f"scan init is a {len(init.elts)}-tuple but the body "
+                    f"carries a {ret_arity}-tuple — the carry pytree must "
+                    f"match the init")
+            yield from self._check_dtype_casts(sf, carry_expr, carry_name,
+                                               _init_dtype(init))
+
+    def _check_dtype_casts(self, sf: SourceFile, carry_expr: ast.AST,
+                           carry_name: Optional[str],
+                           init_dtype: Optional[str]):
+        for sub in ast.walk(carry_expr):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = last_name(sub.func)
+            is_cast = (name == "astype"
+                       or (name in _DTYPE_CTORS
+                           and (dotted(sub.func) or "").split(".")[0]
+                           in {"jnp", "np", "numpy", "jax"}))
+            if not is_cast:
+                continue
+            cast_dtype = _dtype_name(sub.args[0]) if name == "astype" \
+                and sub.args else (name if name in _DTYPE_CTORS else None)
+            if init_dtype is not None and cast_dtype is not None:
+                if cast_dtype != init_dtype:
+                    yield self.finding(
+                        sf, sub,
+                        f"returned scan carry is cast to {cast_dtype} but "
+                        f"the init is {init_dtype} — the carry dtype must "
+                        f"match the init on every iteration")
+                continue
+            target = sub.func.value if isinstance(sub.func, ast.Attribute) \
+                else (sub.args[0] if sub.args else sub)
+            if carry_name is None or _mentions(target, carry_name):
+                yield self.finding(
+                    sf, sub,
+                    "dtype cast in the returned scan carry — the carry "
+                    "dtype must match the init on every iteration; cast "
+                    "the init once before the scan instead")
