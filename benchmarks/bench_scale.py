@@ -33,6 +33,14 @@ Five measurements:
     win — on real multi-chip hardware each shard has its own HBM/compute.
     See docs/SCALING.md.
 
+A fault/adversary sweep (merged into ``scale.json: faults``):
+  * ``--faults`` — the accuracy-under-attack grid: a full ``DTWNSystem``
+    per cell over poisoner fraction x straggler rate x aggregator
+    (plain FedAvg vs coordinate trimmed-mean vs Krum-lite,
+    ``repro.core.faults``), model-replacement attackers; headline metric
+    is accuracy retention at 30% poisoners (robust rules must hold >= 0.9
+    of the clean FedAvg accuracy where plain FedAvg collapses).
+
 Two heterogeneity sweeps (merged into ``scale.json: heterogeneity``):
   * ``--alpha`` — population-tail statistics of the ScenarioBatch skew
     axis (p99/median, nonparametric skewness at skew 1/2/4) and the label
@@ -51,9 +59,14 @@ plus the policy-protocol gate (flat and factorized actions decode onto the
 verified N-independent), plus the migration grouping gate (post-migration
 per-BS latency through the sort backend's contiguous grouping must equal
 the one-hot oracle; bs_segments boundaries must reproduce the occupancy
-counts), plus the 8-host-device sharded parity gate (``--sharded-gate`` in
+counts), plus the fault/adversary gate (``fault_gate``: zero-attacker robust
+aggregation must equal plain FedAvg within 1e-6, the robust rules must
+stay bounded under constant-1e6 replacement attackers plain FedAvg
+amplifies, and zero-rate fault injectors must be identities), plus the
+8-host-device sharded parity gate (``--sharded-gate`` in
 a subprocess: latency Eqs. 12-17, env reset/observe/step, a short
-scan-train run, the scenario runner, and the migration step/env/runner
+scan-train run, the scenario runner, the migration step/env/runner, and
+the fault-injection draws/round-time/runner
 must match the single-device path on ragged and empty-shard populations),
 exiting nonzero on mismatch — kernel, policy, sharding, or migration
 regressions fail fast without waiting for the full bench.
@@ -85,8 +98,9 @@ _FLAT_MAX_TWINS = 2000
 
 # sections whose sub-keys are owned by DIFFERENT entry points (e.g.
 # "heterogeneity" collects --alpha population/partition stats and the
-# --migration sweep) — merged one level deep instead of replaced wholesale
-_DEEP_MERGE_KEYS = ("heterogeneity",)
+# --migration sweep; "faults" collects the --faults attack grid) — merged
+# one level deep instead of replaced wholesale
+_DEEP_MERGE_KEYS = ("heterogeneity", "faults")
 
 
 def merge_into_scale(sections: dict) -> None:
@@ -427,6 +441,46 @@ def sharded_gate() -> None:
     print("sharded-gate: migration parity ok "
           "(step/env/runner, incl. ragged/empty)")
 
+    # faults: straggler/outage/malicious draws bit-match the single-device
+    # path (per-twin streams are global, localized per shard), the faulty
+    # round time matches within fp tolerance (psum order), and the fault
+    # scenario runner matches — on divisible / ragged / empty-shard N
+    from repro.core import faults
+
+    fcfg = faults.FaultConfig(straggler_rate=0.3, outage_rate=0.2,
+                              malicious_frac=0.25)
+    for n, m in [(64, 5), (37, 5), (5, 3)]:
+        kf = jax.random.fold_in(jax.random.PRNGKey(13), n)
+        slow_s, mal_s = faults.sharded_fault_draws(ts, fcfg, kf, n)
+        slow_r, mal_r = faults.fault_draws(fcfg, kf, n)
+        np.testing.assert_array_equal(
+            np.asarray(ts.unpad_twin(slow_s, n)), np.asarray(slow_r),
+            err_msg=f"straggler N={n}")
+        np.testing.assert_array_equal(
+            np.asarray(ts.unpad_twin(mal_s, n)), np.asarray(mal_r),
+            err_msg=f"malicious N={n}")
+        ks = jax.random.split(kf, 5)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+        data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+        freqs = jax.random.uniform(ks[3], (m,), minval=1e9, maxval=4e9)
+        up = jax.random.uniform(ks[4], (m,), minval=1e6, maxval=1e8)
+        t_s = faults.sharded_faulty_round_time(ts, lp, fcfg, kf, assoc, b,
+                                               data, freqs, up, up)
+        t_r = faults.faulty_round_time(lp, fcfg, kf, assoc, b, data, freqs,
+                                       up, up)
+        np.testing.assert_allclose(float(t_s), float(t_r), rtol=1e-5,
+                                   err_msg=f"faulty_round_time N={n}")
+    cfgf = EnvConfig(n_twins=41, n_bs=7)
+    out = scenario.run_faults_sharded(ts, cfgf, fcfg, batch, n_rounds=4)
+    ref = scenario.run_faults(cfgf, fcfg, batch, n_rounds=4)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+    print("sharded-gate: fault-injection parity ok "
+          "(draws bit-exact, round time/runner fp-exact, incl. "
+          "ragged/empty)")
+
 
 def _time_call(fn, *args, iters: int = 10) -> float:
     """us/call of a jitted callable, excluding compile."""
@@ -614,6 +668,170 @@ def migration_sweep(ns=(10_000, 100_000, 1_000_000), n_scenarios: int = 2,
     return out
 
 
+# ---------------------------------------------------------------------------
+# fault/adversary axis (scale.json: "faults")
+# ---------------------------------------------------------------------------
+
+
+def fault_gate() -> None:
+    """CI gate for the fault/adversary axis (part of --smoke). Three
+    invariants, all raising on violation:
+
+    * zero-attacker parity — ``robust_bs_aggregate_stacked`` with
+      ``trim_k=0`` / ``krum_f=0`` must reproduce plain
+      ``hierarchy.bs_aggregate_stacked`` (FedAvg Eq. 4) within 1e-6;
+    * breakdown — with 2 of 8 clients per BS replaced by 1e6 constants,
+      plain FedAvg blows up while both robust rules stay bounded and flag
+      every attacker (survivor fraction below the suspect threshold);
+    * zero-rate identity — ``scenario.run_faults`` with all fault knobs at
+      zero must reproduce the ``run_baselines`` 'average' round times
+      exactly (the injectors are identities at rate 0).
+    """
+    import numpy as np
+
+    from repro.core import faults, hierarchy, scenario
+
+    k, m = 24, 3
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    stacked = {"w": jax.random.normal(ks[0], (k, 4, 5)),
+               "b": jax.random.normal(ks[1], (k, 7))}
+    sizes = jax.random.uniform(ks[2], (k,), minval=0.5, maxval=2.0)
+    assoc = jnp.asarray(np.arange(k) % m, jnp.int32)
+    ref_tree, ref_w = hierarchy.bs_aggregate_stacked(stacked, sizes, assoc, m)
+    for aggname, kw in (("trimmed_mean", {"trim_k": 0}),
+                        ("krum", {"krum_f": 0})):
+        tree, w, surv = faults.robust_bs_aggregate_stacked(
+            stacked, sizes, assoc, m, aggregator=aggname, **kw)
+        for la, lb in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(ref_tree)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6, err_msg=aggname)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(ref_w),
+                                   atol=1e-6, err_msg=aggname)
+        assert float(jnp.min(surv)) == 1.0, aggname
+    print("scale --smoke: zero-attacker robust == FedAvg parity ok "
+          "(trimmed_mean, krum)")
+
+    mal = np.zeros(k, bool)
+    mal[:6] = True  # average_association order: 2 attackers per BS of 8
+    attacked = {
+        kk: jnp.where(jnp.asarray(mal).reshape((k,) + (1,) * (v.ndim - 1)),
+                      1e6, v) for kk, v in stacked.items()}
+    fed_tree, _ = hierarchy.bs_aggregate_stacked(attacked, sizes, assoc, m)
+    fed_max = max(float(jnp.max(jnp.abs(le)))
+                  for le in jax.tree_util.tree_leaves(fed_tree))
+    assert fed_max > 1e4, f"FedAvg unexpectedly bounded: {fed_max}"
+    for aggname, kw in (("trimmed_mean", {"trim_k": 2}),
+                        ("krum", {"krum_f": 2})):
+        tree, _, surv = faults.robust_bs_aggregate_stacked(
+            attacked, sizes, assoc, m, aggregator=aggname, **kw)
+        rob_max = max(float(jnp.max(jnp.abs(le)))
+                      for le in jax.tree_util.tree_leaves(tree))
+        assert rob_max < 100.0, f"{aggname} breakdown: {rob_max}"
+        n_cli, n_sus = faults.suspect_counts(surv, assoc, m)
+        np.testing.assert_array_equal(np.asarray(n_sus),
+                                      np.full(m, 2.0, np.float32),
+                                      err_msg=aggname)
+    print(f"scale --smoke: breakdown gate ok (FedAvg max |agg| {fed_max:.1e}"
+          " vs robust < 1e2; 2 attackers/BS all flagged)")
+
+    cfg = EnvConfig(n_twins=33, n_bs=5)
+    batch = scenario.make_batch(jax.random.PRNGKey(7), 3)
+    fcfg = faults.FaultConfig(straggler_rate=0.0, outage_rate=0.0,
+                              malicious_frac=0.0)
+    out = scenario.run_faults(cfg, fcfg, batch, n_rounds=4)
+    ref = scenario.run_baselines(cfg, batch)
+    rt = np.asarray(out["round_times"])
+    np.testing.assert_allclose(
+        rt, np.broadcast_to(np.asarray(ref["average"]).reshape(-1, 1),
+                            rt.shape), rtol=1e-6)
+    assert float(jnp.max(out["straggler_frac"])) == 0.0
+    assert float(jnp.max(out["outage_frac"])) == 0.0
+    print("scale --smoke: zero-rate fault injectors are identities "
+          "(run_faults == run_baselines 'average')")
+
+
+def fault_attack_grid(rounds: int = 3, n_users: int = 20, n_bs: int = 3,
+                      train_n: int = 2000, boost: float = 50.0) -> dict:
+    """The --faults sweep: accuracy-under-attack curves, robust vs plain
+    FedAvg across poisoner fraction x straggler rate (model-replacement
+    attackers, ``boost``x update scaling). Each cell runs a full
+    ``DTWNSystem`` for ``rounds`` federated rounds on the deterministic
+    cifar10-sim textures and records final test accuracy, holdout loss,
+    mean round time (stragglers/outages inflate it through Eqs. 12-17) and
+    the chain's suspect count. The headline derived metric is
+    ``retention_at_poison``: accuracy at 30% poisoners / clean FedAvg
+    accuracy, per aggregator — the robust rules must retain >= 0.9 where
+    plain FedAvg collapses. Merged into scale.json under
+    ``faults.attack_grid``."""
+    import numpy as np
+
+    from repro.core import association as assoc_mod
+    from repro.core.faults import FaultConfig
+    from repro.data import cifar10
+    from repro.fl.server import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=train_n, max_test=512)
+    assoc = np.asarray(assoc_mod.average_association(n_users, n_bs))
+    # stratified attacker placement: exactly round(poison * cohort) per BS —
+    # the poisoner-fraction axis should mean the fraction, not a Bernoulli
+    # draw that can cluster past the per-cohort breakdown point (a cohort
+    # that is majority-malicious is unrecoverable by ANY robust rule; the
+    # chain's loss gate handles that regime, measured separately)
+    def stratified_malicious(frac: float) -> np.ndarray:
+        mal = np.zeros(n_users, bool)
+        for j in range(n_bs):
+            members = np.where(assoc == j)[0]
+            mal[members[: int(round(frac * members.size))]] = True
+        return mal
+
+    cells = {}
+    for poison in (0.0, 0.3):
+        for s_rate in (0.0, 0.5):
+            for agg in ("fedavg", "trimmed_mean", "krum"):
+                cfg = FLConfig(
+                    n_users=n_users, n_bs=n_bs,
+                    bs_freqs_ghz=(2.6, 1.8, 3.6), local_iters=2,
+                    batch_size=16, aggregator=agg, trim_k=2, krum_f=2,
+                    malicious_frac=poison, attack="model_replacement",
+                    attack_boost=boost,
+                    faults=FaultConfig(straggler_rate=s_rate,
+                                       outage_rate=0.1 if s_rate else 0.0))
+                sys_ = DTWNSystem(cfg, data, seed=0)
+                sys_.malicious = stratified_malicious(poison)
+                times, n_sus = [], 0
+                for _ in range(rounds):
+                    r = sys_.run_round(assoc, participating_users=n_users)
+                    times.append(r["round_time_s"])
+                    n_sus = r["n_suspect"]
+                acc = sys_.test_accuracy(n=512)
+                name = f"poison{poison}_straggler{s_rate}_{agg}"
+                cells[name] = {
+                    "accuracy": acc,
+                    "holdout_loss": sys_.holdout_loss(sys_.params),
+                    "round_time_mean_s": float(np.mean(times)),
+                    "n_suspect_last": int(n_sus),
+                    "n_attackers": int(sys_.malicious.sum()),
+                }
+                print(f"faults: {name:<40} acc {acc:.3f} "
+                      f"t {np.mean(times):7.2f}s suspects {n_sus}")
+    clean = cells["poison0.0_straggler0.0_fedavg"]["accuracy"]
+    retention = {
+        agg: cells[f"poison0.3_straggler0.0_{agg}"]["accuracy"] / clean
+        for agg in ("fedavg", "trimmed_mean", "krum")}
+    for agg, r in retention.items():
+        print(f"faults: retention at 30% poisoners [{agg}] {r:.3f}")
+    return {"attack_grid": {
+        "config": {"rounds": rounds, "n_users": n_users, "n_bs": n_bs,
+                   "train_n": train_n, "attack": "model_replacement",
+                   "attack_boost": boost, "trim_k": 2, "krum_f": 2,
+                   "dataset": "cifar10-sim"},
+        "cells": cells,
+        "clean_fedavg_accuracy": clean,
+        "retention_at_poison": retention,
+    }}
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -689,6 +907,10 @@ def smoke() -> None:
                        np.int64), err_msg=f"bs_segments N={n}")
     print("scale --smoke: migration sort-grouping parity vs one-hot oracle "
           "ok")
+
+    # --- fault/adversary axis gate: zero-attacker robust==FedAvg parity,
+    # breakdown bound, zero-rate injector identity ---
+    fault_gate()
 
     # --- 8-host-device sharded parity gate (subprocess: the forced device
     # count must be set before jax initializes; includes the migration
@@ -797,6 +1019,10 @@ if __name__ == "__main__":
     ap.add_argument("--migration-child", action="store_true",
                     help="[subprocess child] migration sweep body; prints "
                          "JSON on the last stdout line")
+    ap.add_argument("--faults", action="store_true",
+                    help="accuracy-under-attack grid: robust vs plain "
+                         "FedAvg across poisoner fraction x straggler rate "
+                         "(merged into scale.json: faults.attack_grid)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
@@ -830,6 +1056,9 @@ if __name__ == "__main__":
             {"heterogeneity": {"migration_sweep": json.loads(lines[-1])}})
         print("heterogeneity.migration_sweep merged into "
               "results/bench/scale.json")
+    elif args.faults:
+        merge_into_scale({"faults": fault_attack_grid()})
+        print("faults.attack_grid merged into results/bench/scale.json")
     elif args.alpha:
         stats = heterogeneity_stats()
         merge_into_scale({"heterogeneity": stats})

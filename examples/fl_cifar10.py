@@ -36,8 +36,30 @@ def main():
                          "scenario (heavy-tailed twin data sizes D_j, plus "
                          "--alpha label skew) that drives the partition AND "
                          "the latency accounting")
+    ap.add_argument("--poison", type=float, default=0.0,
+                    help="fraction of clients that are attackers "
+                         "(repro.fl.client attack trainers)")
+    ap.add_argument("--attack", choices=("label_flip", "model_replacement"),
+                    default="label_flip")
+    ap.add_argument("--aggregator",
+                    choices=("fedavg", "trimmed_mean", "krum"),
+                    default="fedavg",
+                    help="per-BS Eq. 4 aggregation rule (robust rules from "
+                         "repro.core.faults defend against --poison)")
+    ap.add_argument("--straggler-rate", type=float, default=None,
+                    help="per-twin straggler probability; enables the "
+                         "fault-aware Eq. 12-17 latency accounting")
     ap.add_argument("--out", default="results/fl_cifar10.csv")
     args = ap.parse_args()
+
+    fault_kw = {}
+    if args.poison > 0.0 or args.aggregator != "fedavg":
+        fault_kw.update(malicious_frac=args.poison, attack=args.attack,
+                        aggregator=args.aggregator, trim_k=2, krum_f=2)
+    if args.straggler_rate is not None:
+        from repro.core.faults import FaultConfig
+
+        fault_kw["faults"] = FaultConfig(straggler_rate=args.straggler_rate)
 
     data = cifar10.load(max_train=args.train_n, max_test=1000)
     scenario_arg = None
@@ -48,18 +70,19 @@ def main():
             jax.random.PRNGKey(1), 1, skew=(args.skew, args.skew),
             alpha=None if args.alpha is None else (args.alpha, args.alpha))
         scenario_arg = (batch, 0)
-        cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3)
+        cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3,
+                       **fault_kw)
     else:
         cfg = FLConfig(n_users=args.users, n_bs=args.bs, local_iters=3,
                        partition="iid" if args.alpha is None else "dirichlet",
-                       alpha=args.alpha)
+                       alpha=args.alpha, **fault_kw)
     system = DTWNSystem(cfg, data, seed=0, scenario=scenario_arg)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["round", "policy", "dataset", "latency_s", "loss",
-                    "accuracy", "verified", "chain_valid"])
+                    "accuracy", "verified", "suspects", "chain_valid"])
         for rnd in range(args.rounds):
             if args.policy == "random":
                 assoc = np.asarray(assoc_mod.random_association(
@@ -77,7 +100,7 @@ def main():
             w.writerow([info["round"], args.policy, data[2],
                         f"{info['round_time_s']:.3f}", f"{info['loss']:.4f}",
                         f"{acc:.4f}", info["n_verified"],
-                        info["chain_valid"]])
+                        info["n_suspect"], info["chain_valid"]])
             print(f"round {info['round']:3d} [{args.policy}] "
                   f"latency={info['round_time_s']:8.2f}s "
                   f"loss={info['loss']:.4f} acc={acc:.3f}")

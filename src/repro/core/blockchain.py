@@ -97,9 +97,29 @@ class DPoSChain:
 
     # ---- transactions ------------------------------------------------------
     def submit_model(self, sender: int, params, round_: int,
-                     holdout_loss: float) -> Transaction:
+                     holdout_loss: float, *,
+                     n_clients: Optional[int] = None,
+                     n_suspect: Optional[int] = None,
+                     dispersion: Optional[float] = None) -> Transaction:
+        """Record a per-BS aggregated model for verification.
+
+        The optional keyword meta comes from the robust aggregation layer
+        (``repro.core.faults``): ``n_clients``/``n_suspect`` are the BS
+        cohort size and how many of its client updates the aggregator
+        discarded as outliers, ``dispersion`` the cohort's update-norm std
+        (:func:`repro.core.faults.update_dispersion`). :meth:`verify_round`
+        rejects majority-suspect cohorts regardless of loss; omitting the
+        kwargs reproduces the original loss-only transaction exactly.
+        """
+        meta = [("holdout_loss", float(holdout_loss))]
+        if n_clients is not None:
+            meta.append(("n_clients", int(n_clients)))
+        if n_suspect is not None:
+            meta.append(("n_suspect", int(n_suspect)))
+        if dispersion is not None:
+            meta.append(("dispersion", float(dispersion)))
         tx = Transaction("train_model", sender, hash_pytree(params), round_,
-                         meta=(("holdout_loss", float(holdout_loss)),))
+                         meta=tuple(meta))
         self.pending.append(tx)
         return tx
 
@@ -112,14 +132,28 @@ class DPoSChain:
     # ---- verification gate -------------------------------------------------
     def verify_round(self) -> Dict[int, bool]:
         """Quality-gate all pending train_model txs of the current round:
-        accepted iff holdout loss <= median + tolerance. Winners earn coins
-        (paper: 'coins will be awarded'), losers 'get no pay'."""
+        accepted iff holdout loss <= median + tolerance AND the submitting
+        cohort is not majority-suspect (``n_suspect * 2 > n_clients`` per
+        the aggregator's malicious flags — a BS whose update was mostly
+        formed by discarded-outlier clients is rejected even when its loss
+        sneaks under the gate, excluding it from the Eq. 4/5 weights).
+        Winners earn coins (paper: 'coins will be awarded'), losers 'get
+        no pay'."""
         model_txs = [t for t in self.pending if t.kind == "train_model"]
-        losses = {t.sender: dict(t.meta)["holdout_loss"] for t in model_txs}
+        metas = {t.sender: dict(t.meta) for t in model_txs}
+        losses = {s: m["holdout_loss"] for s, m in metas.items()}
         if not losses:
             return {}
         med = float(np.median(list(losses.values())))
-        verdicts = {s: (l <= med + self.tolerance) for s, l in losses.items()}
+
+        def suspect(m) -> bool:
+            n_cli, n_sus = m.get("n_clients"), m.get("n_suspect")
+            return (n_cli is not None and n_sus is not None
+                    and n_sus * 2 > n_cli)
+
+        verdicts = {s: (l <= med + self.tolerance
+                        and not suspect(metas[s]))
+                    for s, l in losses.items()}
         for s, ok in verdicts.items():
             if ok:
                 self.stakes[s] += self.reward

@@ -73,6 +73,19 @@ def uplink_rate(cfg: WirelessConfig, tau, h, dist) -> jnp.ndarray:
     return jnp.sum(tau * per_ch, axis=1)  # (M,)
 
 
+def apply_outage(rate, bad, floor) -> jnp.ndarray:
+    """Gate a per-BS rate (Eq. 7/8 output) through a channel-outage mask.
+
+    ``bad``: (M,) boolean Gilbert-Elliott bad-state indicator (see
+    ``repro.core.faults``). A BS in the bad state keeps only ``floor`` of
+    its achievable rate (deep-fade residual capacity, not a hard zero — a
+    hard zero would make Eq. 14's transmission latency infinite and
+    NaN-poison the reward).
+    """
+    rate = jnp.asarray(rate)
+    return jnp.where(jnp.asarray(bad), rate * floor, rate)
+
+
 def downlink_rate(cfg: WirelessConfig, h_down, dist) -> jnp.ndarray:
     """Eq. 8: MBS broadcast of the global model. h_down: (M, C)."""
     P = dbm_to_watt(cfg.p_downlink_dbm)

@@ -1,0 +1,470 @@
+"""Fault & adversary axis: stragglers, channel outages, poisoned twins.
+
+The paper motivates blockchain-empowered FL with unreliable channels and
+untrusted users (Sec. I, III), but the clean simulation core models neither.
+This module injects all three failure modes as *pure-jax* dynamics so they
+compose with every existing axis (heterogeneity, migration, sharding):
+
+* **Stragglers** — each twin is slow in a round with probability
+  ``straggler_rate``; a straggler's compute work is inflated by a
+  heavy-tailed ``1 + Exp(1) * straggler_slowdown`` multiplier applied to
+  the per-twin batch fraction ``b`` (the Eq. 12/13 work term
+  ``b_j * D_j``), so slow twins stretch exactly the compute leg of the
+  round-time decomposition.
+* **Channel outages** — a two-state Gilbert-Elliott chain per BS
+  (good/bad, mean burst length ``burst_len`` rounds, stationary bad
+  probability ``outage_rate``) gates ``comms.uplink_rate`` down to
+  ``outage_floor`` of its achievable value while bad
+  (:func:`repro.core.comms.apply_outage`), stretching the Eq. 14
+  transmission leg in correlated bursts rather than i.i.d. blips.
+* **Malicious twins** — a Bernoulli(``malicious_frac``) per-twin mask.
+  The FL layer (``repro/fl``) turns flagged twins into label-flip or
+  model-replacement attackers; the defense is the robust per-BS
+  aggregation below plus the blockchain verify gate
+  (``repro.core.blockchain``), which rejects cohorts whose updates the
+  aggregator flagged — excluding them from the Eq. 4/5 weights.
+
+All injectors draw through ``sharding.localize`` (full-N draw, per-shard
+slice), so the sharded variants are bit-parity with single-device runs,
+padding rows are re-masked to identities (slowdown 1, not-slow, benign),
+and the cross-twin statistics use the masked ``twin_*`` helpers.
+
+Robust aggregation (defense side) runs on the stacked per-client update
+trees of ``hierarchy.bs_aggregate_stacked`` and is built from the same
+segment-reduction primitives as the rest of the repo: coordinate
+**trimmed-mean** peels the ``trim_k`` largest and smallest contributions
+per (BS, coordinate) via ``segment_max``/``segment_min`` passes;
+**Krum-lite** scores each client by the sum of its ``n_i - f - 2`` nearest
+same-BS squared distances (cohort sizes from ``migration.bs_segments`` —
+the sort backend's contiguous per-BS grouping) and drops the ``f`` worst
+clients per BS. Both reduce exactly to weighted FedAvg when their knob is
+zero and keep the breakdown point below half the cohort.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import comms, hierarchy, latency, migration, sharding
+from repro.kernels.segment_reduce import (TWIN_AXIS, segment_max,
+                                          segment_min, segment_reduce,
+                                          segment_std)
+
+AGGREGATORS = ("fedavg", "trimmed_mean", "krum")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static fault/adversary knobs (hashable — rides inside ``EnvConfig``
+    and ``FLConfig`` as a jit-static field).
+
+    ``straggler_rate``     — per-twin per-round probability of being slow.
+    ``straggler_slowdown`` — scale of the extra work multiplier: a
+                             straggler computes at ``1 + Exp(1) * scale``
+                             times its nominal Eq. 12/13 work.
+    ``outage_rate``        — stationary probability a BS uplink is in the
+                             Gilbert-Elliott bad state.
+    ``burst_len``          — mean bad-state dwell time in rounds (>= 1);
+                             the burstiness knob (1 = i.i.d. outages).
+    ``outage_floor``       — fraction of the achievable uplink rate that
+                             survives a bad state (deep fade, not zero).
+    ``malicious_frac``     — per-twin probability of being an attacker.
+    """
+    straggler_rate: float = 0.1
+    straggler_slowdown: float = 4.0
+    outage_rate: float = 0.1
+    burst_len: float = 3.0
+    outage_floor: float = 0.05
+    malicious_frac: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# injectors — straggler slowdowns, Gilbert-Elliott outages, malicious masks
+# ---------------------------------------------------------------------------
+
+
+def straggler_slowdowns(fcfg: FaultConfig, key, n: int, *,
+                        rate=None) -> jnp.ndarray:
+    """Per-twin compute-work multipliers, (N,) fp32, all >= 1.
+
+    ``rate`` overrides ``fcfg.straggler_rate`` (scenario rows carry traced
+    per-row rates). Twin-sharding aware: the Bernoulli and magnitude draws
+    are sliced from the identical full-N draw (``sharding.localize``) so
+    sharded runs are bit-parity, and padding rows are re-stamped with the
+    identity multiplier 1.
+    """
+    rate = fcfg.straggler_rate if rate is None else rate
+    n_g = sharding.global_twin_count(n)
+    k_mask, k_mag = jax.random.split(key)
+    is_slow = sharding.localize(
+        jax.random.uniform(k_mask, (n_g,)) < rate, fill=False)
+    extra = sharding.localize(
+        jax.random.exponential(k_mag, (n_g,)) * fcfg.straggler_slowdown,
+        fill=0.0)
+    slow = 1.0 + jnp.where(is_slow, extra, 0.0)
+    return sharding.mask_twins(slow, 1.0)
+
+
+def malicious_mask(fcfg: FaultConfig, key, n: int, *, frac=None
+                   ) -> jnp.ndarray:
+    """Per-twin attacker flags, (N,) bool (padding rows benign)."""
+    frac = fcfg.malicious_frac if frac is None else frac
+    n_g = sharding.global_twin_count(n)
+    mal = sharding.localize(
+        jax.random.uniform(key, (n_g,)) < frac, fill=False)
+    return sharding.mask_twins(mal, False)
+
+
+def fault_draws(fcfg: FaultConfig, key, n: int, *, straggler_rate=None,
+                malicious_frac=None):
+    """One round's per-twin fault realization: ``(slowdowns (N,) fp32,
+    malicious (N,) bool)`` from a single key (split once)."""
+    k_slow, k_mal = jax.random.split(key)
+    return (straggler_slowdowns(fcfg, k_slow, n, rate=straggler_rate),
+            malicious_mask(fcfg, k_mal, n, frac=malicious_frac))
+
+
+def _stationary_bad(fcfg: FaultConfig, rate):
+    rate = fcfg.outage_rate if rate is None else rate
+    return jnp.clip(jnp.asarray(rate, jnp.float32), 0.0, 0.95)
+
+
+def ge_transition_probs(fcfg: FaultConfig, *, rate=None):
+    """Gilbert-Elliott transition probabilities ``(p_gb, p_bg)``.
+
+    ``p_bg = 1 / burst_len`` fixes the mean bad-state dwell time;
+    ``p_gb = pi_b * p_bg / (1 - pi_b)`` makes ``pi_b`` (= outage rate)
+    the stationary bad probability: pi_b = p_gb / (p_gb + p_bg).
+    """
+    pi_b = _stationary_bad(fcfg, rate)
+    p_bg = 1.0 / jnp.maximum(jnp.asarray(fcfg.burst_len, jnp.float32), 1.0)
+    p_gb = jnp.clip(pi_b * p_bg / (1.0 - pi_b), 0.0, 1.0)
+    return p_gb, p_bg
+
+
+def outage_draw(fcfg: FaultConfig, key, n_bs: int, *, rate=None
+                ) -> jnp.ndarray:
+    """Stationary draw of the per-BS bad-state indicator, (M,) bool.
+
+    This is the chain's marginal — the memoryless entry point used where
+    no state is carried across steps (env dynamics, one-shot round times).
+    """
+    pi_b = _stationary_bad(fcfg, rate)
+    return jax.random.uniform(key, (n_bs,)) < pi_b
+
+
+def outage_step(fcfg: FaultConfig, key, bad, *, rate=None) -> jnp.ndarray:
+    """One Gilbert-Elliott transition: ``bad (M,) bool -> bad' (M,) bool``.
+
+    Preserves the stationary distribution of :func:`outage_draw` while
+    adding ``burst_len``-round temporal correlation; the scenario runner
+    (``scenario.run_faults``) scans this across rounds.
+    """
+    p_gb, p_bg = ge_transition_probs(fcfg, rate=rate)
+    u = jax.random.uniform(key, jnp.shape(bad))
+    return jnp.where(jnp.asarray(bad), u >= p_bg, u < p_gb)
+
+
+def outage_gate(fcfg: FaultConfig, uplink, bad) -> jnp.ndarray:
+    """Apply the bad-state mask to the Eq. 7 uplink rates."""
+    return comms.apply_outage(uplink, bad, fcfg.outage_floor)
+
+
+# ---------------------------------------------------------------------------
+# faulty round time — Eqs. 12-17 under stragglers + outages
+# ---------------------------------------------------------------------------
+
+
+def faulty_round_time(lp: latency.LatencyParams, fcfg: FaultConfig, key,
+                      assoc, b, data_sizes, freqs, uplink, downlink, *,
+                      straggler_rate=None, outage_rate=None,
+                      outage_bad=None, backend: str = "auto") -> jnp.ndarray:
+    """Eq. 17 round time with straggler-inflated work and outage-gated
+    uplink. ``outage_bad`` injects an externally-carried chain state
+    ((M,) bool); by default the stationary marginal is drawn from ``key``.
+    Scalar fp32, replicated under a twin-sharding scope.
+    """
+    k_slow, k_out = jax.random.split(key)
+    slow = straggler_slowdowns(fcfg, k_slow, jnp.shape(assoc)[0],
+                               rate=straggler_rate)
+    bad = (outage_draw(fcfg, k_out, jnp.shape(uplink)[0], rate=outage_rate)
+           if outage_bad is None else outage_bad)
+    up = outage_gate(fcfg, uplink, bad)
+    return latency.round_time(lp, assoc, jnp.asarray(b) * slow, data_sizes,
+                              freqs, up, downlink, backend=backend)
+
+
+def straggler_frac(slowdowns) -> jnp.ndarray:
+    """Fraction of (real) twins slowed this round — scalar, scope-safe."""
+    hit = sharding.mask_twins(jnp.asarray(slowdowns) > 1.0, False)
+    return sharding.twin_mean(hit.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# twin-axis sharded entry points
+# ---------------------------------------------------------------------------
+
+
+def sharded_fault_draws(ts, fcfg: FaultConfig, key, n: int, *,
+                        straggler_rate=None, malicious_frac=None):
+    """:func:`fault_draws` over a ``TwinSharding`` mesh: returns padded +
+    twin-sharded ``(slowdowns, malicious)`` (padding rows hold the
+    identities 1.0 / False; ``ts.unpad_twin(x, n)`` recovers the global
+    arrays). Bit-parity with the single-device draws; ``n_shards == 1``
+    is the no-op fast path."""
+    if ts.n_shards == 1:
+        return fault_draws(fcfg, key, n, straggler_rate=straggler_rate,
+                           malicious_frac=malicious_frac)
+
+    def local(k):
+        with ts.scope(n):
+            return fault_draws(fcfg, k, n, straggler_rate=straggler_rate,
+                               malicious_frac=malicious_frac)
+
+    return ts.shard_map(local, in_specs=(P(),),
+                        out_specs=(P(TWIN_AXIS), P(TWIN_AXIS)))(key)
+
+
+def sharded_faulty_round_time(ts, lp: latency.LatencyParams,
+                              fcfg: FaultConfig, key, assoc, b, data_sizes,
+                              freqs, uplink, downlink, *,
+                              straggler_rate=None, outage_rate=None,
+                              outage_bad=None) -> jnp.ndarray:
+    """:func:`faulty_round_time` over the mesh: (N,) inputs are padded and
+    twin-sharded, (M,) inputs replicated, output a replicated scalar."""
+    if ts.n_shards == 1:
+        return faulty_round_time(lp, fcfg, key, assoc, b, data_sizes, freqs,
+                                 uplink, downlink,
+                                 straggler_rate=straggler_rate,
+                                 outage_rate=outage_rate,
+                                 outage_bad=outage_bad)
+    n = jnp.shape(assoc)[0]
+    m = jnp.shape(freqs)[0]
+    pa = ts.pad_twin(assoc, fill=m)
+    pb = ts.pad_twin(jnp.broadcast_to(jnp.asarray(b, jnp.float32), (n,)),
+                     fill=0.0)
+    pd = ts.pad_twin(data_sizes, fill=0.0)
+
+    def local(a, bv, d, f, u, dn, k):
+        with ts.scope(n):
+            return faulty_round_time(lp, fcfg, k, a, bv, d, f, u, dn,
+                                     straggler_rate=straggler_rate,
+                                     outage_rate=outage_rate,
+                                     outage_bad=outage_bad)
+
+    return ts.shard_map(
+        local, in_specs=(P(TWIN_AXIS),) * 3 + (P(),) * 4,
+        out_specs=P())(pa, pb, pd, freqs, uplink, downlink, key)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation — coordinate trimmed-mean and Krum-lite
+# ---------------------------------------------------------------------------
+
+
+def _stack_flat(stacked):
+    """Flatten a stacked update tree (leaves (K, ...)) to per-leaf (K, D)
+    fp32 views plus the leaf list for reconstruction."""
+    leaves = jax.tree_util.tree_leaves(stacked)
+    k = leaves[0].shape[0]
+    return [jnp.asarray(l, jnp.float32).reshape(k, -1) for l in leaves], k
+
+
+def _peel_extreme(keep, flat, assoc, assoc_c, eligible_rows, n_bs: int,
+                  largest: bool):
+    """Drop the single most extreme surviving contribution per (segment,
+    coordinate): ties broken by smallest client index (a second
+    ``segment_min`` over candidate indices), so exactly one row is peeled
+    per pass per occupied coordinate."""
+    fill = jnp.float32(-jnp.inf if largest else jnp.inf)
+    masked = jnp.where(keep, flat, fill)
+    ext = (segment_max if largest else segment_min)(masked, assoc, n_bs)
+    hit = (keep & eligible_rows & jnp.isfinite(masked)
+           & (masked == ext[assoc_c]))
+    idx = jnp.arange(flat.shape[0], dtype=jnp.float32)[:, None]
+    cand = jnp.where(hit, idx, jnp.float32(flat.shape[0]))
+    first = segment_min(cand, assoc, n_bs)
+    return keep & ~(hit & (idx == first[assoc_c]))
+
+
+def trimmed_mean_aggregate(stacked, data_sizes, assoc, n_bs: int, *,
+                           trim_k: int = 1, backend: str = "auto"):
+    """Coordinate-wise trimmed weighted mean per BS over stacked updates.
+
+    For every (BS, coordinate) the ``2 * trim_k`` surviving client
+    contributions **farthest from the surviving cohort mean** are peeled
+    (one per pass, the center re-estimated from survivors each pass, index
+    tie-break) before the Eq. 4 weighted mean. Centered peeling removes
+    one-sided attackers *first* instead of blindly trimming both tails —
+    symmetric extreme-trimming discards ``trim_k`` honest values from the
+    far side of every attacked coordinate, and that overcorrection bias
+    compounds across rounds. A huge outlier cannot hide by dragging the
+    center: it shifts the mean by at most ``delta / n`` while sitting
+    ``delta`` away, so it stays the farthest and is peeled first. Pass
+    ``q`` only touches cohorts with ``n > q + 2``, so at least two
+    contributions always survive. ``trim_k == 0`` reproduces
+    ``hierarchy.bs_aggregate_stacked`` exactly.
+
+    Returns ``(per_bs_tree, bs_w, survivor_frac)`` — ``bs_w`` the (M,)
+    untrimmed Eq. 4 weight sums, ``survivor_frac`` (K,) the per-client
+    fraction of coordinates that survived trimming (an attacker whose
+    update is extreme everywhere scores ~0; use as the suspect signal).
+    """
+    w = jnp.asarray(data_sizes, jnp.float32)
+    assoc = jnp.asarray(assoc)
+    assoc_c = jnp.clip(assoc, 0, n_bs - 1)
+    flats, k = _stack_flat(stacked)
+    cnt = segment_reduce(jnp.ones((k,), jnp.float32), assoc, n_bs,
+                         backend=backend)
+    cnt_rows = cnt[assoc_c][:, None]  # (K, 1)
+
+    kept = jnp.zeros((k,), jnp.float32)
+    total = 0.0
+    out_flat = []
+    for flat in flats:
+        keep = jnp.ones(flat.shape, bool)
+        for q in range(2 * trim_k):
+            eligible = cnt_rows > q + 2.0
+            keepf = keep.astype(jnp.float32)
+            c_num = segment_reduce(flat * keepf, assoc, n_bs,
+                                   backend=backend)
+            c_den = segment_reduce(keepf, assoc, n_bs, backend=backend)
+            center = c_num / jnp.where(c_den > 0, c_den, 1.0)
+            dev = jnp.abs(flat - center[assoc_c])
+            keep = _peel_extreme(keep, dev, assoc, assoc_c, eligible, n_bs,
+                                 largest=True)
+        keepf = keep.astype(jnp.float32)
+        num = segment_reduce(flat * (w[:, None] * keepf), assoc, n_bs,
+                             backend=backend)
+        den = segment_reduce(jnp.broadcast_to(w[:, None], flat.shape)
+                             * keepf, assoc, n_bs, backend=backend)
+        out_flat.append(num / jnp.where(den > 0, den, 1.0))
+        kept = kept + jnp.sum(keepf, axis=1)
+        total += flat.shape[1]
+
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    out_leaves = [o.reshape((n_bs,) + l.shape[1:])
+                  for o, l in zip(out_flat, leaves)]
+    per_bs = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    bs_w = segment_reduce(w, assoc, n_bs, backend=backend)
+    return per_bs, bs_w, kept / total
+
+
+def krum_aggregate(stacked, data_sizes, assoc, n_bs: int, *,
+                   krum_f: int = 1, backend: str = "auto"):
+    """Krum-lite per-BS aggregation over stacked updates.
+
+    Each client i is scored by the sum of its ``q_i = n_i - f - 2``
+    smallest squared distances to same-BS peers (cross-BS pairs masked),
+    where the cohort sizes ``n_i`` come from the per-BS segment boundaries
+    of ``migration.bs_segments`` — the sort backend's contiguous grouping.
+    Up to ``f`` worst-scoring clients per BS are dropped, stopping while a
+    cohort still has at least 3 survivors (peel pass ``p`` only touches
+    cohorts with ``n > p + 3`` — Krum's ``n >= f + 3`` validity condition
+    applied per cohort), and the survivors are Eq. 4 weighted-averaged.
+    ``krum_f == 0`` reproduces ``hierarchy.bs_aggregate_stacked`` exactly.
+
+    Returns ``(per_bs_tree, bs_w, survivor_frac)`` with ``bs_w`` the
+    *surviving* Eq. 4 weight sums (rejected updates carry zero weight) and
+    ``survivor_frac`` (K,) in {0, 1}.
+    """
+    w = jnp.asarray(data_sizes, jnp.float32)
+    assoc = jnp.asarray(assoc)
+    assoc_c = jnp.clip(assoc, 0, n_bs - 1)
+    flats, k = _stack_flat(stacked)
+    flat = flats[0] if len(flats) == 1 else jnp.concatenate(flats, axis=1)
+
+    # pairwise squared distances via the gram matrix; only same-BS pairs
+    sq = jnp.sum(flat * flat, axis=1)
+    d2 = jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * flat @ flat.T, 0.0)
+    same = (assoc[:, None] == assoc[None, :]) & ~jnp.eye(k, dtype=bool)
+    d2 = jnp.where(same, d2, jnp.inf)
+
+    # cohort sizes from the contiguous per-BS grouping (bs_segments)
+    _, bounds = migration.bs_segments(assoc, n_bs)
+    counts = (bounds[1:] - bounds[:-1]).astype(jnp.int32)  # (M,)
+    cnt_i = counts[assoc_c]
+    q_i = jnp.clip(cnt_i - krum_f - 2, 1, k)
+
+    srt = jnp.sort(d2, axis=1)  # ascending, inf (cross-BS) last
+    take = jnp.arange(k)[None, :] < q_i[:, None]
+    score = jnp.sum(jnp.where(take & jnp.isfinite(srt), srt, 0.0), axis=1)
+
+    keep = jnp.ones((k,), bool)
+    idx = jnp.arange(k)
+    for p in range(krum_f):
+        eligible = cnt_i > p + 3
+        masked = jnp.where(keep & eligible, score, -jnp.inf)
+        worst = segment_max(masked, assoc, n_bs)  # (M,)
+        hit = keep & eligible & jnp.isfinite(masked) \
+            & (masked == worst[assoc_c])
+        cand = jnp.where(hit, idx.astype(jnp.float32), jnp.float32(k))
+        first = segment_min(cand, assoc, n_bs)
+        keep = keep & ~(hit & (idx == first[assoc_c].astype(jnp.int32)))
+
+    w_eff = w * keep.astype(jnp.float32)
+    per_bs, bs_w = hierarchy.bs_aggregate_stacked(stacked, w_eff, assoc,
+                                                  n_bs, backend=backend)
+    return per_bs, bs_w, keep.astype(jnp.float32)
+
+
+def robust_bs_aggregate_stacked(stacked, data_sizes, assoc, n_bs: int, *,
+                                aggregator: str = "fedavg", trim_k: int = 1,
+                                krum_f: int = 1, backend: str = "auto"):
+    """Aggregator dispatch for ``FLConfig.aggregator``: ``"fedavg"`` (plain
+    ``hierarchy.bs_aggregate_stacked``), ``"trimmed_mean"``, or ``"krum"``.
+    Always returns ``(per_bs_tree, bs_w, survivor_frac)``."""
+    if aggregator not in AGGREGATORS:
+        raise ValueError(
+            f"aggregator must be one of {AGGREGATORS}, got {aggregator!r}")
+    if aggregator == "trimmed_mean":
+        return trimmed_mean_aggregate(stacked, data_sizes, assoc, n_bs,
+                                      trim_k=trim_k, backend=backend)
+    if aggregator == "krum":
+        return krum_aggregate(stacked, data_sizes, assoc, n_bs,
+                              krum_f=krum_f, backend=backend)
+    per_bs, bs_w = hierarchy.bs_aggregate_stacked(stacked, data_sizes,
+                                                  assoc, n_bs,
+                                                  backend=backend)
+    k = jnp.shape(jnp.asarray(assoc))[0]
+    return per_bs, bs_w, jnp.ones((k,), jnp.float32)
+
+
+def update_dispersion(stacked, assoc, n_bs: int, *, backend: str = "auto"
+                      ) -> jnp.ndarray:
+    """Per-BS std of client update norms, (M,) fp32 — the cohort-dispersion
+    diagnostic the chain records next to each submitted model (a poisoned
+    cohort shows an inflated spread even when its mean passes the loss
+    gate). Built on ``segment_std``'s moment-sum composition."""
+    flats, _ = _stack_flat(stacked)
+    sumsq = sum(jnp.sum(f * f, axis=1) for f in flats)
+    return segment_std(jnp.sqrt(sumsq), assoc, n_bs, backend=backend)
+
+
+def suspect_counts(survivor_frac, assoc, n_bs: int, *,
+                   backend: str = "auto"):
+    """Per-BS ``(n_clients, n_suspect)`` (M,) fp32 pair from a
+    survivor-fraction vector.
+
+    A client is suspect when the aggregator kept less than a QUARTER of
+    the coordinates it kept for its cohort on average. The threshold is
+    relative because trimming itself caps the cohort-mean survivor
+    fraction (trimmed-mean with cohort n keeps ``(n - 2k)/n`` of every
+    coordinate; an absolute cut would flag honest clients in small
+    cohorts), and conservative (0.25x) because honest clients land a
+    noisy band around the mean — only an extreme attacker, the
+    model-replacement case whose update is peeled at nearly every
+    coordinate, falls this far below it."""
+    survivor_frac = jnp.asarray(survivor_frac)
+    ones = jnp.ones(survivor_frac.shape, jnp.float32)
+    n_clients = segment_reduce(ones, assoc, n_bs, backend=backend)
+    total = segment_reduce(survivor_frac.astype(jnp.float32), assoc, n_bs,
+                           backend=backend)
+    mean = total / jnp.maximum(n_clients, 1.0)
+    thresh = 0.25 * mean[jnp.clip(jnp.asarray(assoc), 0, n_bs - 1)]
+    n_suspect = segment_reduce((survivor_frac < thresh).astype(jnp.float32),
+                               assoc, n_bs, backend=backend)
+    return n_clients, n_suspect

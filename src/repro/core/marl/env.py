@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency, migration as migration_mod, sharding
+from repro.core import faults as faults_mod
 from repro.core.marl import spaces
 from repro.core.marl.spaces import Action, Observation
 from repro.core.sharding import TWIN_AXIS, TwinSharding
@@ -58,6 +59,14 @@ class EnvConfig:
     # hedge against twins drifting off its chosen BSs. None == the paper's
     # static-twin dynamics (bit-identical to the pre-migration env).
     migration: Optional[migration_mod.MigrationConfig] = None
+    # fault injection (repro.core.faults): when set, per-step straggler
+    # slowdowns inflate the Eq. 12/13 work and a channel-outage draw gates
+    # the Eq. 7 uplink BEFORE latency accounting. The env applies the
+    # Gilbert-Elliott chain's *stationary marginal* each step (memoryless —
+    # EnvState carries no channel-state field; burst autocorrelation is
+    # exercised by scenario.run_faults, which scans the chain across
+    # rounds). None == the exact pre-fault step.
+    faults: Optional[faults_mod.FaultConfig] = None
 
     @property
     def wl(self) -> comms.WirelessConfig:
@@ -270,7 +279,14 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     association the reward and the next state see
     (``info["migration_rate"]`` reports the realized move fraction). The
     migration key is folded independently of the dynamics draws, so a
-    ``migration=None`` config traces the exact pre-migration step."""
+    ``migration=None`` config traces the exact pre-migration step.
+
+    With ``cfg.faults`` set, straggler slowdowns scale the realized per-twin
+    work ``b`` (``info["b"]`` is the *effective* work fraction) and a
+    stationary channel-outage draw gates the uplink before latency
+    accounting; ``info["straggler_frac"]`` / ``info["outage_frac"]`` report
+    the realized fault fractions. ``faults=None`` traces the exact
+    pre-fault step (dedicated key fold)."""
     if not isinstance(actions, Action):
         actions = spaces.unflatten_action(cfg, actions)
     assoc, b, tau = decode_actions(cfg, actions)
@@ -279,7 +295,18 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
         assoc = migrate_assoc(cfg, key, assoc, st.data_sizes)
         # each twin uses the batch control of the BS it LANDED on
         b = _b_for_assoc(cfg, actions, assoc)
+    slow = bad = None
+    if cfg.faults is not None:
+        # dedicated fold (4) — disjoint from migration's fold (3) and the
+        # dynamics split below, so faults=None traces the exact old step
+        k_slow, k_bad = jax.random.split(jax.random.fold_in(key, 4))
+        slow = faults_mod.straggler_slowdowns(cfg.faults, k_slow,
+                                              jnp.shape(assoc)[0])
+        b = b * slow  # stragglers inflate the realized Eq. 12/13 work
+        bad = faults_mod.outage_draw(cfg.faults, k_bad, cfg.n_bs)
     up = comms.uplink_rate(cfg.wl, tau, st.h_up, st.dist)
+    if cfg.faults is not None:
+        up = faults_mod.outage_gate(cfg.faults, up, bad)
     down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
     per_bs = latency.round_time_per_bs(cfg.lat, assoc, b, st.data_sizes,
                                        st.freqs, up, down)
@@ -309,6 +336,9 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     if cfg.migration is not None:
         info["migration_rate"] = migration_mod.migration_rate(commanded,
                                                               assoc)
+    if cfg.faults is not None:
+        info["straggler_frac"] = faults_mod.straggler_frac(slow)
+        info["outage_frac"] = jnp.mean(bad.astype(jnp.float32))
     return nxt, reward, info
 
 
@@ -385,6 +415,9 @@ def sharded_env_step(ts: TwinSharding, cfg: EnvConfig, st: EnvState,
                   "b": _P(TWIN_AXIS), "tau": _P(), "uplink": _P()}
     if cfg.migration is not None:
         info_specs["migration_rate"] = _P()  # psum'd, replicated
+    if cfg.faults is not None:
+        info_specs["straggler_frac"] = _P()  # psum'd, replicated
+        info_specs["outage_frac"] = _P()     # (M,)-derived, replicated
     return ts.shard_map(
         local, in_specs=(_ENV_SPECS, _ACT_SPECS, _P()),
         out_specs=(_ENV_SPECS, _P(), info_specs))(st, actions, key)

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency, migration, sharding
+from repro.core import faults as faults_mod
+from repro.core.faults import FaultConfig
 from repro.core.marl import env as env_mod
 from repro.core.marl.env import EnvConfig
 from repro.core.migration import MigrationConfig
@@ -58,18 +60,36 @@ class ScenarioBatch(NamedTuple):
     data_max: jnp.ndarray  # (S,)
     skew: jnp.ndarray      # (S,) >= 1; 1 == uniform population
     alpha: jnp.ndarray = None  # (S,) > 0 Dirichlet label skew; inf == IID
+    # fault/adversary axes (repro.core.faults); None == axis absent, the
+    # runner falls back to its FaultConfig's scalar rate
+    straggler: jnp.ndarray = None  # (S,) straggler rate in [0, 1]
+    outage: jnp.ndarray = None     # (S,) stationary outage rate in [0, 1]
+    malicious: jnp.ndarray = None  # (S,) malicious twin fraction in [0, 1]
 
 
 def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
                data_max=(500.0, 1500.0), skew=(1.0, 4.0),
-               alpha=(0.1, 10.0)) -> ScenarioBatch:
+               alpha=(0.1, 10.0), straggler=None, outage=None,
+               malicious=None) -> ScenarioBatch:
     """Sample a scenario batch: seeds plus per-scenario population ranges.
     ``alpha`` is drawn log-uniformly (label skew is a scale parameter);
-    ``alpha=None`` omits the axis entirely (IID labels)."""
+    ``alpha=None`` omits the axis entirely (IID labels). The fault axes
+    ``straggler`` / ``outage`` / ``malicious`` are per-scenario rates drawn
+    uniformly from their ``(lo, hi)`` range, or omitted when None (the
+    default — a clean batch draws exactly what it drew before the fault
+    axes existed — the original five streams still come from
+    ``split(key, 5)``; the fault rates draw from folded side streams)."""
     k0, k1, k2, k3, k4 = jax.random.split(key, 5)
     log_a = (None if alpha is None else
              jax.random.uniform(k4, (n_scenarios,), minval=jnp.log(alpha[0]),
                                 maxval=jnp.log(alpha[1])))
+
+    def rate(stream, rng):
+        return (None if rng is None else
+                jax.random.uniform(jax.random.fold_in(key, stream),
+                                   (n_scenarios,), minval=rng[0],
+                                   maxval=rng[1]))
+
     return ScenarioBatch(
         key=jax.random.split(k0, n_scenarios),
         data_min=jax.random.uniform(k1, (n_scenarios,), minval=data_min[0],
@@ -79,6 +99,9 @@ def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
         skew=jax.random.uniform(k3, (n_scenarios,), minval=skew[0],
                                 maxval=skew[1]),
         alpha=None if log_a is None else jnp.exp(log_a),
+        straggler=rate(5, straggler),
+        outage=rate(6, outage),
+        malicious=rate(7, malicious),
     )
 
 
@@ -206,24 +229,28 @@ def _baselines_lite_one(cfg: EnvConfig, key, data_min, data_max,
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_runner(ts: TwinSharding, cfg: EnvConfig, body, *static_args):
+def _sharded_runner(ts: TwinSharding, cfg: EnvConfig, body, *static_args,
+                    n_mapped: int = 4):
     """Compiled sharded scenario runner for (mesh, config, body, statics):
-    ``body(cfg, *static_args, key, data_min, data_max, skew)`` is vmapped
-    over the scenario axis inside a twin scope and shard_mapped over the
-    mesh (``n_shards == 1`` skips the mesh — the no-op fast path). Cached
-    so repeated sweep calls reuse one jit program instead of retracing a
-    fresh closure each time; every cache key is hashable (frozen
-    dataclasses + a module-level function)."""
+    ``body(cfg, *static_args, key, data_min, data_max, skew, ...)`` is
+    vmapped over the scenario axis inside a twin scope and shard_mapped
+    over the mesh (``n_shards == 1`` skips the mesh — the no-op fast
+    path). ``n_mapped`` is the number of per-scenario (S,)-leading mapped
+    arguments the body takes (4 for the classic key/dmin/dmax/skew
+    runners; the fault runner adds its two rate axes). Cached so repeated
+    sweep calls reuse one jit program instead of retracing a fresh closure
+    each time; every cache key is hashable (frozen dataclasses + a
+    module-level function)."""
     fn = functools.partial(body, cfg, *static_args)
     if ts.n_shards == 1:
         return jax.jit(jax.vmap(fn))
 
-    def local(k, dmin, dmax, skew):
+    def local(*mapped):
         with ts.scope(cfg.n_twins):
-            return jax.vmap(fn)(k, dmin, dmax, skew)
+            return jax.vmap(fn)(*mapped)
 
     P = jax.sharding.PartitionSpec
-    sm = ts.shard_map(local, in_specs=(P(), P(), P(), P()), out_specs=P())
+    sm = ts.shard_map(local, in_specs=(P(),) * n_mapped, out_specs=P())
     return jax.jit(sm)
 
 
@@ -267,6 +294,31 @@ def population_row(batch: ScenarioBatch, i: int, n_twins: int):
         * u ** batch.skew[i]
     alpha = None if batch.alpha is None else float(batch.alpha[i])
     return np.asarray(d, np.float32), alpha
+
+
+def fault_row(batch: ScenarioBatch, i: int, n_twins: int):
+    """Host-side view of scenario row ``i``'s fault axes: the FL bridge of
+    the adversary subsystem (the latency runner :func:`run_faults` consumes
+    the same per-row rates on device).
+
+    Returns ``(malicious (n_twins,) np.bool | None, straggler_rate float |
+    None, outage_rate float | None)`` — None wherever the batch carries no
+    such axis. The malicious mask draws from ``fold_in(row_key, 7)``, a
+    side stream disjoint from the population/channel streams
+    (``split(row_key, 4)``) and the association/migration folds (1, 2, 3),
+    so adding the fault axes never perturbs :func:`population_row`'s
+    same-realization contract.
+    """
+    import numpy as np
+
+    mal = None
+    if batch.malicious is not None:
+        km = jax.random.fold_in(batch.key[i], 7)
+        mal = np.asarray(
+            jax.random.uniform(km, (n_twins,)) < batch.malicious[i])
+    s_rate = None if batch.straggler is None else float(batch.straggler[i])
+    o_rate = None if batch.outage is None else float(batch.outage[i])
+    return mal, s_rate, o_rate
 
 
 # ---------------------------------------------------------------------------
@@ -327,6 +379,84 @@ def run_migration_sharded(ts: TwinSharding, cfg: EnvConfig,
     the no-op fast path."""
     return _sharded_runner(ts, cfg, _migration_one, mcfg, n_rounds)(
         batch.key, batch.data_min, batch.data_max, batch.skew)
+
+
+# ---------------------------------------------------------------------------
+# fault runners — stragglers + Gilbert-Elliott outage bursts across rounds
+# ---------------------------------------------------------------------------
+
+
+def _faults_one(cfg: EnvConfig, fcfg: FaultConfig, n_rounds: int, key,
+                data_min, data_max, skew, s_rate, o_rate) -> dict:
+    """One scenario under faults: the paper's round-robin association
+    scored ``n_rounds`` rounds with per-round straggler slowdowns scaling
+    the Eq. 12/13 work and a Gilbert-Elliott outage chain (scanned across
+    rounds, so bursts are temporally correlated) gating the Eq. 7 uplink.
+    Twin-sharding aware: straggler draws are full-N draws sliced per shard;
+    the outage chain is (M,)-replicated."""
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    b = jnp.full(st.data_sizes.shape, 0.5)
+    bad0 = faults_mod.outage_draw(fcfg, jax.random.fold_in(key, 4),
+                                  cfg.n_bs, rate=o_rate)
+
+    def body(bad, k):
+        k_slow, k_out = jax.random.split(k)
+        slow = faults_mod.straggler_slowdowns(
+            fcfg, k_slow, st.data_sizes.shape[0], rate=s_rate)
+        bad2 = faults_mod.outage_step(fcfg, k_out, bad, rate=o_rate)
+        up_eff = faults_mod.outage_gate(fcfg, up, bad2)
+        t = latency.round_time(cfg.lat, st.assoc, b * slow, st.data_sizes,
+                               st.freqs, up_eff, down)
+        return bad2, (t, faults_mod.straggler_frac(slow),
+                      jnp.mean(bad2.astype(jnp.float32)))
+
+    keys = jax.random.split(jax.random.fold_in(key, 5), n_rounds)
+    _, (times, s_frac, o_frac) = jax.lax.scan(body, bad0, keys)
+    return {"round_times": times, "straggler_frac": s_frac,
+            "outage_frac": o_frac}
+
+
+def _batch_rates(batch: ScenarioBatch, fcfg: FaultConfig):
+    """Per-scenario straggler/outage rates: the batch's fault axes when
+    present, else the FaultConfig scalars broadcast over the batch."""
+    s = batch.key.shape[0]
+    s_rate = (jnp.full((s,), fcfg.straggler_rate)
+              if batch.straggler is None else batch.straggler)
+    o_rate = (jnp.full((s,), fcfg.outage_rate)
+              if batch.outage is None else batch.outage)
+    return s_rate, o_rate
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "fcfg", "n_rounds"))
+def run_faults(cfg: EnvConfig, fcfg: FaultConfig, batch: ScenarioBatch,
+               n_rounds: int = 10) -> dict:
+    """Faults as a first-class scenario axis: every scenario runs
+    ``n_rounds`` rounds under straggler slowdowns + outage bursts (rates
+    from the batch's fault axes when present, else ``fcfg``). Returns a
+    dict of (S, n_rounds) arrays: ``round_times``, ``straggler_frac``
+    (fraction of twins slowed each round), ``outage_frac`` (fraction of
+    BSs in the bad channel state). With all rates zero this reproduces the
+    ``average`` baseline's round time every round."""
+    fn = functools.partial(_faults_one, cfg, fcfg, n_rounds)
+    s_rate, o_rate = _batch_rates(batch, fcfg)
+    return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
+                        batch.skew, s_rate, o_rate)
+
+
+def run_faults_sharded(ts: TwinSharding, cfg: EnvConfig, fcfg: FaultConfig,
+                       batch: ScenarioBatch, n_rounds: int = 10) -> dict:
+    """``run_faults`` with each scenario's twin population sharded over the
+    mesh — straggler draws are full-draw + per-shard slice (bit-parity with
+    the single-device runner); the outage chain and all outputs are
+    replicated. ``n_shards == 1`` is the no-op fast path."""
+    s_rate, o_rate = _batch_rates(batch, fcfg)
+    return _sharded_runner(ts, cfg, _faults_one, fcfg, n_rounds,
+                           n_mapped=6)(batch.key, batch.data_min,
+                                       batch.data_max, batch.skew, s_rate,
+                                       o_rate)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "policy"))

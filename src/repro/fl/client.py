@@ -2,7 +2,14 @@
 
 A twin trains the shared model on its own shard with SGD for
 ``local_iters`` iterations (the paper runs multiple local iterations per
-block interval T, Section II-C) and returns the updated parameters."""
+block interval T, Section II-C) and returns the updated parameters.
+
+Adversarial clients (``make_attack_trainer``) model the paper's untrusted
+users (Sec. I, III): a **label-flip** attacker trains on permuted labels
+(class c -> C-1-c), a **model-replacement** attacker additionally scales
+its update by ``boost`` so one poisoned client dominates a plain weighted
+mean. The defense lives in ``repro.core.faults`` (robust aggregation) and
+``repro.core.blockchain`` (verify gate)."""
 from __future__ import annotations
 
 from typing import Callable
@@ -40,3 +47,44 @@ def make_local_trainer(loss_fn: Callable, lr: float = 0.05,
         return params, losses
 
     return train_local
+
+
+ATTACKS = ("label_flip", "model_replacement")
+
+
+def flip_labels(labels, n_classes: int = 10):
+    """Deterministic label permutation c -> (C-1) - c (its own inverse), the
+    classic label-flip poisoning objective. Works on np or jnp arrays."""
+    return (n_classes - 1) - labels
+
+
+def make_attack_trainer(loss_fn: Callable, attack: str = "label_flip",
+                        lr: float = 0.05, momentum: float = 0.9,
+                        boost: float = 5.0, n_classes: int = 10):
+    """A drop-in ``train_local`` whose client is malicious.
+
+    ``"label_flip"`` trains honestly on flipped labels — a stealthy
+    objective poisoning that individual updates don't betray (the robust
+    aggregators catch it statistically). ``"model_replacement"`` also
+    flips labels, then scales its update ``boost``x
+    (``old + boost * (new - old)``) to dominate the Eq. 4 weighted mean —
+    the loud attack the trimmed-mean/Krum breakdown guarantees and the
+    blockchain verify gate are aimed at.
+    """
+    if attack not in ATTACKS:
+        raise ValueError(f"attack must be one of {ATTACKS}, got {attack!r}")
+    base = make_local_trainer(loss_fn, lr=lr, momentum=momentum)
+
+    def train_malicious(params, data_x, data_y, *, batch_size: int,
+                        local_iters: int, seed: int):
+        flipped = np.asarray(flip_labels(np.asarray(data_y), n_classes))
+        new_params, losses = base(params, data_x, flipped,
+                                  batch_size=batch_size,
+                                  local_iters=local_iters, seed=seed)
+        if attack == "model_replacement":
+            new_params = jax.tree_util.tree_map(
+                lambda old, new: old + boost * (new - old), params,
+                new_params)
+        return new_params, losses
+
+    return train_malicious

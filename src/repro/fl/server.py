@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.core import association as assoc_mod
 from repro.core import blockchain as bc
-from repro.core import comms, hierarchy, latency
+from repro.core import comms, faults as faults_mod, hierarchy, latency
 from repro.models import cnn
 
 
@@ -43,6 +43,17 @@ class FLConfig:
     partition: str = "iid"       # "iid" | "dirichlet" — ignored when a
     #                              scenario row is passed to DTWNSystem
     alpha: Optional[float] = None  # Dirichlet label-skew concentration
+    # fault/adversary axis (repro.core.faults + repro.fl.client attacks):
+    aggregator: str = "fedavg"   # "fedavg" | "trimmed_mean" | "krum" —
+    #                              per-BS Eq. 4 aggregation rule
+    trim_k: int = 1              # trimmed-mean: extremes peeled per side
+    krum_f: int = 1              # krum: clients dropped per BS cohort
+    malicious_frac: float = 0.0  # Bernoulli attacker fraction (a scenario
+    #                              row's malicious axis overrides this)
+    attack: str = "label_flip"   # "label_flip" | "model_replacement"
+    attack_boost: float = 5.0    # model-replacement update scaling
+    faults: Optional[faults_mod.FaultConfig] = None  # straggler/outage
+    #                              injection into the Eq. 12-17 accounting
 
 
 class DTWNSystem:
@@ -63,15 +74,19 @@ class DTWNSystem:
     """
 
     def __init__(self, cfg: FLConfig, data, seed: int = 0, scenario=None):
-        from repro.fl.client import make_local_trainer
+        from repro.fl.client import make_attack_trainer, make_local_trainer
         from repro.fl.partition import (dirichlet_partition, iid_partition,
                                         scenario_partition)
 
         (self.x, self.y), (self.x_test, self.y_test), self.dataset = data
         self.cfg = cfg
         n_samples = self.x.shape[0]
+        # fault axis: scenario rows may override the config's scalar knobs
+        self._row_straggler: Optional[float] = None
+        self._row_outage: Optional[float] = None
+        self.malicious = np.zeros(cfg.n_users, bool)
         if scenario is not None:
-            from repro.core.scenario import population_row
+            from repro.core.scenario import fault_row, population_row
 
             batch, row = scenario
             sizes, alpha = population_row(batch, row, cfg.n_users)
@@ -80,6 +95,10 @@ class DTWNSystem:
             # latency/aggregation account the scenario's D_j population —
             # the one the vmapped runners simulate for this row
             self.data_sizes = np.asarray(sizes, np.float32)
+            mal, s_rate, o_rate = fault_row(batch, row, cfg.n_users)
+            if mal is not None:
+                self.malicious = mal
+            self._row_straggler, self._row_outage = s_rate, o_rate
         elif cfg.partition == "dirichlet":
             self.shards = dirichlet_partition(
                 self.y, cfg.n_users,
@@ -92,6 +111,15 @@ class DTWNSystem:
                                          np.float32)
         self.freqs = np.asarray(cfg.bs_freqs_ghz, np.float32)[: cfg.n_bs] * 1e9
         self.trainer = make_local_trainer(cnn.loss_fn, lr=cfg.lr)
+        # Bernoulli attacker draw only when requested — a zero-frac config
+        # consumes no extra host RNG, preserving pre-fault sequences
+        if not self.malicious.any() and cfg.malicious_frac > 0.0:
+            draw_rng = np.random.RandomState(seed + 7)
+            self.malicious = (draw_rng.uniform(size=cfg.n_users)
+                              < cfg.malicious_frac)
+        self._make_attack_trainer = make_attack_trainer
+        self._attacker = None  # built lazily: self.malicious is mutable
+        self._fault_key = jax.random.PRNGKey(seed + 17)
         self.wireless = comms.WirelessConfig(n_bs=cfg.n_bs)
         self.lat = latency.LatencyParams()
         self.chain = bc.DPoSChain(
@@ -108,6 +136,17 @@ class DTWNSystem:
         self.h_down = comms.sample_channel(self.wireless, kd[2])
 
     # ------------------------------------------------------------------
+    @property
+    def attacker(self):
+        """The malicious local trainer (``FLConfig.attack``), built on
+        first use so ``self.malicious`` can be overridden after init
+        (benchmarks stratify the attacker placement per cohort)."""
+        if self._attacker is None:
+            self._attacker = self._make_attack_trainer(
+                cnn.loss_fn, attack=self.cfg.attack, lr=self.cfg.lr,
+                boost=self.cfg.attack_boost)
+        return self._attacker
+
     def holdout_loss(self, params, n: int = 512) -> float:
         n = min(n, self.x_test.shape[0])
         idx = self._rng.choice(self.x_test.shape[0], size=n, replace=False)
@@ -182,9 +221,21 @@ class DTWNSystem:
         up = comms.uplink_rate(self.wireless, jnp.asarray(tau), self.h_up,
                                self.dist)
         down = comms.downlink_rate(self.wireless, self.h_down, self.dist)
-        t_round = float(latency.round_time(
-            self.lat, jnp.asarray(assoc), jnp.asarray(b),
-            jnp.asarray(self.data_sizes), jnp.asarray(self.freqs), up, down))
+        if cfg.faults is not None:
+            # straggler slowdowns inflate b, Gilbert-Elliott outages gate
+            # the uplink — one fold per round keeps draws independent
+            t_round = float(faults_mod.faulty_round_time(
+                self.lat, cfg.faults,
+                jax.random.fold_in(self._fault_key, self._round),
+                jnp.asarray(assoc), jnp.asarray(b),
+                jnp.asarray(self.data_sizes), jnp.asarray(self.freqs),
+                up, down, straggler_rate=self._row_straggler,
+                outage_rate=self._row_outage))
+        else:
+            t_round = float(latency.round_time(
+                self.lat, jnp.asarray(assoc), jnp.asarray(b),
+                jnp.asarray(self.data_sizes), jnp.asarray(self.freqs),
+                up, down))
 
         # --- local training on a sample of twins ---
         chosen = self._rng.choice(cfg.n_users,
@@ -195,7 +246,8 @@ class DTWNSystem:
             shard = self.shards[u]
             n_use = max(8, int(b[u] * shard.size))
             use = shard[: n_use]
-            p_u, _ = self.trainer(
+            trainer = self.attacker if self.malicious[u] else self.trainer
+            p_u, _ = trainer(
                 self.params, self.x[use], self.y[use],
                 batch_size=cfg.batch_size, local_iters=cfg.local_iters,
                 seed=self._round * 1000 + int(u))
@@ -213,19 +265,45 @@ class DTWNSystem:
         # host only slices out each occupied BS's aggregate to submit it
         # to the chain.
         bs_models, bs_sizes = [], []
+        n_suspect_total = 0
         if twin_models:
             stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                              *twin_models)
-            per_bs_tree, bs_w = hierarchy.bs_aggregate_stacked(
-                stacked, jnp.asarray(twin_sizes, jnp.float32),
-                jnp.asarray(twin_bs, jnp.int32), M)
+            sizes_dev = jnp.asarray(twin_sizes, jnp.float32)
+            assoc_dev = jnp.asarray(twin_bs, jnp.int32)
+            if cfg.aggregator != "fedavg":
+                # robust per-BS rule (repro.core.faults): trimmed-mean or
+                # Krum-lite; survivor_frac feeds the chain's suspect gate
+                per_bs_tree, bs_w, survivor = \
+                    faults_mod.robust_bs_aggregate_stacked(
+                        stacked, sizes_dev, assoc_dev, M,
+                        aggregator=cfg.aggregator, trim_k=cfg.trim_k,
+                        krum_f=cfg.krum_f)
+                n_cli, n_sus = faults_mod.suspect_counts(
+                    survivor, assoc_dev, M)
+                disp = faults_mod.update_dispersion(stacked, assoc_dev, M)
+                n_cli_host = np.asarray(n_cli)
+                n_sus_host = np.asarray(n_sus)
+                disp_host = np.asarray(disp)
+                n_suspect_total = int(n_sus_host.sum())
+            else:
+                per_bs_tree, bs_w = hierarchy.bs_aggregate_stacked(
+                    stacked, sizes_dev, assoc_dev, M)
+                n_cli_host = n_sus_host = disp_host = None
             bs_w_host = np.asarray(bs_w)
             for j in range(M):
                 if bs_w_host[j] <= 0.0:
                     continue
                 agg = jax.tree_util.tree_map(lambda x: x[j], per_bs_tree)
                 hl = self.holdout_loss(agg, n=256)
-                self.chain.submit_model(j, agg, self._round, hl)
+                if n_cli_host is not None:
+                    self.chain.submit_model(
+                        j, agg, self._round, hl,
+                        n_clients=int(n_cli_host[j]),
+                        n_suspect=int(n_sus_host[j]),
+                        dispersion=float(disp_host[j]))
+                else:
+                    self.chain.submit_model(j, agg, self._round, hl)
                 bs_models.append((j, agg))
                 bs_sizes.append(float(bs_w_host[j]))
 
@@ -250,5 +328,6 @@ class DTWNSystem:
             "loss": self.holdout_loss(self.params),
             "n_verified": sum(verdicts.values()) if verdicts else 0,
             "n_submitted": len(verdicts),
+            "n_suspect": n_suspect_total,
             "chain_valid": self.chain.validate_chain(),
         }

@@ -7,6 +7,9 @@ wrappers for the Pallas kernels (flash attention, SSD scan, fedavg reduce,
 segment reduce).
 """
 from repro.kernels.segment_reduce import (BACKENDS, resolve_backend,
-                                          segment_count, segment_reduce)
+                                          segment_count, segment_max,
+                                          segment_min, segment_reduce,
+                                          segment_std)
 
-__all__ = ["BACKENDS", "resolve_backend", "segment_count", "segment_reduce"]
+__all__ = ["BACKENDS", "resolve_backend", "segment_count", "segment_max",
+           "segment_min", "segment_reduce", "segment_std"]

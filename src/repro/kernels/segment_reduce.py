@@ -381,3 +381,72 @@ def segment_count(assoc, num_segments: int, *, backend: str = "auto"
     """
     return segment_reduce(jnp.ones(assoc.shape, jnp.float32), assoc,
                           num_segments, backend=backend)
+
+
+def _segment_extreme(values, assoc, num_segments: int, *, largest: bool,
+                     axis_name: str | None) -> jnp.ndarray:
+    values = jnp.asarray(values)
+    assoc = jnp.asarray(assoc)
+    if assoc.ndim != 1:
+        raise ValueError(f"assoc must be (N,), got shape {assoc.shape}")
+    if values.ndim == 0 or values.shape[0] != assoc.shape[0]:
+        raise ValueError(
+            f"values leading axis {values.shape} must match assoc "
+            f"{assoc.shape}")
+    n = assoc.shape[0]
+    tail = values.shape[1:]
+    fill = jnp.float32(-jnp.inf if largest else jnp.inf)
+    if n == 0:
+        return jnp.full((num_segments,) + tail, fill, jnp.float32)
+    flat = values.astype(jnp.float32).reshape(n, -1)  # (N, K)
+    valid = (assoc >= 0) & (assoc < num_segments)
+    ids = jnp.where(valid, assoc, 0).astype(jnp.int32)
+    flat = jnp.where(valid[:, None], flat, fill)
+    op = jax.ops.segment_max if largest else jax.ops.segment_min
+    out = op(flat, ids, num_segments=num_segments)
+    if axis_name is None:
+        axis_name = _active_twin_axis()
+    if axis_name is not None:
+        out = (jax.lax.pmax if largest else jax.lax.pmin)(out, axis_name)
+    return out.reshape((num_segments,) + tail)
+
+
+def segment_max(values, assoc, num_segments: int, *,
+                axis_name: str | None = None) -> jnp.ndarray:
+    """Per-segment maximum: out[m] = max_{j: assoc[j]==m} values[j], fp32.
+
+    Out-of-range ids (the twin-axis padding convention) are dropped; empty
+    segments return the identity ``-inf`` — callers that need a finite
+    default should guard with :func:`segment_count`. Inside an active twin
+    scope the per-shard maxima combine with one ``lax.pmax`` (padding rows
+    carry ``assoc == M`` so they never contribute), keeping the sharded
+    result bit-identical to the single-device one.
+    """
+    return _segment_extreme(values, assoc, num_segments, largest=True,
+                            axis_name=axis_name)
+
+
+def segment_min(values, assoc, num_segments: int, *,
+                axis_name: str | None = None) -> jnp.ndarray:
+    """Per-segment minimum; mirror of :func:`segment_max` (identity +inf)."""
+    return _segment_extreme(values, assoc, num_segments, largest=False,
+                            axis_name=axis_name)
+
+
+def segment_std(values, assoc, num_segments: int, *, backend: str = "auto"
+                ) -> jnp.ndarray:
+    """Per-segment population std (ddof=0) via two moment sums.
+
+    Built on :func:`segment_reduce`, so it inherits the full backend
+    dispatch including the sharded psum path — E[x^2] - E[x]^2 composes
+    across shards where a direct per-shard ``jnp.std`` would not. Empty
+    segments return 0.
+    """
+    v = jnp.asarray(values).astype(jnp.float32)
+    s1 = segment_reduce(v, assoc, num_segments, backend=backend)
+    s2 = segment_reduce(v * v, assoc, num_segments, backend=backend)
+    cnt = segment_count(assoc, num_segments, backend=backend)
+    cnt = cnt.reshape((num_segments,) + (1,) * (s1.ndim - 1))
+    c = jnp.maximum(cnt, 1.0)
+    mean = s1 / c
+    return jnp.sqrt(jnp.maximum(s2 / c - mean * mean, 0.0))

@@ -1,0 +1,505 @@
+"""Fault & adversary axis tests: injector semantics (stragglers,
+Gilbert-Elliott outages, malicious masks), robust aggregation properties
+(zero-knob FedAvg parity, permutation invariance, breakdown point), the
+``migration.bs_segments`` cohort contract Krum-lite consumes, scenario
+fault axes, sharded bit-parity, and the end-to-end adversarial regression
+(robust aggregation beats plain FedAvg under 30% label-flip clients).
+
+Property tests are hypothesis-fuzzed when hypothesis is installed; a
+deterministic grid always runs (mirrors tests/test_heterogeneity.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import faults, hierarchy, latency, migration, scenario
+from repro.core.faults import FaultConfig
+from repro.core.marl.env import EnvConfig
+from repro.kernels.segment_reduce import (segment_count, segment_max,
+                                          segment_min, segment_std)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+    SET = settings(max_examples=25, deadline=None)
+except ImportError:  # hypothesis is optional in this environment
+    HAS_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+LP = latency.LatencyParams()
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def _stacked(k: int, seed: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"w": jax.random.normal(ks[0], (k, 3, 4)),
+            "b": jax.random.normal(ks[1], (k, 5))}
+
+
+def _inputs(k: int, m: int, seed: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed + 100), 2)
+    sizes = jax.random.uniform(ks[0], (k,), minval=0.5, maxval=2.0)
+    assoc = jax.random.randint(ks[1], (k,), 0, m)
+    return sizes, assoc
+
+
+def _tree_close(a, b, **kw):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+def _tree_absmax(tree) -> float:
+    return max(float(jnp.max(jnp.abs(le)))
+               for le in jax.tree_util.tree_leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# segment extreme / std kernels
+# ---------------------------------------------------------------------------
+
+
+def test_segment_max_min_semantics():
+    vals = jnp.asarray([3.0, -1.0, 7.0, 2.0, -5.0, 0.0])
+    assoc = jnp.asarray([0, 0, 1, 1, 3, 9])  # segment 2 empty, id 9 invalid
+    mx = np.asarray(segment_max(vals, assoc, 4))
+    mn = np.asarray(segment_min(vals, assoc, 4))
+    np.testing.assert_array_equal(mx[:2], [3.0, 7.0])
+    np.testing.assert_array_equal(mn[:2], [-1.0, 2.0])
+    assert mx[3] == -5.0 and mn[3] == -5.0
+    assert mx[2] == -np.inf and mn[2] == np.inf  # empty = identity
+
+
+def test_segment_std_matches_numpy():
+    k, m = 50, 4
+    ks = jax.random.split(KEY, 2)
+    vals = jax.random.normal(ks[0], (k,)) * 3.0
+    assoc = jax.random.randint(ks[1], (k,), 0, m)
+    got = np.asarray(segment_std(vals, assoc, m))
+    v, a = np.asarray(vals), np.asarray(assoc)
+    for j in range(m):
+        sel = v[a == j]
+        ref = sel.std() if sel.size else 0.0
+        np.testing.assert_allclose(got[j], ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation properties (satellite: property-based tests)
+# ---------------------------------------------------------------------------
+
+GRID = [(8, 2, 1), (12, 3, 2), (24, 3, 7), (15, 5, 11)]
+
+
+@pytest.mark.parametrize("k,m,seed", GRID)
+def test_zero_knob_parity_exact(k, m, seed):
+    """trim_k=0 / krum_f=0 must reproduce weighted FedAvg bit-for-bit."""
+    stacked = _stacked(k, seed)
+    sizes, assoc = _inputs(k, m, seed)
+    ref_tree, ref_w = hierarchy.bs_aggregate_stacked(stacked, sizes, assoc, m)
+    for agg, kw in (("trimmed_mean", {"trim_k": 0}), ("krum", {"krum_f": 0})):
+        tree, w, surv = faults.robust_bs_aggregate_stacked(
+            stacked, sizes, assoc, m, aggregator=agg, **kw)
+        _tree_close(tree, ref_tree, atol=0.0, err_msg=agg)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(ref_w),
+                                   atol=0.0, err_msg=agg)
+        np.testing.assert_array_equal(np.asarray(surv), np.ones(k), agg)
+
+
+@pytest.mark.parametrize("k,m,seed", GRID)
+@pytest.mark.parametrize("agg", ["trimmed_mean", "krum"])
+def test_permutation_invariance(k, m, seed, agg):
+    """Client order must not change the per-BS aggregate."""
+    stacked = _stacked(k, seed)
+    sizes, assoc = _inputs(k, m, seed)
+    perm = jnp.asarray(np.random.RandomState(seed).permutation(k))
+    permuted = jax.tree_util.tree_map(lambda x: x[perm], stacked)
+    a, _, _ = faults.robust_bs_aggregate_stacked(
+        stacked, sizes, assoc, m, aggregator=agg)
+    b, _, _ = faults.robust_bs_aggregate_stacked(
+        permuted, sizes[perm], assoc[perm], m, aggregator=agg)
+    _tree_close(a, b, rtol=1e-5, atol=1e-6, err_msg=agg)
+
+
+@pytest.mark.parametrize("agg,kw", [("trimmed_mean", {"trim_k": 3}),
+                                    ("krum", {"krum_f": 3})])
+def test_breakdown_point(agg, kw):
+    """With < half the per-BS cohort replaced by +-1e6 constants the robust
+    aggregate stays bounded when the knob covers the attacker count
+    (trim_k/krum_f >= 3 attackers) — plain FedAvg blows up."""
+    k, m = 24, 3  # cohorts of 8, 3 attackers each
+    stacked = _stacked(k, 5)
+    sizes = jnp.ones((k,))
+    assoc = jnp.asarray(np.arange(k) % m, jnp.int32)
+    mal = np.zeros(k, bool)
+    mal[:9] = True  # 3 per BS under the round-robin assoc
+    sign = np.where(np.arange(k) % 2 == 0, 1e6, -1e6).astype(np.float32)
+    attacked = {
+        kk: jnp.where(jnp.asarray(mal).reshape((k,) + (1,) * (v.ndim - 1)),
+                      jnp.asarray(sign).reshape((k,) + (1,) * (v.ndim - 1)),
+                      v)
+        for kk, v in stacked.items()}
+    fed, _ = hierarchy.bs_aggregate_stacked(attacked, sizes, assoc, m)
+    assert _tree_absmax(fed) > 1e4
+    tree, _, surv = faults.robust_bs_aggregate_stacked(
+        attacked, sizes, assoc, m, aggregator=agg, **kw)
+    assert _tree_absmax(tree) < 100.0, agg
+    # every attacker lands below the relative suspect threshold
+    _, n_sus = faults.suspect_counts(surv, assoc, m)
+    np.testing.assert_array_equal(np.asarray(n_sus), np.full(m, 3.0))
+
+
+def test_small_cohort_guard():
+    """Cohorts too small to trim are passed through untouched instead of
+    being emptied (per-pass eligibility)."""
+    k, m = 4, 3  # BS0 gets 2 clients, BS1 gets 1, BS2 empty
+    stacked = _stacked(k, 9)
+    sizes = jnp.ones((k,))
+    assoc = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    ref, _ = hierarchy.bs_aggregate_stacked(stacked, sizes, assoc, m)
+    for agg, kw in (("trimmed_mean", {"trim_k": 3}), ("krum", {"krum_f": 3})):
+        tree, _, surv = faults.robust_bs_aggregate_stacked(
+            stacked, sizes, assoc, m, aggregator=agg, **kw)
+        _tree_close(tree, ref, atol=0.0, err_msg=agg)  # nothing was peeled
+        np.testing.assert_array_equal(np.asarray(surv), np.ones(k), agg)
+
+
+if HAS_HYPOTHESIS:
+
+    @SET
+    @given(st.integers(6, 40), st.integers(1, 5), st.integers(0, 10_000))
+    def test_fuzz_zero_knob_parity(k, m, seed):
+        stacked = _stacked(k, seed)
+        sizes, assoc = _inputs(k, m, seed)
+        ref, _ = hierarchy.bs_aggregate_stacked(stacked, sizes, assoc, m)
+        for agg, kw in (("trimmed_mean", {"trim_k": 0}),
+                        ("krum", {"krum_f": 0})):
+            tree, _, _ = faults.robust_bs_aggregate_stacked(
+                stacked, sizes, assoc, m, aggregator=agg, **kw)
+            _tree_close(tree, ref, atol=0.0, err_msg=agg)
+
+    @SET
+    @given(st.integers(6, 30), st.integers(1, 4), st.integers(0, 10_000),
+           st.sampled_from(["trimmed_mean", "krum"]))
+    def test_fuzz_permutation_invariance(k, m, seed, agg):
+        stacked = _stacked(k, seed)
+        sizes, assoc = _inputs(k, m, seed)
+        perm = jnp.asarray(np.random.RandomState(seed).permutation(k))
+        a, _, _ = faults.robust_bs_aggregate_stacked(
+            stacked, sizes, assoc, m, aggregator=agg)
+        b, _, _ = faults.robust_bs_aggregate_stacked(
+            jax.tree_util.tree_map(lambda x: x[perm], stacked),
+            sizes[perm], assoc[perm], m, aggregator=agg)
+        _tree_close(a, b, rtol=1e-5, atol=1e-6, err_msg=agg)
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: the bs_segments cohort contract Krum consumes
+# ---------------------------------------------------------------------------
+
+
+def test_krum_consumes_bs_segments_cohorts():
+    """Pins the segment-boundary contract: ``bs_segments`` bounds diffs are
+    the per-BS occupancy counts, and Krum's per-cohort eligibility derives
+    from exactly those counts — a 3-client cohort is never peeled
+    (needs > p+3 members), a 5-client cohort loses exactly one."""
+    k, m = 8, 2
+    assoc = jnp.asarray([0, 1, 0, 1, 1, 0, 1, 1], jnp.int32)  # 3 vs 5
+    _, bounds = migration.bs_segments(assoc, m)
+    np.testing.assert_array_equal(
+        np.diff(np.asarray(bounds)),
+        np.asarray(segment_count(assoc, m, backend="onehot"), np.int64))
+    stacked = _stacked(k, 3)
+    # one obvious outlier per BS
+    stacked = jax.tree_util.tree_map(
+        lambda x: x.at[4].set(500.0).at[5].set(500.0), stacked)
+    _, _, surv = faults.krum_aggregate(stacked, jnp.ones((k,)), assoc, m,
+                                       krum_f=1)
+    surv = np.asarray(surv)
+    a = np.asarray(assoc)
+    assert surv[a == 0].sum() == 3.0  # cohort of 3: too small, all kept
+    assert surv[a == 1].sum() == 4.0  # cohort of 5: exactly one dropped
+    assert surv[4] == 0.0             # ... and it is the outlier
+
+
+# ---------------------------------------------------------------------------
+# injectors
+# ---------------------------------------------------------------------------
+
+
+def test_injector_identities_at_zero():
+    fcfg = FaultConfig(straggler_rate=0.0, outage_rate=0.0,
+                       malicious_frac=0.0)
+    slow, mal = faults.fault_draws(fcfg, KEY, 500)
+    np.testing.assert_array_equal(np.asarray(slow), np.ones(500))
+    assert not np.asarray(mal).any()
+    assert not np.asarray(faults.outage_draw(fcfg, KEY, 64)).any()
+    t = faults.faulty_round_time(
+        LP, fcfg, KEY, jnp.zeros(10, jnp.int32), jnp.full(10, 0.5),
+        jnp.full(10, 100.0), jnp.full(3, 2e9), jnp.full(3, 1e7),
+        jnp.full(3, 1e7))
+    ref = latency.round_time(
+        LP, jnp.zeros(10, jnp.int32), jnp.full(10, 0.5),
+        jnp.full(10, 100.0), jnp.full(3, 2e9), jnp.full(3, 1e7),
+        jnp.full(3, 1e7))
+    np.testing.assert_allclose(float(t), float(ref), rtol=0.0)
+
+
+def test_straggler_slowdown_stats():
+    fcfg = FaultConfig(straggler_rate=0.5, straggler_slowdown=4.0)
+    slow = np.asarray(faults.straggler_slowdowns(fcfg, KEY, 20_000))
+    assert (slow >= 1.0).all()
+    frac = (slow > 1.0).mean()
+    assert abs(frac - 0.5) < 0.02, frac
+    # stragglers carry a heavy-tailed extra-work term of mean `slowdown`
+    extra = slow[slow > 1.0] - 1.0
+    assert abs(extra.mean() - 4.0) < 0.25, extra.mean()
+    assert abs(float(faults.straggler_frac(jnp.asarray(slow))) - frac) < 1e-6
+
+
+def test_gilbert_elliott_stationarity_and_bursts():
+    fcfg = FaultConfig(outage_rate=0.2, burst_len=3.0)
+    m, steps = 20_000, 30
+    bad = faults.outage_draw(fcfg, jax.random.fold_in(KEY, 0), m)
+    fracs, traj = [], [np.asarray(bad)]
+    for t in range(1, steps):
+        bad = faults.outage_step(fcfg, jax.random.fold_in(KEY, t), bad)
+        fracs.append(float(jnp.mean(bad.astype(jnp.float32))))
+        traj.append(np.asarray(bad))
+    # the chain preserves its stationary marginal ...
+    assert all(abs(f - 0.2) < 0.02 for f in fracs), fracs
+    # ... and bad spells last ~burst_len rounds (temporal correlation)
+    tr = np.stack(traj)  # (steps, M)
+    enters = (~tr[:-1] & tr[1:]).sum()
+    exits = (tr[:-1] & ~tr[1:]).sum()
+    dwell = tr.sum() / max(exits, 1)
+    assert enters > 0
+    assert 2.4 < dwell < 3.6, dwell
+
+
+def test_outage_gate_scaling():
+    fcfg = FaultConfig(outage_floor=0.05)
+    up = jnp.asarray([1e7, 2e7, 3e7])
+    bad = jnp.asarray([True, False, True])
+    got = np.asarray(faults.outage_gate(fcfg, up, bad))
+    np.testing.assert_allclose(got, [5e5, 2e7, 1.5e6], rtol=1e-6)
+
+
+def test_suspect_counts_relative_threshold():
+    # cohort mean survivor 0.5: only the near-zero client is suspect
+    surv = jnp.asarray([0.6, 0.55, 0.7, 0.05, 0.5, 0.6])
+    assoc = jnp.asarray([0, 0, 0, 0, 1, 1], jnp.int32)
+    n_cli, n_sus = faults.suspect_counts(surv, assoc, 2)
+    np.testing.assert_array_equal(np.asarray(n_cli), [4.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(n_sus), [1.0, 0.0])
+
+
+def test_update_dispersion():
+    k, m = 6, 2
+    stacked = {"w": jnp.stack([jnp.full((3,), float(v))
+                               for v in (1, 1, 1, 1, 5, 9)])}
+    assoc = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    got = np.asarray(faults.update_dispersion(stacked, assoc, m))
+    norms = np.linalg.norm(np.asarray(stacked["w"]), axis=1)
+    np.testing.assert_allclose(got[0], 0.0, atol=1e-5)
+    np.testing.assert_allclose(got[1], norms[3:].std(), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# scenario axes + runner
+# ---------------------------------------------------------------------------
+
+
+def test_make_batch_fault_axes_preserve_clean_streams():
+    clean = scenario.make_batch(KEY, 4)
+    batch = scenario.make_batch(KEY, 4, straggler=(0.1, 0.5),
+                                outage=(0.0, 0.3), malicious=(0.2, 0.4))
+    # fault axes must not perturb the original five draw streams
+    np.testing.assert_array_equal(np.asarray(clean.key),
+                                  np.asarray(batch.key))
+    np.testing.assert_array_equal(np.asarray(clean.skew),
+                                  np.asarray(batch.skew))
+    assert clean.straggler is None and clean.malicious is None
+    s, o, mfr = (np.asarray(batch.straggler), np.asarray(batch.outage),
+                 np.asarray(batch.malicious))
+    assert s.shape == o.shape == mfr.shape == (4,)
+    assert (s >= 0.1).all() and (s <= 0.5).all()
+    assert (o <= 0.3).all() and (mfr >= 0.2).all() and (mfr <= 0.4).all()
+
+
+def test_fault_row_mask():
+    batch = scenario.make_batch(KEY, 3, malicious=(0.3, 0.3),
+                                straggler=(0.2, 0.4))
+    mal, s_rate, o_rate = scenario.fault_row(batch, 1, 400)
+    mal2, _, _ = scenario.fault_row(batch, 1, 400)
+    np.testing.assert_array_equal(mal, mal2)  # deterministic per row
+    assert mal.dtype == np.bool_ and mal.shape == (400,)
+    assert abs(mal.mean() - 0.3) < 0.08
+    assert 0.2 <= s_rate <= 0.4
+    assert o_rate is None  # axis absent
+    clean = scenario.make_batch(KEY, 3)
+    assert scenario.fault_row(clean, 0, 10) == (None, None, None)
+
+
+def test_run_faults_zero_rate_matches_average_baseline():
+    cfg = EnvConfig(n_twins=29, n_bs=4)
+    batch = scenario.make_batch(jax.random.PRNGKey(5), 3)
+    fcfg = FaultConfig(straggler_rate=0.0, outage_rate=0.0)
+    out = scenario.run_faults(cfg, fcfg, batch, n_rounds=3)
+    ref = scenario.run_baselines(cfg, batch)
+    rt = np.asarray(out["round_times"])
+    np.testing.assert_allclose(
+        rt, np.broadcast_to(np.asarray(ref["average"]).reshape(-1, 1),
+                            rt.shape), rtol=1e-6)
+    assert float(np.max(np.asarray(out["straggler_frac"]))) == 0.0
+    assert float(np.max(np.asarray(out["outage_frac"]))) == 0.0
+
+
+def test_run_faults_sharded_single_shard_identity():
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    if ts.n_shards != 1:
+        pytest.skip("single-device identity check")
+    cfg = EnvConfig(n_twins=17, n_bs=3)
+    batch = scenario.make_batch(jax.random.PRNGKey(6), 2,
+                                straggler=(0.2, 0.6))
+    fcfg = FaultConfig(outage_rate=0.3)
+    out = scenario.run_faults_sharded(ts, cfg, fcfg, batch, n_rounds=3)
+    ref = scenario.run_faults(cfg, fcfg, batch, n_rounds=3)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]),
+                                      err_msg=k)
+
+
+def test_env_step_fault_injection():
+    """EnvConfig.faults inflates b (straggler leg) and reports fault
+    fractions in info; a zero-rate FaultConfig reproduces the clean env."""
+    from repro.core.marl import env as env_mod
+    from repro.core.marl.spaces import Action
+
+    cfg0 = EnvConfig(n_twins=25, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6))
+    key = jax.random.PRNGKey(8)
+    st0 = env_mod.env_reset(cfg0, key)
+    a = Action(scores=jax.random.uniform(key, (3, 25), minval=-1, maxval=1),
+               b_ctl=jnp.zeros((3,)),
+               tau=jnp.zeros((3, cfg0.wl.n_subchannels)))
+    _, r0, info0 = env_mod.env_step(cfg0, st0, a, key)
+    cfgz = EnvConfig(n_twins=25, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                     faults=FaultConfig(straggler_rate=0.0, outage_rate=0.0))
+    _, rz, infoz = env_mod.env_step(cfgz, env_mod.env_reset(cfgz, key), a,
+                                    key)
+    np.testing.assert_allclose(np.asarray(rz), np.asarray(r0), rtol=0.0)
+    assert float(infoz["straggler_frac"]) == 0.0
+    assert float(infoz["outage_frac"]) == 0.0
+    cfgf = EnvConfig(n_twins=25, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                     faults=FaultConfig(straggler_rate=0.9, outage_rate=0.9,
+                                        straggler_slowdown=8.0))
+    _, rf, infof = env_mod.env_step(cfgf, env_mod.env_reset(cfgf, key), a,
+                                    key)
+    assert float(infof["straggler_frac"]) > 0.5
+    assert float(infof["outage_frac"]) > 0.5
+    # reward is -system_time: faults hurt every agent
+    assert float(np.mean(np.asarray(rf))) < float(np.mean(np.asarray(r0)))
+
+
+# ---------------------------------------------------------------------------
+# sharded bit-parity on 8 forced host devices (satellite 3)
+# ---------------------------------------------------------------------------
+
+_SHARDED_FAULTS_CODE = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import faults, latency, scenario
+    from repro.core.faults import FaultConfig
+    from repro.core.marl.env import EnvConfig
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    assert ts.n_shards == 8, ts.n_shards
+    lp = latency.LatencyParams()
+    fcfg = FaultConfig(straggler_rate=0.3, outage_rate=0.2,
+                       malicious_frac=0.25)
+    for n, m in [(64, 5), (37, 5), (5, 3)]:
+        kf = jax.random.fold_in(jax.random.PRNGKey(13), n)
+        slow_s, mal_s = faults.sharded_fault_draws(ts, fcfg, kf, n)
+        slow_r, mal_r = faults.fault_draws(fcfg, kf, n)
+        np.testing.assert_array_equal(
+            np.asarray(ts.unpad_twin(slow_s, n)), np.asarray(slow_r))
+        np.testing.assert_array_equal(
+            np.asarray(ts.unpad_twin(mal_s, n)), np.asarray(mal_r))
+        ks = jax.random.split(kf, 5)
+        assoc = jax.random.randint(ks[0], (n,), 0, m)
+        b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+        data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+        freqs = jax.random.uniform(ks[3], (m,), minval=1e9, maxval=4e9)
+        up = jax.random.uniform(ks[4], (m,), minval=1e6, maxval=1e8)
+        t_s = faults.sharded_faulty_round_time(
+            ts, lp, fcfg, kf, assoc, b, data, freqs, up, up)
+        t_r = faults.faulty_round_time(
+            lp, fcfg, kf, assoc, b, data, freqs, up, up)
+        np.testing.assert_allclose(float(t_s), float(t_r), rtol=1e-5)
+    cfg = EnvConfig(n_twins=41, n_bs=7)
+    batch = scenario.make_batch(jax.random.PRNGKey(2), 3,
+                                straggler=(0.1, 0.5), outage=(0.0, 0.4))
+    out = scenario.run_faults_sharded(ts, cfg, fcfg, batch, n_rounds=4)
+    ref = scenario.run_faults(cfg, fcfg, batch, n_rounds=4)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   rtol=1e-5, atol=1e-7, err_msg=k)
+    print("SHARDED_FAULTS_BIT_PARITY_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_faults_bit_parity_8_devices():
+    """Straggler/outage/malicious draws bit-match single-device vs 8 forced
+    host devices, incl. ragged-N and empty-shard populations."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _SHARDED_FAULTS_CODE],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, f"{out.stdout}\n{out.stderr}"
+    assert "SHARDED_FAULTS_BIT_PARITY_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# end-to-end adversarial regression (satellite 2, part 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_robust_beats_fedavg_under_label_flip():
+    """2-round DTWNSystem with 30% label-flip clients: robust aggregation
+    must end with holdout accuracy at least matching plain FedAvg (it
+    excludes the flipped-gradient extremes FedAvg averages in)."""
+    from repro.core import association as assoc_mod
+    from repro.data import cifar10
+    from repro.fl.server import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=2000, max_test=512)
+    assoc = np.asarray(assoc_mod.average_association(20, 3))
+
+    def run(aggregator):
+        cfg = FLConfig(n_users=20, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                       local_iters=2, batch_size=16, aggregator=aggregator,
+                       trim_k=2, malicious_frac=0.3, attack="label_flip")
+        sys_ = DTWNSystem(cfg, data, seed=0)
+        assert sys_.malicious.sum() >= 4  # the draw actually poisons
+        for _ in range(2):
+            sys_.run_round(assoc, participating_users=20)
+        return sys_.test_accuracy(n=512)
+
+    acc_fed = run("fedavg")
+    acc_rob = run("trimmed_mean")
+    assert acc_rob >= acc_fed - 1e-6, (acc_rob, acc_fed)
