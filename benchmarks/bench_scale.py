@@ -41,6 +41,17 @@ A fault/adversary sweep (merged into ``scale.json: faults``):
     is accuracy retention at 30% poisoners (robust rules must hold >= 0.9
     of the clean FedAvg accuracy where plain FedAvg collapses).
 
+A consensus sweep (merged into ``scale.json: consensus``):
+  * ``--consensus`` — the PBFT grid: byzantine fraction x quorum f x block
+    size through ``scenario.run_consensus`` (every cell rides the
+    ScenarioBatch axes, so the whole grid shares one jit compilation) —
+    mean Eq. 17 round time with the PBFT term priced in, accept fraction
+    of the median+tolerance verifier, and the honest stake share after
+    the verification rewards — plus a small full-``DTWNSystem`` FL pair
+    (byz=0 vs byz=0.3 through ``FLConfig.consensus``) showing the
+    view-change factor inflating the round budget without touching
+    accuracy.
+
 Two heterogeneity sweeps (merged into ``scale.json: heterogeneity``):
   * ``--alpha`` — population-tail statistics of the ScenarioBatch skew
     axis (p99/median, nonparametric skewness at skew 1/2/4) and the label
@@ -63,10 +74,14 @@ counts), plus the fault/adversary gate (``fault_gate``: zero-attacker robust
 aggregation must equal plain FedAvg within 1e-6, the robust rules must
 stay bounded under constant-1e6 replacement attackers plain FedAvg
 amplifies, and zero-rate fault injectors must be identities), plus the
-8-host-device sharded parity gate (``--sharded-gate`` in
-a subprocess: latency Eqs. 12-17, env reset/observe/step, a short
-scan-train run, the scenario runner, the migration step/env/runner, and
-the fault-injection draws/round-time/runner
+consensus gate (``consensus_gate``: producer election and the vectorized
+verifier must match the host ledger verdict-for-verdict, and the PBFT
+term must collapse to the fixed Eq. 16 constant at zero byzantine
+fraction), plus the 8-host-device sharded parity gate (``--sharded-gate``
+in a subprocess: latency Eqs. 12-17, env reset/observe/step, a short
+scan-train run, the scenario runner, the migration step/env/runner,
+the fault-injection draws/round-time/runner, and the consensus chain
+runner
 must match the single-device path on ragged and empty-shard populations),
 exiting nonzero on mismatch — kernel, policy, sharding, or migration
 regressions fail fast without waiting for the full bench.
@@ -98,9 +113,10 @@ _FLAT_MAX_TWINS = 2000
 
 # sections whose sub-keys are owned by DIFFERENT entry points (e.g.
 # "heterogeneity" collects --alpha population/partition stats and the
-# --migration sweep; "faults" collects the --faults attack grid) — merged
+# --migration sweep; "faults" collects the --faults attack grid;
+# "consensus" collects the --consensus PBFT grid and FL pair) — merged
 # one level deep instead of replaced wholesale
-_DEEP_MERGE_KEYS = ("heterogeneity", "faults")
+_DEEP_MERGE_KEYS = ("heterogeneity", "faults", "consensus")
 
 
 def merge_into_scale(sections: dict) -> None:
@@ -481,6 +497,31 @@ def sharded_gate() -> None:
           "(draws bit-exact, round time/runner fp-exact, incl. "
           "ragged/empty)")
 
+    # consensus: the on-device chain runner sharded over the twin axis must
+    # match the single-device path on a batch that exercises all three
+    # consensus axes. Integer-derived outputs (verdict fractions, the PBFT
+    # and legacy block terms — all (M,)-replicated math) are bit-exact; the
+    # psum-crossing floats (stake init from per-shard data sums) may differ
+    # by summation order, so round_times/honest_stake_share get rtol=1e-6
+    from repro.core.consensus import ConsensusConfig
+
+    cfgc = EnvConfig(n_twins=41, n_bs=7)
+    ccfg = ConsensusConfig(quorum_f=1)
+    batchc = scenario.make_batch(jax.random.PRNGKey(23), 4,
+                                 byzantine=(0.0, 0.4), quorum=(0.0, 2.0),
+                                 block_size=(1e6, 8e6))
+    out = scenario.run_consensus_sharded(ts, cfgc, ccfg, batchc, n_rounds=4)
+    ref = scenario.run_consensus(cfgc, ccfg, batchc, n_rounds=4)
+    exact = ("accept_frac", "consensus_time", "legacy_block_time")
+    for k in ref:
+        a, b = np.asarray(out[k]), np.asarray(ref[k])
+        if k in exact:
+            np.testing.assert_array_equal(a, b, err_msg=k)
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=k)
+    print("sharded-gate: consensus-runner parity ok "
+          "(verdicts/PBFT term bit-exact, psum-crossing floats fp-exact)")
+
 
 def _time_call(fn, *args, iters: int = 10) -> float:
     """us/call of a jitted callable, excluding compile."""
@@ -832,6 +873,192 @@ def fault_attack_grid(rounds: int = 3, n_users: int = 20, n_bs: int = 3,
     }}
 
 
+def consensus_gate() -> None:
+    """CI gate for the consensus axis (part of --smoke). Three invariants,
+    all raising on violation:
+
+    * election parity — ``consensus.elect_producers`` (stable argsort of
+      ``-stakes``) must reproduce the host ledger's tie rule
+      (``sorted(range(M), key=lambda i: (-stakes[i], i))``) on quantized
+      stakes that force frequent exact ties;
+    * verifier triple parity — the vectorized ``verify_metas`` quality
+      gate, an independent numpy re-statement of the predicate
+      (loss <= fp32 median + tolerance, cohort not majority-suspect), and
+      a fresh host ``DPoSChain.verify_round`` must agree verdict-for-
+      verdict on a deterministic fuzz over losses / suspect metas;
+    * zero-byzantine identity — at ``quorum_f=0, byzantine_frac=0`` the
+      PBFT term collapses to the fixed Eq. 16 constant: ``run_consensus``
+      must report ``consensus_time == legacy_block_time`` within 1e-6 per
+      scenario, and ``latency.round_time(..., consensus=ccfg)`` must equal
+      the legacy path.
+    """
+    import numpy as np
+
+    from repro.core import blockchain as bc
+    from repro.core import consensus, scenario
+    from repro.core.consensus import ConsensusConfig
+
+    rng = np.random.RandomState(31)
+    for trial in range(40):
+        m = rng.randint(2, 10)
+        stakes = (rng.randint(0, 4, size=m) * 10.0).astype(np.float32)
+        k = rng.randint(1, m + 1)
+        got = list(np.asarray(consensus.elect_producers(
+            jnp.asarray(stakes), k)))
+        ref = sorted(range(m), key=lambda i: (-stakes[i], i))[:k]
+        assert got == ref, (trial, stakes, k, got, ref)
+    print("scale --smoke: consensus election parity ok "
+          "(vectorized top-k stake == host tie rule, 40 tie-heavy draws)")
+
+    for trial in range(25):
+        m = rng.randint(1, 9)
+        losses = rng.choice([0.1, 0.25, 0.5, 0.5, 0.75, 1.0, 5.0],
+                            size=m).astype(np.float32)
+        tol = float(rng.choice([0.0, 0.25, 0.5]))
+        n_cli = rng.randint(1, 9, size=m)
+        n_sus = np.minimum(rng.randint(0, 9, size=m), n_cli)
+        med = np.median(losses).astype(np.float32)
+        want = {i: bool(losses[i] <= med + np.float32(tol)
+                        and not (n_sus[i] * 2 > n_cli[i]))
+                for i in range(m)}
+        got = consensus.verify_metas(
+            jnp.asarray(losses), jnp.ones((m,), bool), tolerance=tol,
+            n_clients=jnp.asarray(n_cli, jnp.float32),
+            n_suspect=jnp.asarray(n_sus, jnp.float32))
+        assert {i: bool(v) for i, v in enumerate(np.asarray(got))} == want, \
+            (trial, losses, tol)
+        chain = bc.DPoSChain(m, [1.0] * m, tolerance=tol)
+        for i in range(m):
+            chain.submit_model(i, {"w": jnp.full((2,), float(i))}, round_=0,
+                               holdout_loss=float(losses[i]),
+                               n_clients=int(n_cli[i]),
+                               n_suspect=int(n_sus[i]))
+        assert chain.verify_round() == want, (trial, losses, tol)
+    print("scale --smoke: consensus verifier triple parity ok "
+          "(verify_metas == numpy reference == host verify_round)")
+
+    cfg = EnvConfig(n_twins=33, n_bs=5)
+    ccfg = ConsensusConfig(quorum_f=0, byzantine_frac=0.0)
+    batch = scenario.make_batch(jax.random.PRNGKey(17), 3)
+    out = scenario.run_consensus(cfg, ccfg, batch, n_rounds=4)
+    np.testing.assert_allclose(np.asarray(out["consensus_time"]),
+                               np.asarray(out["legacy_block_time"]),
+                               atol=1e-6)
+    ks = jax.random.split(jax.random.PRNGKey(19), 5)
+    n, m = 41, 5
+    assoc = jax.random.randint(ks[0], (n,), 0, m)
+    b = jax.random.uniform(ks[1], (n,), minval=0.05, maxval=1.0)
+    data = jax.random.uniform(ks[2], (n,), minval=100, maxval=800)
+    freqs = jax.random.uniform(ks[3], (m,), minval=1e9, maxval=4e9)
+    up = jax.random.uniform(ks[4], (m,), minval=1e6, maxval=1e8)
+    legacy = latency.round_time(LP, assoc, b, data, freqs, up, up)
+    cons = latency.round_time(LP, assoc, b, data, freqs, up, up,
+                              consensus=ccfg)
+    assert abs(float(legacy) - float(cons)) <= 1e-6, (legacy, cons)
+    print("scale --smoke: zero-byzantine PBFT == Eq. 16 identity ok "
+          "(run_consensus per-scenario and round_time consensus mode)")
+
+
+def consensus_sweep(n_scenarios: int = 4, n_rounds: int = 8,
+                    fl_rounds: int = 2, fl_users: int = 12,
+                    fl_train_n: int = 2000) -> dict:
+    """The --consensus sweep, merged into ``scale.json: consensus``.
+
+    Two measurements:
+
+    * ``pbft_grid`` — byzantine fraction x quorum f x block size, each
+      cell one ``run_consensus`` batch of ``n_scenarios`` scenarios
+      advancing the on-device chain ``n_rounds`` blocks: mean Eq. 17 round
+      time, the PBFT term, the legacy Eq. 16 constant, mean accept
+      fraction, and the honest stake share after the rewards. The knobs
+      ride the ScenarioBatch axes (degenerate ``(v, v)`` ranges) so every
+      cell shares ONE jit compilation;
+    * ``fl_pair`` — a small full-``DTWNSystem`` accuracy pair, consensus
+      priced vs legacy: byz=0 vs byz=0.3 through ``FLConfig.consensus``
+      on the deterministic cifar10-sim textures — the headline is that the
+      view-change factor inflates the round budget while accuracy is
+      untouched (consensus prices the block phase; it does not alter
+      aggregation).
+    """
+    import numpy as np
+
+    from repro.core import scenario
+    from repro.core.consensus import ConsensusConfig
+
+    cfg = EnvConfig(n_twins=64, n_bs=5)
+    ccfg = ConsensusConfig()
+    cells = {}
+    for byz in (0.0, 0.2, 0.4):
+        for qf in (0, 1, 2):
+            for sb in (2e6, 8e6):
+                batch = scenario.make_batch(
+                    jax.random.PRNGKey(29), n_scenarios,
+                    byzantine=(byz, byz), quorum=(float(qf), float(qf)),
+                    block_size=(sb, sb))
+                out = scenario.run_consensus(cfg, ccfg, batch,
+                                             n_rounds=n_rounds)
+                name = f"byz{byz}_f{qf}_blk{sb:.0e}"
+                cells[name] = {
+                    "round_time_mean_s": float(jnp.mean(out["round_times"])),
+                    "consensus_time_mean_s":
+                        float(jnp.mean(out["consensus_time"])),
+                    "legacy_block_time_mean_s":
+                        float(jnp.mean(out["legacy_block_time"])),
+                    "accept_frac_mean": float(jnp.mean(out["accept_frac"])),
+                    "honest_stake_share_mean":
+                        float(jnp.mean(out["honest_stake_share"])),
+                }
+                c = cells[name]
+                print(f"consensus: {name:<24} t {c['round_time_mean_s']:7.2f}s"
+                      f" pbft {c['consensus_time_mean_s']:6.2f}s"
+                      f" accept {c['accept_frac_mean']:.3f}"
+                      f" honest-stake {c['honest_stake_share_mean']:.3f}")
+
+    from repro.core import association as assoc_mod
+    from repro.data import cifar10
+    from repro.fl.server import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=fl_train_n, max_test=512)
+    n_bs = 3
+    assoc = np.asarray(assoc_mod.average_association(fl_users, n_bs))
+    fl_cells = {}
+    for byz in (0.0, 0.3):
+        flc = FLConfig(n_users=fl_users, n_bs=n_bs,
+                       bs_freqs_ghz=(2.6, 1.8, 3.6), local_iters=2,
+                       batch_size=16,
+                       consensus=ConsensusConfig(quorum_f=1,
+                                                 byzantine_frac=byz))
+        sys_ = DTWNSystem(flc, data, seed=0)
+        times, cons_times = [], []
+        for _ in range(fl_rounds):
+            r = sys_.run_round(assoc, participating_users=fl_users)
+            times.append(r["round_time_s"])
+            cons_times.append(r["consensus_time_s"])
+        acc = sys_.test_accuracy(n=512)
+        fl_cells[f"byz{byz}"] = {
+            "accuracy": acc,
+            "round_time_mean_s": float(np.mean(times)),
+            "consensus_time_mean_s": float(np.mean(cons_times)),
+        }
+        print(f"consensus: fl byz={byz} acc {acc:.3f} "
+              f"t {np.mean(times):7.2f}s pbft {np.mean(cons_times):6.2f}s")
+    return {
+        "pbft_grid": {
+            "config": {"n_scenarios": n_scenarios, "n_rounds": n_rounds,
+                       "n_twins": 64, "n_bs": 5,
+                       "byzantine": [0.0, 0.2, 0.4], "quorum_f": [0, 1, 2],
+                       "block_size_bits": [2e6, 8e6]},
+            "cells": cells,
+        },
+        "fl_pair": {
+            "config": {"rounds": fl_rounds, "n_users": fl_users,
+                       "n_bs": n_bs, "train_n": fl_train_n, "quorum_f": 1,
+                       "dataset": "cifar10-sim"},
+            "cells": fl_cells,
+        },
+    }
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -911,6 +1138,10 @@ def smoke() -> None:
     # --- fault/adversary axis gate: zero-attacker robust==FedAvg parity,
     # breakdown bound, zero-rate injector identity ---
     fault_gate()
+
+    # --- consensus axis gate: election/verifier host parity, zero-byzantine
+    # PBFT == Eq. 16 identity ---
+    consensus_gate()
 
     # --- 8-host-device sharded parity gate (subprocess: the forced device
     # count must be set before jax initializes; includes the migration
@@ -1023,6 +1254,11 @@ if __name__ == "__main__":
                     help="accuracy-under-attack grid: robust vs plain "
                          "FedAvg across poisoner fraction x straggler rate "
                          "(merged into scale.json: faults.attack_grid)")
+    ap.add_argument("--consensus", action="store_true",
+                    help="PBFT consensus grid: byzantine fraction x quorum "
+                         "f x block size through run_consensus, plus a "
+                         "small FL pair with the consensus-priced round "
+                         "budget (merged into scale.json: consensus)")
     args = ap.parse_args()
     if args.smoke:
         smoke()
@@ -1059,6 +1295,9 @@ if __name__ == "__main__":
     elif args.faults:
         merge_into_scale({"faults": fault_attack_grid()})
         print("faults.attack_grid merged into results/bench/scale.json")
+    elif args.consensus:
+        merge_into_scale({"consensus": consensus_sweep()})
+        print("consensus grid merged into results/bench/scale.json")
     elif args.alpha:
         stats = heterogeneity_stats()
         merge_into_scale({"heterogeneity": stats})

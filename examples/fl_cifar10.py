@@ -49,6 +49,17 @@ def main():
     ap.add_argument("--straggler-rate", type=float, default=None,
                     help="per-twin straggler probability; enables the "
                          "fault-aware Eq. 12-17 latency accounting")
+    ap.add_argument("--byzantine-frac", type=float, default=None,
+                    help="byzantine BS fraction: swaps the fixed Eq. 16 "
+                         "block term for the PBFT consensus-latency model "
+                         "(repro.core.consensus) in the round budget")
+    ap.add_argument("--quorum", type=int, default=None,
+                    help="PBFT fault budget f (quorum 2f+1); implies the "
+                         "consensus workload")
+    ap.add_argument("--block-size", type=float, default=None,
+                    help="consensus block size in bits (overrides the "
+                         "LatencyParams default); implies the consensus "
+                         "workload")
     ap.add_argument("--out", default="results/fl_cifar10.csv")
     args = ap.parse_args()
 
@@ -60,6 +71,14 @@ def main():
         from repro.core.faults import FaultConfig
 
         fault_kw["faults"] = FaultConfig(straggler_rate=args.straggler_rate)
+    if (args.byzantine_frac is not None or args.quorum is not None
+            or args.block_size is not None):
+        from repro.core.consensus import ConsensusConfig
+
+        fault_kw["consensus"] = ConsensusConfig(
+            quorum_f=1 if args.quorum is None else args.quorum,
+            byzantine_frac=args.byzantine_frac or 0.0,
+            block_size_bits=args.block_size)
 
     data = cifar10.load(max_train=args.train_n, max_test=1000)
     scenario_arg = None
@@ -81,8 +100,9 @@ def main():
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w", newline="") as f:
         w = csv.writer(f)
-        w.writerow(["round", "policy", "dataset", "latency_s", "loss",
-                    "accuracy", "verified", "suspects", "chain_valid"])
+        w.writerow(["round", "policy", "dataset", "latency_s", "consensus_s",
+                    "loss", "accuracy", "verified", "suspects",
+                    "chain_valid"])
         for rnd in range(args.rounds):
             if args.policy == "random":
                 assoc = np.asarray(assoc_mod.random_association(
@@ -98,7 +118,9 @@ def main():
                                     participating_users=args.participating)
             acc = system.test_accuracy(500)
             w.writerow([info["round"], args.policy, data[2],
-                        f"{info['round_time_s']:.3f}", f"{info['loss']:.4f}",
+                        f"{info['round_time_s']:.3f}",
+                        f"{info['consensus_time_s']:.3f}",
+                        f"{info['loss']:.4f}",
                         f"{acc:.4f}", info["n_verified"],
                         info["n_suspect"], info["chain_valid"]])
             print(f"round {info['round']:3d} [{args.policy}] "

@@ -12,7 +12,11 @@ is within ``tolerance`` of the median of the round's submissions (guards
 against poisoned/broken updates).
 
 Latency of broadcast/validation is *accounted* via repro.core.latency
-(Eqs. 15-16); this module implements the ledger mechanics.
+(Eqs. 15-16, and the PBFT model in repro.core.consensus); this module
+implements the ledger mechanics. Election and verification delegate to the
+vectorized ``repro.core.consensus`` core (fp32), so the host audit trail and
+the device-resident ``ChainState`` agree bit-for-bit on verdicts, rewards,
+and producer schedules.
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import json
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -78,18 +83,28 @@ class DPoSChain:
         total = float(sum(twin_data_per_node)) or 1.0
         # Eq. 6: initial coins proportional to hosted twin data
         self.stakes = [s_ini * float(d) / total for d in twin_data_per_node]
+        # frozen copy: validate_chain replays the stake trajectory from here
+        self._initial_stakes = list(self.stakes)
         self.blocks: List[Block] = []
         self.pending: List[Transaction] = []
         self._round = 0
 
     # ---- stake / producers -------------------------------------------------
+    def _elect_from(self, stakes: Sequence[float]) -> List[int]:
+        """Election delegated to the vectorized core (stable top-k by stake,
+        smallest index wins ties) — host live path, the device ChainState,
+        and the validate_chain replay all share one rule, in fp32."""
+        from repro.core import consensus as consensus_mod
+
+        idx = consensus_mod.elect_producers(
+            jnp.asarray(stakes, jnp.float32), self.n_producers)
+        return [int(i) for i in np.asarray(idx)]
+
     def elect_producers(self) -> List[int]:
         """Stake-weighted vote: every node votes its coins; in the permission
         model each node backs candidates proportionally to candidate stake,
         so the elected set is the top-M_p by stake (deterministic ties)."""
-        order = sorted(range(self.n_nodes),
-                       key=lambda i: (-self.stakes[i], i))
-        return order[: self.n_producers]
+        return self._elect_from(self.stakes)
 
     def current_producer(self) -> int:
         producers = self.elect_producers()
@@ -138,22 +153,42 @@ class DPoSChain:
         formed by discarded-outlier clients is rejected even when its loss
         sneaks under the gate, excluding it from the Eq. 4/5 weights).
         Winners earn coins (paper: 'coins will be awarded'), losers 'get
-        no pay'."""
+        no pay'.
+
+        The predicate itself is evaluated by the vectorized core
+        (``repro.core.consensus.verify_metas``, fp32) over the stacked
+        per-sender metas, and each pending train_model tx is stamped with
+        its verdict (``("verified", bool)`` meta entry) *before* block
+        production, so the outcome is on-chain — :meth:`verified_senders`
+        filters on it and :meth:`validate_chain` replays rewards from it.
+        """
         model_txs = [t for t in self.pending if t.kind == "train_model"]
         metas = {t.sender: dict(t.meta) for t in model_txs}
-        losses = {s: m["holdout_loss"] for s, m in metas.items()}
-        if not losses:
+        if not metas:
             return {}
-        med = float(np.median(list(losses.values())))
+        senders = sorted(metas)
+        # host suspect rule needs both counters; encode "missing" as 0/0
+        have = [s for s in senders
+                if metas[s].get("n_clients") is not None
+                and metas[s].get("n_suspect") is not None]
+        from repro.core import consensus as consensus_mod
 
-        def suspect(m) -> bool:
-            n_cli, n_sus = m.get("n_clients"), m.get("n_suspect")
-            return (n_cli is not None and n_sus is not None
-                    and n_sus * 2 > n_cli)
-
-        verdicts = {s: (l <= med + self.tolerance
-                        and not suspect(metas[s]))
-                    for s, l in losses.items()}
+        v = consensus_mod.verify_metas(
+            jnp.asarray([metas[s]["holdout_loss"] for s in senders],
+                        jnp.float32),
+            jnp.ones((len(senders),), bool),
+            tolerance=self.tolerance,
+            n_clients=jnp.asarray(
+                [metas[s]["n_clients"] if s in have else 0
+                 for s in senders], jnp.float32),
+            n_suspect=jnp.asarray(
+                [metas[s]["n_suspect"] if s in have else 0
+                 for s in senders], jnp.float32))
+        verdicts = {s: bool(ok) for s, ok in zip(senders, np.asarray(v))}
+        for i, t in enumerate(self.pending):
+            if t.kind == "train_model" and t.sender in verdicts:
+                self.pending[i] = dataclasses.replace(
+                    t, meta=t.meta + (("verified", verdicts[t.sender]),))
         for s, ok in verdicts.items():
             if ok:
                 self.stakes[s] += self.reward
@@ -173,19 +208,139 @@ class DPoSChain:
 
     # ---- audit ---------------------------------------------------------------
     def validate_chain(self) -> bool:
+        """Full audit: hash-chain integrity plus producer eligibility.
+
+        The producer check is exact, not heuristic: starting from the Eq. 6
+        initial stakes, the recorded verdicts of each block's transactions
+        replay the reward trajectory, so the auditor re-derives the elected
+        producer set at every height (rewards land in ``verify_round``
+        *before* ``produce_block``, hence each block's own verdicts apply
+        before its producer is checked). A forged producer — even with a
+        correctly recomputed hash chain — fails the audit.
+        """
         prev = GENESIS_HASH
+        stakes = list(self._initial_stakes)
         for i, blk in enumerate(self.blocks):
             if blk.index != i or blk.prev_hash != prev:
                 return False
             if blk.compute_hash() != blk.hash:
                 return False
+            for t in blk.transactions:
+                if (t.kind == "train_model"
+                        and dict(t.meta).get("verified", False)):
+                    stakes[t.sender] += self.reward
+            producers = self._elect_from(stakes)
+            if blk.producer != producers[i % len(producers)]:
+                return False
             prev = blk.hash
         return True
 
     def verified_senders(self, round_: int) -> List[int]:
+        """Senders whose round ``round_`` model *passed* verification, read
+        from the on-chain verdict meta (a rejected or never-verified
+        submission is excluded)."""
         out = []
         for blk in self.blocks:
             for t in blk.transactions:
-                if t.kind == "train_model" and t.round == round_:
+                if (t.kind == "train_model" and t.round == round_
+                        and dict(t.meta).get("verified", False)):
                     out.append(t.sender)
+        return out
+
+
+class TwoTierChain:
+    """Tang et al. 2024 (arXiv 2411.02323) multi-tier ledger, host side.
+
+    Tier 1 is one :class:`DPoSChain` per committee of BSs (committee map =
+    ``repro.core.consensus.bs_groups``, the Eq. 4/5 grouping reused one
+    level up); tier 2 is a :class:`DPoSChain` over the G committees, whose
+    stake is each committee's aggregate twin data. Every
+    :meth:`produce_round` produces each committee's block and anchors its
+    hash on tier 2 as a ``checkpoint`` transaction, so tampering with any
+    tier-1 block breaks the cross-tier checkpoint even if that committee's
+    local hash chain is consistently rewritten. The latency twin of this
+    topology is ``repro.core.consensus.t_consensus_two_tier``.
+    """
+
+    def __init__(self, n_nodes: int, twin_data_per_node: Sequence[float],
+                 n_groups: int = 2, **chain_kw):
+        from repro.core import consensus as consensus_mod
+
+        self.n_nodes = n_nodes
+        self.n_groups = max(1, min(n_groups, n_nodes))
+        self.groups = [int(g) for g in np.asarray(
+            consensus_mod.bs_groups(n_nodes, self.n_groups))]
+        self.members: List[List[int]] = [
+            [i for i in range(n_nodes) if self.groups[i] == g]
+            for g in range(self.n_groups)]
+        self._local = {i: self.members[self.groups[i]].index(i)
+                       for i in range(n_nodes)}
+        self.tier1 = [DPoSChain(len(m),
+                                [twin_data_per_node[i] for i in m],
+                                **chain_kw)
+                      for m in self.members]
+        self.tier2 = DPoSChain(
+            self.n_groups,
+            [sum(float(twin_data_per_node[i]) for i in m) or 1.0
+             for m in self.members],
+            **chain_kw)
+        self._round = 0
+
+    def _chain_of(self, sender: int) -> DPoSChain:
+        return self.tier1[self.groups[sender]]
+
+    def submit_model(self, sender: int, params, round_: int,
+                     holdout_loss: float, **meta_kw) -> Transaction:
+        """Route to the sender's committee chain (local sender index)."""
+        return self._chain_of(sender).submit_model(
+            self._local[sender], params, round_, holdout_loss, **meta_kw)
+
+    def verify_round(self) -> Dict[int, bool]:
+        """Per-committee verification, verdicts re-keyed to global BS ids.
+
+        Each committee gates against its *own* median — the host twin of
+        ``verify_metas(..., group=bs_groups(M, G))``.
+        """
+        verdicts: Dict[int, bool] = {}
+        for g, chain in enumerate(self.tier1):
+            for local, ok in chain.verify_round().items():
+                verdicts[self.members[g][local]] = ok
+        return verdicts
+
+    def produce_round(self) -> Block:
+        """Produce all tier-1 blocks, checkpoint them on tier 2, produce the
+        tier-2 block. Returns the tier-2 (anchor) block."""
+        for g, chain in enumerate(self.tier1):
+            blk = chain.produce_block()
+            self.tier2.submit_twin_update(g, blk.hash, self._round,
+                                          kind="checkpoint")
+        anchor = self.tier2.produce_block()
+        self._round += 1
+        return anchor
+
+    def validate(self) -> bool:
+        """Audit every tier plus the cross-tier checkpoints: the r-th
+        checkpoint tx of committee g must equal the hash of committee g's
+        r-th block."""
+        if not self.tier2.validate_chain():
+            return False
+        if any(not c.validate_chain() for c in self.tier1):
+            return False
+        for r, blk in enumerate(self.tier2.blocks):
+            cps = {t.sender: t.payload_hash for t in blk.transactions
+                   if t.kind == "checkpoint"}
+            for g, chain in enumerate(self.tier1):
+                if r >= len(chain.blocks):
+                    return False
+                if cps.get(g) != chain.blocks[r].hash:
+                    return False
+        return True
+
+    @property
+    def stakes(self) -> List[float]:
+        """Global per-BS stake view, re-assembled from the committees."""
+        out = [0.0] * self.n_nodes
+        for g, chain in enumerate(self.tier1):
+            for local, s in enumerate(chain.stakes):
+                out[self.members[g][local]] = s
         return out

@@ -1,0 +1,390 @@
+"""Consensus as a first-class workload (paper Section II-C + Eq. 16/17).
+
+The seed kept the chain entirely host-side (``core/blockchain.py``: Python
+lists, per-tx loops) and charged a *fixed* Eq. 16 constant for block
+validation — the controller could neither observe nor trade consensus cost.
+This module lifts the consensus mechanics onto the device:
+
+- :class:`ChainState` — a pure-jax pytree of the per-BS chain view: stakes
+  (Eq. 6 coins), a rolling per-round verdict/reward history, and the block
+  counter.  Stacked ``(M,)``/``(H, M)`` device arrays, scan/vmap/shard_map
+  safe.
+- :func:`elect_producers` — jit-able top-k-by-stake election with the host
+  ledger's deterministic tie rule (stable sort => smallest index wins ties).
+- :func:`verify_metas` — vectorized median+tolerance+suspect quality gate
+  over the stacked per-BS submission metas, built on the segment-sort
+  machinery (:func:`repro.kernels.segment_reduce.segment_median`), grouped
+  per committee for the two-tier variant.
+- :func:`t_consensus` — a PBFT-style consensus-latency model (pre-prepare /
+  prepare / commit message rounds over the M BSs, quorum ``2f+1``, block
+  size, per-link downlink rates) that replaces the fixed Eq. 16 constant as
+  a real term in the Eq. 17 round budget.  At ``quorum_f=0`` and
+  ``byzantine_frac=0`` it reduces *exactly* to the legacy
+  :func:`repro.core.latency.t_block_validation` (parity <= 1e-6, gated in
+  ``bench_scale --smoke``).
+- :func:`t_consensus_two_tier` — the Tang et al. 2024 (arXiv 2411.02323)
+  multi-tier topology: BSs grouped into committees (hierarchy.py's Eq. 4/5
+  grouping reused one level up), intra-committee PBFT in parallel, then a
+  leader-tier PBFT over per-committee checkpoint transactions.
+
+The host :class:`repro.core.blockchain.DPoSChain` stays as the audit-trail
+ledger but delegates election and verification to these functions, so the
+two paths agree bit-for-bit (fp32).
+
+PBFT latency derivation (docs/ARCHITECTURE.md "Consensus" has the long
+form).  One consensus instance =
+
+    t_preprepare : the primary multicasts the block to the producer set —
+                   identical to the Eq. 16 propagation term
+                   ``max_i xi * log2(max(M_p, 2)) * S_B / R_i^D``.
+    t_validate   : every replica re-executes/checks the block — identical
+                   to the Eq. 16 validation term
+                   ``max_i S_B/8 * f^v / freq_i``.
+    2 * t_quorum : prepare and commit are all-to-all header broadcasts; a
+                   replica's *own* vote is free, so each phase completes
+                   when the (2f)-th fastest *other* replica's header
+                   arrives.  With per-link header time
+                   ``m_i = xi * log2(max(M,2)) * S_H / R_i^D``, t_quorum is
+                   the (2f)-th smallest of the ``m_i`` — 0 at f=0, non-
+                   decreasing in f, invariant under BS permutation.
+    view changes : a byzantine primary stalls its view; with byzantine
+                   fraction p the expected number of failed views before an
+                   honest primary is p/(1-p) (geometric), each costing
+                   ``view_timeout`` extra protocol rounds.
+
+so ``t = (t_preprepare + t_validate + 2*t_quorum(f)) * (1 + vt * p/(1-p))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import latency
+from repro.kernels.segment_reduce import segment_max, segment_median
+
+_BYZ_LOSS_OFFSET = 2.0  # holdout-loss penalty a byzantine BS's update carries
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusConfig:
+    """Static consensus knobs (hashable — rides jit static args via configs).
+
+    ``quorum_f`` is the PBFT fault budget f (quorum 2f+1); ``byzantine_frac``
+    the fraction of byzantine BSs (drives view-change expectation and, in the
+    scenario/env runners, which BSs submit poisoned metas); ``header_bits``
+    the prepare/commit message size S_H; ``block_size_bits`` overrides
+    ``LatencyParams.block_size_bits`` when set; ``view_timeout`` the extra
+    protocol rounds charged per failed view; ``n_groups > 1`` switches the
+    latency term to the two-tier committee topology.
+    """
+    quorum_f: int = 1
+    byzantine_frac: float = 0.0
+    header_bits: float = 2048.0
+    block_size_bits: Optional[float] = None
+    view_timeout: float = 1.0
+    reward: float = 1.0
+    tolerance: float = 0.5
+    s_ini: float = 100.0
+    history: int = 8
+    n_groups: int = 1
+
+
+class ChainState(NamedTuple):
+    """Device-resident per-BS chain view.
+
+    ``stakes``: (M,) fp32 training coins (Eq. 6 init + verification rewards).
+    ``verdicts``: (H, M) fp32 rolling accept history (1 accepted / 0 rejected,
+    benign prior 1 for rounds a BS did not submit), written at
+    ``round % H``.  ``rewards``: (H, M) fp32 coins granted per round.
+    ``round``: () int32 — blocks produced so far (producer rotation cursor).
+    """
+    stakes: jnp.ndarray
+    verdicts: jnp.ndarray
+    rewards: jnp.ndarray
+    round: jnp.ndarray
+
+
+def chain_init(ccfg: ConsensusConfig, data_per_bs) -> ChainState:
+    """Eq. 6: initial coins proportional to hosted twin data."""
+    d = jnp.asarray(data_per_bs, jnp.float32)
+    total = jnp.maximum(jnp.sum(d), 1e-9)
+    m = d.shape[0]
+    return ChainState(
+        stakes=ccfg.s_ini * d / total,
+        verdicts=jnp.ones((ccfg.history, m), jnp.float32),
+        rewards=jnp.zeros((ccfg.history, m), jnp.float32),
+        round=jnp.zeros((), jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_producers",))
+def elect_producers(stakes, n_producers: int) -> jnp.ndarray:
+    """Top-``n_producers`` BSs by stake, deterministic ties.
+
+    Stable argsort of ``-stakes`` reproduces the host ledger's
+    ``sorted(range(M), key=lambda i: (-stakes[i], i))`` exactly: equal
+    stakes are won by the smaller BS index.  Returns (n_producers,) int32.
+    """
+    order = jnp.argsort(-jnp.asarray(stakes, jnp.float32), stable=True)
+    return order[:n_producers].astype(jnp.int32)
+
+
+def current_producer(state: ChainState, n_producers: int) -> jnp.ndarray:
+    """Round-robin over the elected set, as the host ledger rotates."""
+    producers = elect_producers(state.stakes, n_producers)
+    return producers[jnp.mod(state.round, n_producers)]
+
+
+def verify_metas(losses, submitted, *, tolerance, n_clients=None,
+                 n_suspect=None, group=None, n_groups: int = 1):
+    """Vectorized quality gate over stacked per-BS submission metas.
+
+    Accepted iff ``loss <= median(submitted losses) + tolerance`` and the
+    submitting cohort is not majority-suspect (``n_suspect * 2 > n_clients``)
+    — the exact predicate of :meth:`DPoSChain.verify_round`, fp32.  The
+    median is the middle-two average (numpy semantics) over the *submitted*
+    subset only: non-submitters are routed to an out-of-range segment id so
+    the sort-based :func:`segment_median` drops them.
+
+    ``group``/``n_groups`` gate per committee for the two-tier topology:
+    each committee's median is taken over its own members.
+
+    Shapes: all (M,).  Returns (M,) bool verdicts (False for non-submitters).
+    """
+    losses = jnp.asarray(losses, jnp.float32)
+    sub = jnp.asarray(submitted, bool)
+    m = losses.shape[0]
+    g = (jnp.zeros((m,), jnp.int32) if group is None
+         else jnp.asarray(group, jnp.int32))
+    seg = jnp.where(sub, g, n_groups)  # non-submitters fall outside every seg
+    med = segment_median(losses, seg, n_groups)
+    ok = losses <= med[jnp.clip(g, 0, n_groups - 1)] + tolerance
+    if n_clients is None or n_suspect is None:
+        suspect = jnp.zeros((m,), bool)
+    else:
+        suspect = (jnp.asarray(n_suspect, jnp.float32) * 2.0
+                   > jnp.asarray(n_clients, jnp.float32))
+    return sub & ok & ~suspect
+
+
+def apply_round(ccfg: ConsensusConfig, state: ChainState, losses, submitted,
+                *, n_clients=None, n_suspect=None, group=None):
+    """One verify-and-reward step: verdicts -> coins -> history -> rotate.
+
+    Mirrors the host sequence ``verify_round(); produce_block()``.  Returns
+    ``(new_state, verdicts)`` with verdicts (M,) bool.
+    """
+    v = verify_metas(losses, submitted, tolerance=ccfg.tolerance,
+                     n_clients=n_clients, n_suspect=n_suspect,
+                     group=group, n_groups=max(ccfg.n_groups, 1))
+    rew = jnp.where(v, ccfg.reward, 0.0).astype(jnp.float32)
+    slot = jnp.mod(state.round, ccfg.history)
+    sub = jnp.asarray(submitted, bool)
+    # benign prior for non-submitters: absence of evidence is not a rejection
+    hist_row = jnp.where(sub, v, True).astype(jnp.float32)
+    # row write as mask-select, not `.at[slot].set`: scatter has no
+    # shard_map replication rule, and this state is a scan carry inside
+    # sharded scenario/env bodies
+    row = (jnp.arange(ccfg.history, dtype=jnp.int32) == slot)[:, None]
+    return ChainState(
+        stakes=state.stakes + rew,
+        verdicts=jnp.where(row, hist_row[None, :], state.verdicts),
+        rewards=jnp.where(row, rew[None, :], state.rewards),
+        round=state.round + 1,
+    ), v
+
+
+def accept_rate(state: ChainState) -> jnp.ndarray:
+    """(M,) mean accept verdict over the rolling history window."""
+    return jnp.mean(state.verdicts, axis=0)
+
+
+def stake_share(state: ChainState) -> jnp.ndarray:
+    """(M,) per-BS share of total stake (sums to 1)."""
+    return state.stakes / jnp.maximum(jnp.sum(state.stakes), 1e-9)
+
+
+# ---- PBFT consensus-latency model -------------------------------------------
+
+
+def _override(value, default):
+    return default if value is None else value
+
+
+def t_consensus(params: latency.LatencyParams, ccfg: ConsensusConfig,
+                downlink, freqs, *, quorum_f=None, byz_frac=None,
+                block_size_bits=None) -> jnp.ndarray:
+    """PBFT consensus latency over the M BSs (scalar seconds).
+
+    Replaces the fixed Eq. 16 constant in the Eq. 17 round budget via
+    ``latency.round_time(..., consensus=ccfg)``.  The keyword overrides
+    accept traced per-scenario values (ScenarioBatch byzantine / quorum /
+    block-size axes); the config supplies static defaults.  See the module
+    docstring for the phase derivation and the f=0, p=0 parity argument.
+    """
+    downlink = jnp.asarray(downlink, jnp.float32)
+    freqs = jnp.asarray(freqs, jnp.float32)
+    m = downlink.shape[0]
+    sb = _override(block_size_bits,
+                   _override(ccfg.block_size_bits, params.block_size_bits))
+    safe_down = jnp.maximum(downlink, 1.0)
+    # pre-prepare: primary multicasts the block (== Eq. 16 propagation term)
+    pre = jnp.max(params.xi * jnp.log2(jnp.maximum(params.n_producers, 2))
+                  * sb / safe_down)
+    # validate: every replica checks the block (== Eq. 16 validation term)
+    val = jnp.max(sb / 8.0 * params.cycles_per_val_byte / freqs)
+    tq = _quorum_wait(params, ccfg, safe_down, m,
+                      _override(quorum_f, ccfg.quorum_f))
+    return (pre + val + 2.0 * tq) * _view_change_factor(
+        ccfg, _override(byz_frac, ccfg.byzantine_frac))
+
+
+def _quorum_wait(params, ccfg, safe_down, m, quorum_f) -> jnp.ndarray:
+    """Prepare/commit phase wait: (2f)-th smallest per-link header time."""
+    msg = (params.xi * jnp.log2(jnp.maximum(m, 2))
+           * jnp.asarray(ccfg.header_bits, jnp.float32) / safe_down)
+    srt = jnp.sort(msg)
+    need = jnp.clip(2 * jnp.asarray(quorum_f, jnp.int32), 0, m)
+    return jnp.where(need > 0, srt[jnp.clip(need - 1, 0, m - 1)], 0.0)
+
+
+def _view_change_factor(ccfg: ConsensusConfig, byz_frac) -> jnp.ndarray:
+    """1 + view_timeout * E[failed views]; exactly 1 at byz_frac = 0."""
+    p = jnp.clip(jnp.asarray(byz_frac, jnp.float32), 0.0, 0.95)
+    return 1.0 + ccfg.view_timeout * p / (1.0 - p)
+
+
+def bs_groups(n_bs: int, n_groups: int) -> jnp.ndarray:
+    """(M,) committee map: round-robin, the Eq. 4/5 grouping one level up."""
+    return jnp.arange(n_bs, dtype=jnp.int32) % max(n_groups, 1)
+
+
+def t_consensus_two_tier(params: latency.LatencyParams,
+                         ccfg: ConsensusConfig, downlink, freqs, *,
+                         n_groups: Optional[int] = None, quorum_f=None,
+                         byz_frac=None, block_size_bits=None) -> jnp.ndarray:
+    """Tang et al. 2024 multi-tier consensus latency (scalar seconds).
+
+    Tier 1: the M BSs are split into G committees (:func:`bs_groups`); each
+    runs intra-committee PBFT on the full block in parallel — the tier-1
+    phase ends with the slowest committee.  Tier 2: each committee's
+    best-connected member acts as its delegate and submits a checkpoint tx
+    (one block digest); the G delegates run PBFT over the checkpoint block
+    (G header-sized txs).  ``G=1`` degenerates to the flat
+    :func:`t_consensus` exactly.
+
+    The per-committee aggregates ride the segment kernels (grouping reused
+    one level up).  Only the pmax-combining :func:`segment_max` is used —
+    idempotent under an active twin scope, so the replicated M-sized
+    committee axis stays correct even inside a sharded env/scenario body
+    (sum-combining segment kernels would double-count there).
+    """
+    g = max(_override(n_groups, ccfg.n_groups), 1)
+    if g <= 1:
+        return t_consensus(params, ccfg, downlink, freqs, quorum_f=quorum_f,
+                           byz_frac=byz_frac, block_size_bits=block_size_bits)
+    downlink = jnp.asarray(downlink, jnp.float32)
+    freqs = jnp.asarray(freqs, jnp.float32)
+    m = downlink.shape[0]
+    group = bs_groups(m, g)
+    sb = _override(block_size_bits,
+                   _override(ccfg.block_size_bits, params.block_size_bits))
+    f = jnp.asarray(_override(quorum_f, ccfg.quorum_f), jnp.int32)
+    safe_down = jnp.maximum(downlink, 1.0)
+
+    # -- tier 1: intra-committee PBFT, all committees in parallel
+    prop = (params.xi * jnp.log2(jnp.maximum(params.n_producers, 2))
+            * sb / safe_down)
+    val = sb / 8.0 * params.cycles_per_val_byte / freqs
+    pre_g = segment_max(prop, group, g)
+    val_g = segment_max(val, group, g)
+    msg = (params.xi * jnp.log2(jnp.maximum(jnp.ceil(m / g), 2.0))
+           * jnp.asarray(ccfg.header_bits, jnp.float32) / safe_down)
+    # per-committee (2f)-th smallest member header time, f clipped feasible
+    mask = group[None, :] == jnp.arange(g, dtype=jnp.int32)[:, None]
+    sizes = jnp.sum(mask.astype(jnp.int32), axis=1)
+    srt = jnp.sort(jnp.where(mask, msg[None, :], jnp.inf), axis=1)
+    f_g = jnp.minimum(f, (sizes - 1) // 2)
+    need = jnp.clip(2 * f_g, 0, m)
+    kth = jnp.take_along_axis(srt, jnp.clip(need - 1, 0, m - 1)[:, None],
+                              axis=1)[:, 0]
+    tq_g = jnp.where(need > 0, kth, 0.0)
+    tier1 = jnp.max(pre_g + val_g + 2.0 * tq_g)
+
+    # -- tier 2: checkpoint PBFT over the G delegates (best-connected member
+    # of each committee); the checkpoint block carries one digest per group
+    lead_down = jnp.maximum(segment_max(safe_down, group, g), 1.0)
+    lead_freq = jnp.maximum(segment_max(freqs, group, g), 1.0)
+    cp_bits = jnp.asarray(ccfg.header_bits, jnp.float32) * g
+    pre2 = jnp.max(params.xi
+                   * jnp.log2(jnp.maximum(min(params.n_producers, g), 2))
+                   * cp_bits / lead_down)
+    val2 = jnp.max(cp_bits / 8.0 * params.cycles_per_val_byte / lead_freq)
+    msg2 = (params.xi * jnp.log2(jnp.maximum(g, 2))
+            * jnp.asarray(ccfg.header_bits, jnp.float32) / lead_down)
+    srt2 = jnp.sort(msg2)
+    f2 = jnp.minimum(f, (g - 1) // 2)
+    need2 = jnp.clip(2 * f2, 0, g)
+    tq2 = jnp.where(need2 > 0, srt2[jnp.clip(need2 - 1, 0, g - 1)], 0.0)
+    tier2 = pre2 + val2 + 2.0 * tq2
+
+    return (tier1 + tier2) * _view_change_factor(
+        ccfg, _override(byz_frac, ccfg.byzantine_frac))
+
+
+def consensus_time(params: latency.LatencyParams, ccfg: ConsensusConfig,
+                   downlink, freqs, *, quorum_f=None, byz_frac=None,
+                   block_size_bits=None) -> jnp.ndarray:
+    """Dispatch flat vs two-tier on the static ``ccfg.n_groups``."""
+    fn = t_consensus_two_tier if ccfg.n_groups > 1 else t_consensus
+    return fn(params, ccfg, downlink, freqs, quorum_f=quorum_f,
+              byz_frac=byz_frac, block_size_bits=block_size_bits)
+
+
+# ---- per-round chain simulation (scenario / env bodies) ---------------------
+
+
+def draw_byzantine(key, n_bs: int, byz_frac) -> jnp.ndarray:
+    """(M,) bool byzantine-BS mask; stationary per scenario realization."""
+    return jax.random.uniform(key, (n_bs,)) < jnp.asarray(byz_frac,
+                                                          jnp.float32)
+
+
+def submission_losses(key, byz, base: float = 0.5,
+                      noise: float = 0.1) -> jnp.ndarray:
+    """Per-BS holdout-loss proxy: honest noise + byzantine offset.
+
+    Stand-in for the FL holdout losses when the chain is simulated inside
+    the latency-only scenario sweep / MARL env (no real training there).
+    """
+    m = byz.shape[0]
+    honest = base + noise * jax.random.normal(key, (m,))
+    return honest + jnp.where(byz, _BYZ_LOSS_OFFSET, 0.0)
+
+
+def chain_round(ccfg: ConsensusConfig, state: ChainState, key, byz,
+                occupancy):
+    """Draw one round's submissions, verify, and advance the chain.
+
+    ``occupancy``: (M,) per-BS twin counts — a BS with no twins has nothing
+    to submit.  Returns ``(new_state, verdicts, accept_frac)`` where
+    ``accept_frac`` is the accepted share of actual submitters.
+    """
+    losses = submission_losses(key, byz)
+    submitted = jnp.asarray(occupancy, jnp.float32) > 0.0
+    group = (bs_groups(byz.shape[0], ccfg.n_groups)
+             if ccfg.n_groups > 1 else None)
+    state2, v = apply_round(ccfg, state, losses, submitted, group=group)
+    n_sub = jnp.maximum(jnp.sum(submitted.astype(jnp.float32)), 1.0)
+    accept_frac = jnp.sum(v.astype(jnp.float32)) / n_sub
+    return state2, v, accept_frac
+
+
+def honest_stake_share(state: ChainState, byz) -> jnp.ndarray:
+    """Share of total stake held by non-byzantine BSs (scalar in [0,1])."""
+    honest = jnp.where(byz, 0.0, state.stakes)
+    return jnp.sum(honest) / jnp.maximum(jnp.sum(state.stakes), 1e-9)

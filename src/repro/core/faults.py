@@ -181,11 +181,15 @@ def outage_gate(fcfg: FaultConfig, uplink, bad) -> jnp.ndarray:
 def faulty_round_time(lp: latency.LatencyParams, fcfg: FaultConfig, key,
                       assoc, b, data_sizes, freqs, uplink, downlink, *,
                       straggler_rate=None, outage_rate=None,
-                      outage_bad=None, backend: str = "auto") -> jnp.ndarray:
+                      outage_bad=None, consensus=None,
+                      backend: str = "auto") -> jnp.ndarray:
     """Eq. 17 round time with straggler-inflated work and outage-gated
     uplink. ``outage_bad`` injects an externally-carried chain state
     ((M,) bool); by default the stationary marginal is drawn from ``key``.
-    Scalar fp32, replicated under a twin-sharding scope.
+    ``consensus`` swaps the fixed Eq. 16 block term for the PBFT model
+    (``latency.consensus_term``) — byzantine outages and byzantine voting
+    compose in the one round budget. Scalar fp32, replicated under a
+    twin-sharding scope.
     """
     k_slow, k_out = jax.random.split(key)
     slow = straggler_slowdowns(fcfg, k_slow, jnp.shape(assoc)[0],
@@ -194,7 +198,8 @@ def faulty_round_time(lp: latency.LatencyParams, fcfg: FaultConfig, key,
            if outage_bad is None else outage_bad)
     up = outage_gate(fcfg, uplink, bad)
     return latency.round_time(lp, assoc, jnp.asarray(b) * slow, data_sizes,
-                              freqs, up, downlink, backend=backend)
+                              freqs, up, downlink, consensus=consensus,
+                              backend=backend)
 
 
 def straggler_frac(slowdowns) -> jnp.ndarray:
@@ -232,7 +237,7 @@ def sharded_faulty_round_time(ts, lp: latency.LatencyParams,
                               fcfg: FaultConfig, key, assoc, b, data_sizes,
                               freqs, uplink, downlink, *,
                               straggler_rate=None, outage_rate=None,
-                              outage_bad=None) -> jnp.ndarray:
+                              outage_bad=None, consensus=None) -> jnp.ndarray:
     """:func:`faulty_round_time` over the mesh: (N,) inputs are padded and
     twin-sharded, (M,) inputs replicated, output a replicated scalar."""
     if ts.n_shards == 1:
@@ -240,7 +245,7 @@ def sharded_faulty_round_time(ts, lp: latency.LatencyParams,
                                  uplink, downlink,
                                  straggler_rate=straggler_rate,
                                  outage_rate=outage_rate,
-                                 outage_bad=outage_bad)
+                                 outage_bad=outage_bad, consensus=consensus)
     n = jnp.shape(assoc)[0]
     m = jnp.shape(freqs)[0]
     pa = ts.pad_twin(assoc, fill=m)
@@ -253,7 +258,8 @@ def sharded_faulty_round_time(ts, lp: latency.LatencyParams,
             return faulty_round_time(lp, fcfg, k, a, bv, d, f, u, dn,
                                      straggler_rate=straggler_rate,
                                      outage_rate=outage_rate,
-                                     outage_bad=outage_bad)
+                                     outage_bad=outage_bad,
+                                     consensus=consensus)
 
     return ts.shard_map(
         local, in_specs=(P(TWIN_AXIS),) * 3 + (P(),) * 4,

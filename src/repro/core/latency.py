@@ -153,7 +153,12 @@ def round_time_onehot(params: LatencyParams, assoc, b, data_sizes, freqs,
 
 
 def t_block_validation(params: LatencyParams, downlink, freqs) -> jnp.ndarray:
-    """Eq. 16: block propagation among producers + slowest validation."""
+    """Eq. 16: block propagation among producers + slowest validation.
+
+    The legacy *fixed* consensus constant — kept as the oracle for the PBFT
+    term (``repro.core.consensus.t_consensus`` reduces to this exactly at
+    ``quorum_f=0, byzantine_frac=0``; gated in ``bench_scale --smoke``).
+    """
     prop = (params.xi * jnp.log2(jnp.maximum(params.n_producers, 2))
             * params.block_size_bits / jnp.maximum(downlink, 1.0))
     val = jnp.max(params.block_size_bits / 8.0 * params.cycles_per_val_byte
@@ -161,30 +166,51 @@ def t_block_validation(params: LatencyParams, downlink, freqs) -> jnp.ndarray:
     return jnp.max(prop) + val
 
 
+def consensus_term(params: LatencyParams, downlink, freqs,
+                   consensus=None) -> jnp.ndarray:
+    """The Eq. 17 block term: legacy Eq. 16 constant, or the PBFT model.
+
+    ``consensus`` is ``None`` (legacy path, bit-identical to the seed) or a
+    ``repro.core.consensus.ConsensusConfig`` — then the PBFT message-round
+    model (flat or two-tier per ``n_groups``) prices the consensus phase
+    from the same per-link downlink rates. Import is lazy to keep the
+    latency module cycle-free (consensus imports latency for the params).
+    """
+    if consensus is None:
+        return t_block_validation(params, downlink, freqs)
+    from repro.core import consensus as consensus_mod
+
+    return consensus_mod.consensus_time(params, consensus, downlink, freqs)
+
+
 def round_time_per_bs(params: LatencyParams, assoc, b, data_sizes, freqs,
-                      uplink, downlink, *,
-                      backend: str = "auto") -> jnp.ndarray:
+                      uplink, downlink, *, backend: str = "auto",
+                      consensus=None) -> jnp.ndarray:
     """Per-BS round time T_i — the MARL per-agent cost (reward = -T_i).
 
     Shapes: assoc/b/data_sizes (N,); freqs/uplink/downlink (M,).
-    Returns (M,) seconds.
+    Returns (M,) seconds. ``consensus`` switches the block term to the PBFT
+    model (see :func:`consensus_term`).
     """
     cmp_ = t_cmp(params, assoc, b, data_sizes, freqs, backend=backend)
     bc = t_broadcast(params, assoc, uplink, freqs.shape[0], backend=backend)
-    bv = t_block_validation(params, downlink, freqs)
+    bv = consensus_term(params, downlink, freqs, consensus)
     return cmp_ + bc + bv
 
 
 def round_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
-               downlink, *, backend: str = "auto") -> jnp.ndarray:
+               downlink, *, backend: str = "auto",
+               consensus=None) -> jnp.ndarray:
     """Eq. 17: max-composed system round time T (scalar seconds).
 
     Shapes: assoc/b/data_sizes (N,); freqs/uplink/downlink (M,). ``backend``
-    selects the segment-reduction path for the per-BS reductions.
+    selects the segment-reduction path for the per-BS reductions;
+    ``consensus`` (a ``ConsensusConfig``) replaces the fixed Eq. 16 block
+    constant with the PBFT consensus-latency term.
     """
     cmp_ = t_cmp(params, assoc, b, data_sizes, freqs, backend=backend)
     bc = t_broadcast(params, assoc, uplink, freqs.shape[0], backend=backend)
-    bv = t_block_validation(params, downlink, freqs)
+    bv = consensus_term(params, downlink, freqs, consensus)
     return jnp.max(cmp_) + jnp.max(bc) + bv
 
 
@@ -194,8 +220,9 @@ def global_rounds(theta_g: float) -> float:
 
 
 def total_time(params: LatencyParams, assoc, b, data_sizes, freqs, uplink,
-               downlink, *, backend: str = "auto") -> jnp.ndarray:
+               downlink, *, backend: str = "auto",
+               consensus=None) -> jnp.ndarray:
     """Objective of problem (18): convergence rounds x Eq. 17 round time."""
     return global_rounds(params.theta_g) * round_time(
         params, assoc, b, data_sizes, freqs, uplink, downlink,
-        backend=backend)
+        backend=backend, consensus=consensus)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency, migration as migration_mod, sharding
+from repro.core import consensus as consensus_mod
 from repro.core import faults as faults_mod
 from repro.core.marl import spaces
 from repro.core.marl.spaces import Action, Observation
@@ -67,6 +68,15 @@ class EnvConfig:
     # exercised by scenario.run_faults, which scans the chain across
     # rounds). None == the exact pre-fault step.
     faults: Optional[faults_mod.FaultConfig] = None
+    # consensus as a workload (repro.core.consensus): when set, the env
+    # carries a device-resident ChainState (stakes / verdict history), each
+    # step runs one verify-and-reward chain round (byzantine BSs submit
+    # offset losses), the Eq. 17 block term switches from the fixed Eq. 16
+    # constant to the PBFT message-round model, and the observation gains
+    # two per-BS columns (rolling accept rate, stake share) so the
+    # controller can associate around byzantine/slow-quorum BSs. None ==
+    # the exact pre-consensus step (dedicated key fold, no chain state).
+    consensus: Optional[consensus_mod.ConsensusConfig] = None
 
     @property
     def wl(self) -> comms.WirelessConfig:
@@ -97,6 +107,10 @@ class EnvState(NamedTuple):
     dist: jnp.ndarray        # (M,)
     assoc: jnp.ndarray       # (N,) current association (for K in the state)
     t: jnp.ndarray           # step counter
+    # device-resident chain view (repro.core.consensus.ChainState) when
+    # cfg.consensus is set; None otherwise — an empty pytree subtree, so
+    # consensus-free configs keep the exact pre-consensus state structure
+    chain: Optional[consensus_mod.ChainState] = None
 
 
 def bs_frequencies(cfg: EnvConfig) -> jnp.ndarray:
@@ -106,6 +120,16 @@ def bs_frequencies(cfg: EnvConfig) -> jnp.ndarray:
     table = jnp.asarray(cfg.bs_freqs_ghz, jnp.float32)
     idx = jnp.arange(cfg.n_bs) % table.shape[0]
     return table[idx] * 1e9
+
+
+def init_chain(cfg: EnvConfig, data_sizes, assoc):
+    """Fresh chain view for a (population, association): Eq. 6 stakes from
+    the hosted per-BS twin data (segment-reduced, so scope-aware). None
+    when the config carries no consensus workload."""
+    if cfg.consensus is None:
+        return None
+    return consensus_mod.chain_init(
+        cfg.consensus, latency.bs_sum(data_sizes, assoc, cfg.n_bs))
 
 
 def observe(cfg: EnvConfig, st: EnvState) -> Observation:
@@ -118,6 +142,13 @@ def observe(cfg: EnvConfig, st: EnvState) -> Observation:
       ``twin_feats (N, 2)``: [D_j/data_max, D_j/mean(D)] — static within an
       episode (the paper's state carries per-twin information only through
       the fixed D).
+    With ``cfg.consensus`` set, ``bs_feats`` gains two consensus columns —
+    [rolling accept rate over the verdict-history window, stake share x M]
+    — read from the env's device-resident ChainState, so the controller can
+    see (and associate around) byzantine/slow-quorum BSs. Both are
+    (M,)-replicated chain statistics; the width change is reflected by
+    ``spaces.space_spec``.
+
     The K_i / load columns go through the segment-reduce dispatch, so
     observation stays O(N+M) at large twin counts. Inside a twin-sharding
     scope ``st`` carries this shard's twin block: the per-BS statistics
@@ -129,13 +160,20 @@ def observe(cfg: EnvConfig, st: EnvState) -> Observation:
     d = st.data_sizes / cfg.data_max
     load = segment_reduce(d, st.assoc, cfg.n_bs) / jnp.maximum(
         sharding.twin_sum(d), 1e-9)
-    bs_feats = jnp.concatenate([
+    cols = [
         (st.freqs / 3.6e9)[:, None],
         (k_counts / cfg.n_twins)[:, None],
         load[:, None],
         st.h_up / 2.0,
         (st.dist / cfg.wl.max_dist_m)[:, None],
-    ], axis=1).astype(jnp.float32)
+    ]
+    if cfg.consensus is not None:
+        chain = (st.chain if st.chain is not None
+                 else init_chain(cfg, st.data_sizes, st.assoc))
+        cols.append(consensus_mod.accept_rate(chain)[:, None])
+        # x M so a uniform stake distribution reads 1.0 in every row
+        cols.append((consensus_mod.stake_share(chain) * cfg.n_bs)[:, None])
+    bs_feats = jnp.concatenate(cols, axis=1).astype(jnp.float32)
     twin_feats = jnp.stack(
         [d, d * cfg.n_twins / jnp.maximum(sharding.twin_sum(d), 1e-9)],
         axis=1).astype(jnp.float32)
@@ -164,16 +202,18 @@ def env_reset(cfg: EnvConfig, key) -> EnvState:
     data = sharding.localize(
         jax.random.uniform(ks[0], (cfg.n_twins,), minval=cfg.data_min,
                            maxval=cfg.data_max), fill=0.0)
+    assoc = sharding.localize(
+        assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        fill=cfg.n_bs)
     return EnvState(
         freqs=freqs,
         data_sizes=data,
         h_up=comms.sample_channel(cfg.wl, ks[1]),
         h_down=comms.sample_channel(cfg.wl, ks[2]),
         dist=comms.sample_distances(cfg.wl, ks[3]),
-        assoc=sharding.localize(
-            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
-            fill=cfg.n_bs),
+        assoc=assoc,
         t=jnp.int32(0),
+        chain=init_chain(cfg, data, assoc),
     )
 
 
@@ -184,18 +224,23 @@ def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
     stay constant across episodes of one training run — required for the
     N-independent replay (twin_feats are stored once, not per row). Used
     by the scan trainer's ``episode_len`` gate. Scope-aware like
-    :func:`env_reset` (the kept population is already local)."""
+    :func:`env_reset` (the kept population is already local). The chain
+    view restarts too (fresh Eq. 6 stakes from the kept population) —
+    episodes audit a fresh ledger, matching ``DTWNSystem``'s per-run
+    chain."""
     ks = jax.random.split(key, 3)
+    assoc = sharding.localize(
+        assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        fill=cfg.n_bs)
     return EnvState(
         freqs=bs_frequencies(cfg),
         data_sizes=st.data_sizes,
         h_up=comms.sample_channel(cfg.wl, ks[0]),
         h_down=comms.sample_channel(cfg.wl, ks[1]),
         dist=comms.sample_distances(cfg.wl, ks[2]),
-        assoc=sharding.localize(
-            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
-            fill=cfg.n_bs),
+        assoc=assoc,
         t=jnp.int32(0),
+        chain=init_chain(cfg, st.data_sizes, assoc),
     )
 
 
@@ -286,7 +331,17 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     stationary channel-outage draw gates the uplink before latency
     accounting; ``info["straggler_frac"]`` / ``info["outage_frac"]`` report
     the realized fault fractions. ``faults=None`` traces the exact
-    pre-fault step (dedicated key fold)."""
+    pre-fault step (dedicated key fold).
+
+    With ``cfg.consensus`` set, the Eq. 17 block term is the PBFT
+    consensus-latency model instead of the fixed Eq. 16 constant — quorum
+    waits and byzantine view changes land in the reward, so the controller
+    trades consensus cost against compute/uplink like any other term — and
+    one chain round runs per step (byzantine submissions drawn on the
+    dedicated fold 5, disjoint from folds 3/4 and the dynamics split, so
+    ``consensus=None`` traces the exact pre-consensus step):
+    ``info["consensus_time"]`` is the PBFT term, ``info["accept_frac"]``
+    the accepted share of this round's submitters."""
     if not isinstance(actions, Action):
         actions = spaces.unflatten_action(cfg, actions)
     assoc, b, tau = decode_actions(cfg, actions)
@@ -309,9 +364,23 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
         up = faults_mod.outage_gate(cfg.faults, up, bad)
     down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
     per_bs = latency.round_time_per_bs(cfg.lat, assoc, b, st.data_sizes,
-                                       st.freqs, up, down)
+                                       st.freqs, up, down,
+                                       consensus=cfg.consensus)
     system_t = latency.round_time(cfg.lat, assoc, b, st.data_sizes, st.freqs,
-                                  up, down)
+                                  up, down, consensus=cfg.consensus)
+    chain = accept_frac = None
+    if cfg.consensus is not None:
+        # dedicated fold (5) — disjoint from migration (3), faults (4), and
+        # the dynamics split, so consensus=None traces the exact old step
+        k_cons = jax.random.fold_in(key, 5)
+        k_byz, k_sub = jax.random.split(k_cons)
+        byz = consensus_mod.draw_byzantine(k_byz, cfg.n_bs,
+                                           cfg.consensus.byzantine_frac)
+        prev_chain = (st.chain if st.chain is not None
+                      else init_chain(cfg, st.data_sizes, assoc))
+        occ = segment_count(assoc, cfg.n_bs)
+        chain, _, accept_frac = consensus_mod.chain_round(
+            cfg.consensus, prev_chain, k_sub, byz, occ)
     if cfg.shared_reward:
         # Eq. 17/19: the system cost is max_i T_i and every agent shares it
         reward = jnp.full((cfg.n_bs,), -system_t) * cfg.reward_scale
@@ -330,6 +399,7 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
         dist=st.dist,
         assoc=assoc,
         t=st.t + 1,
+        chain=chain,
     )
     info = {"system_time": system_t, "assoc": assoc, "b": b, "tau": tau,
             "uplink": up}
@@ -339,6 +409,10 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     if cfg.faults is not None:
         info["straggler_frac"] = faults_mod.straggler_frac(slow)
         info["outage_frac"] = jnp.mean(bad.astype(jnp.float32))
+    if cfg.consensus is not None:
+        info["consensus_time"] = latency.consensus_term(
+            cfg.lat, down, st.freqs, cfg.consensus)
+        info["accept_frac"] = accept_frac
     return nxt, reward, info
 
 
@@ -362,6 +436,17 @@ _OBS_SPECS = Observation(bs_feats=_P(), twin_feats=_P(TWIN_AXIS))
 _ACT_SPECS = Action(scores=_P(None, TWIN_AXIS), b_ctl=_P(), tau=_P())
 
 
+def env_specs(cfg: EnvConfig) -> EnvState:
+    """Partition specs for this config's EnvState pytree: the classic
+    twin-sharded layout, plus the fully-replicated ChainState subtree when
+    the config carries the consensus workload (the chain view is M-sized
+    per-BS state — every shard holds the same copy)."""
+    if cfg.consensus is None:
+        return _ENV_SPECS
+    return _ENV_SPECS._replace(chain=consensus_mod.ChainState(
+        stakes=_P(), verdicts=_P(), rewards=_P(), round=_P()))
+
+
 def sharded_env_reset(ts: TwinSharding, cfg: EnvConfig, key) -> EnvState:
     """:func:`env_reset` over the mesh: twin-indexed fields come back
     padded to ``ts.padded_n(cfg.n_twins)`` and sharded over ``"twin"``;
@@ -374,7 +459,8 @@ def sharded_env_reset(ts: TwinSharding, cfg: EnvConfig, key) -> EnvState:
         with ts.scope(cfg.n_twins):
             return env_reset(cfg, k)
 
-    return ts.shard_map(local, in_specs=(_P(),), out_specs=_ENV_SPECS)(key)
+    return ts.shard_map(local, in_specs=(_P(),),
+                        out_specs=env_specs(cfg))(key)
 
 
 def sharded_observe(ts: TwinSharding, cfg: EnvConfig,
@@ -389,7 +475,7 @@ def sharded_observe(ts: TwinSharding, cfg: EnvConfig,
         with ts.scope(cfg.n_twins):
             return observe(cfg, s)
 
-    return ts.shard_map(local, in_specs=(_ENV_SPECS,),
+    return ts.shard_map(local, in_specs=(env_specs(cfg),),
                         out_specs=_OBS_SPECS)(st)
 
 
@@ -418,6 +504,10 @@ def sharded_env_step(ts: TwinSharding, cfg: EnvConfig, st: EnvState,
     if cfg.faults is not None:
         info_specs["straggler_frac"] = _P()  # psum'd, replicated
         info_specs["outage_frac"] = _P()     # (M,)-derived, replicated
+    if cfg.consensus is not None:
+        info_specs["consensus_time"] = _P()  # (M,)-derived, replicated
+        info_specs["accept_frac"] = _P()     # chain-derived, replicated
+    specs = env_specs(cfg)
     return ts.shard_map(
-        local, in_specs=(_ENV_SPECS, _ACT_SPECS, _P()),
-        out_specs=(_ENV_SPECS, _P(), info_specs))(st, actions, key)
+        local, in_specs=(specs, _ACT_SPECS, _P()),
+        out_specs=(specs, _P(), info_specs))(st, actions, key)

@@ -49,6 +49,7 @@ from repro.kernels.segment_reduce import segment_count, segment_reduce
 TWIN_FEAT_DIM = 2       # F: [D_j / data_max, D_j / mean(D)]
 N_POOLS = 4             # mean / max / min / std per twin-feature column
 BS_EXTRA_FEATS = 4      # freq, K_i/N, load share, distance (+ C gains)
+CONSENSUS_FEATS = 2     # chain accept rate, stake share (consensus configs)
 ENC_EXTRA = 5           # hard count, soft count, win-score mean, load, b
 _SOFT_TEMP = 4.0        # softmax sharpness for the soft-occupancy feature
 
@@ -81,9 +82,19 @@ class SpaceSpec(NamedTuple):
 
 
 def space_spec(cfg) -> SpaceSpec:
-    """Dimensions of every interface tensor for ``cfg: EnvConfig``."""
+    """Dimensions of every interface tensor for ``cfg: EnvConfig``.
+
+    ``bs_f`` widens by :data:`CONSENSUS_FEATS` when the config carries the
+    consensus workload — the env appends the per-BS chain columns (rolling
+    accept rate, stake share) to ``bs_feats``, and every downstream width
+    (compact critic encoding, flat oracle vector, replay row) follows from
+    here. Networks are therefore sized per-config; a consensus agent and a
+    consensus-free agent do not share parameters.
+    """
     m, n, c = cfg.n_bs, cfg.n_twins, cfg.wl.n_subchannels
     g = BS_EXTRA_FEATS + c
+    if getattr(cfg, "consensus", None) is not None:
+        g += CONSENSUS_FEATS
     pooled = N_POOLS * TWIN_FEAT_DIM
     return SpaceSpec(
         n_twins=n, n_bs=m, n_subchannels=c,

@@ -283,7 +283,7 @@ def _train_sharded_jitted(tsh: TwinSharding, cfg: EnvConfig,
 
     P = jax.sharding.PartitionSpec
     state_specs = TrainState(
-        env=env_mod._ENV_SPECS,
+        env=env_mod.env_specs(cfg),
         obs=Observation(bs_feats=P(), twin_feats=P(TWIN_AXIS)),
         agent=P(),                       # whole MADDPG subtree replicated
         buf=P(),                         # replay is shard-free

@@ -37,7 +37,9 @@ import jax.numpy as jnp
 
 from repro.core import association as assoc_mod
 from repro.core import comms, latency, migration, sharding
+from repro.core import consensus as consensus_mod
 from repro.core import faults as faults_mod
+from repro.core.consensus import ConsensusConfig
 from repro.core.faults import FaultConfig
 from repro.core.marl import env as env_mod
 from repro.core.marl.env import EnvConfig
@@ -65,20 +67,28 @@ class ScenarioBatch(NamedTuple):
     straggler: jnp.ndarray = None  # (S,) straggler rate in [0, 1]
     outage: jnp.ndarray = None     # (S,) stationary outage rate in [0, 1]
     malicious: jnp.ndarray = None  # (S,) malicious twin fraction in [0, 1]
+    # consensus axes (repro.core.consensus); None == axis absent, the
+    # runner falls back to its ConsensusConfig / LatencyParams scalars
+    byzantine: jnp.ndarray = None   # (S,) byzantine BS fraction in [0, 1]
+    quorum: jnp.ndarray = None      # (S,) PBFT fault budget f (float-coded)
+    block_size: jnp.ndarray = None  # (S,) block size S_B in bits
 
 
 def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
                data_max=(500.0, 1500.0), skew=(1.0, 4.0),
                alpha=(0.1, 10.0), straggler=None, outage=None,
-               malicious=None) -> ScenarioBatch:
+               malicious=None, byzantine=None, quorum=None,
+               block_size=None) -> ScenarioBatch:
     """Sample a scenario batch: seeds plus per-scenario population ranges.
     ``alpha`` is drawn log-uniformly (label skew is a scale parameter);
     ``alpha=None`` omits the axis entirely (IID labels). The fault axes
-    ``straggler`` / ``outage`` / ``malicious`` are per-scenario rates drawn
-    uniformly from their ``(lo, hi)`` range, or omitted when None (the
-    default — a clean batch draws exactly what it drew before the fault
+    ``straggler`` / ``outage`` / ``malicious`` and the consensus axes
+    ``byzantine`` / ``quorum`` / ``block_size`` are per-scenario values
+    drawn uniformly from their ``(lo, hi)`` range, or omitted when None
+    (the default — a clean batch draws exactly what it drew before these
     axes existed — the original five streams still come from
-    ``split(key, 5)``; the fault rates draw from folded side streams)."""
+    ``split(key, 5)``; each optional axis draws from its own folded side
+    stream: 5/6/7 for the fault axes, 8/9/10 for the consensus axes)."""
     k0, k1, k2, k3, k4 = jax.random.split(key, 5)
     log_a = (None if alpha is None else
              jax.random.uniform(k4, (n_scenarios,), minval=jnp.log(alpha[0]),
@@ -102,6 +112,9 @@ def make_batch(key, n_scenarios: int, *, data_min=(100.0, 400.0),
         straggler=rate(5, straggler),
         outage=rate(6, outage),
         malicious=rate(7, malicious),
+        byzantine=rate(8, byzantine),
+        quorum=rate(9, quorum),
+        block_size=rate(10, block_size),
     )
 
 
@@ -126,16 +139,19 @@ def scenario_env(cfg: EnvConfig, key, data_min, data_max, skew):
     identical realizations (paired comparisons). Twin-sharding aware like
     :func:`env_reset` — per-shard population slice, replicated channels."""
     ks = jax.random.split(key, 4)
+    data = sample_population(cfg, ks[0], data_min, data_max, skew)
+    assoc = sharding.localize(
+        assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
+        fill=cfg.n_bs)
     return env_mod.EnvState(
         freqs=env_mod.bs_frequencies(cfg),
-        data_sizes=sample_population(cfg, ks[0], data_min, data_max, skew),
+        data_sizes=data,
         h_up=comms.sample_channel(cfg.wl, ks[1]),
         h_down=comms.sample_channel(cfg.wl, ks[2]),
         dist=comms.sample_distances(cfg.wl, ks[3]),
-        assoc=sharding.localize(
-            assoc_mod.average_association(cfg.n_twins, cfg.n_bs),
-            fill=cfg.n_bs),
+        assoc=assoc,
         t=jnp.int32(0),
+        chain=env_mod.init_chain(cfg, data, assoc),
     )
 
 
@@ -457,6 +473,130 @@ def run_faults_sharded(ts: TwinSharding, cfg: EnvConfig, fcfg: FaultConfig,
                            n_mapped=6)(batch.key, batch.data_min,
                                        batch.data_max, batch.skew, s_rate,
                                        o_rate)
+
+
+# ---------------------------------------------------------------------------
+# consensus runners — on-device chain rounds + PBFT latency across rounds
+# ---------------------------------------------------------------------------
+
+
+def _consensus_one(cfg: EnvConfig, ccfg: ConsensusConfig, n_rounds: int,
+                   key, data_min, data_max, skew, byz_frac, quorum_f,
+                   block_bits) -> dict:
+    """One scenario under consensus: the paper's round-robin association,
+    an on-device :class:`~repro.core.consensus.ChainState` advancing one
+    block per round (verify -> reward -> rotate), and the PBFT term pricing
+    the block phase in Eq. 17 instead of the fixed Eq. 16 constant. The
+    byzantine-BS mask (fold 6) is stationary per scenario; the per-round
+    submission draws come from fold 8 — both disjoint from the population /
+    channel streams and the other runners' folds, so adding the consensus
+    axes never perturbs the paired-realization contract. Twin-sharding
+    aware: the chain view is (M,)-replicated; only the population-derived
+    stake init and occupancy cross the twin axis (psum'd segment
+    reductions)."""
+    st = scenario_env(cfg, key, data_min, data_max, skew)
+    uni_tau = jnp.full((cfg.n_bs, cfg.wl.n_subchannels), 1.0 / cfg.n_bs)
+    up = comms.uplink_rate(cfg.wl, uni_tau, st.h_up, st.dist)
+    down = comms.downlink_rate(cfg.wl, st.h_down, st.dist)
+    b = jnp.full(st.data_sizes.shape, 0.5)
+    cmp_bc = (jnp.max(latency.t_cmp(cfg.lat, st.assoc, b, st.data_sizes,
+                                    st.freqs))
+              + jnp.max(latency.t_broadcast(cfg.lat, st.assoc, up,
+                                            cfg.n_bs)))
+    qf = jnp.round(jnp.asarray(quorum_f, jnp.float32)).astype(jnp.int32)
+    t_cons = consensus_mod.consensus_time(
+        cfg.lat, ccfg, down, st.freqs, quorum_f=qf, byz_frac=byz_frac,
+        block_size_bits=block_bits)
+    byz = consensus_mod.draw_byzantine(jax.random.fold_in(key, 6),
+                                       cfg.n_bs, byz_frac)
+    occ = latency.twin_counts(st.assoc, cfg.n_bs)
+    data_per_bs = latency.bs_sum(st.data_sizes, st.assoc, cfg.n_bs)
+    # the chain carry is replicated-in-fact (psum-derived stakes, fresh
+    # history buffers) but the rep checker cannot prove it across the scan
+    # boundary — stamp it (value-preserving; no-op outside a scope)
+    state0 = sharding.stamp_replicated(
+        consensus_mod.chain_init(ccfg, data_per_bs))
+
+    def body(state, k):
+        state2, _, accept = consensus_mod.chain_round(ccfg, state, k, byz,
+                                                      occ)
+        return state2, accept
+
+    keys = jax.random.split(jax.random.fold_in(key, 8), n_rounds)
+    state, accept = jax.lax.scan(body, state0, keys)
+    return {"round_times": jnp.full((n_rounds,), cmp_bc + t_cons),
+            "consensus_time": t_cons,
+            "legacy_block_time": latency.t_block_validation(cfg.lat, down,
+                                                            st.freqs),
+            "accept_frac": accept,
+            "honest_stake_share": consensus_mod.honest_stake_share(state,
+                                                                   byz)}
+
+
+def _batch_consensus(batch: ScenarioBatch, ccfg: ConsensusConfig,
+                     lat: latency.LatencyParams):
+    """Per-scenario consensus knobs: the batch's axes when present, else
+    the ConsensusConfig / LatencyParams scalars broadcast over the batch."""
+    s = batch.key.shape[0]
+    byz = (jnp.full((s,), ccfg.byzantine_frac)
+           if batch.byzantine is None else batch.byzantine)
+    qf = (jnp.full((s,), float(ccfg.quorum_f))
+          if batch.quorum is None else batch.quorum)
+    default_sb = (lat.block_size_bits if ccfg.block_size_bits is None
+                  else ccfg.block_size_bits)
+    sb = (jnp.full((s,), default_sb)
+          if batch.block_size is None else batch.block_size)
+    return byz, qf, sb
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "ccfg", "n_rounds"))
+def run_consensus(cfg: EnvConfig, ccfg: ConsensusConfig,
+                  batch: ScenarioBatch, n_rounds: int = 10) -> dict:
+    """Consensus as a first-class scenario axis: every scenario advances an
+    on-device chain ``n_rounds`` blocks (median+tolerance verification of
+    per-BS submissions, stake rewards, producer rotation) while the PBFT
+    message-round model prices the block phase of Eq. 17 from the
+    scenario's own downlink rates (byzantine fraction / quorum f / block
+    size from the batch axes when present, else ``ccfg``). Returns a dict
+    with (S, n_rounds) ``round_times`` and ``accept_frac``, plus (S,)
+    ``consensus_time`` (the PBFT term), ``legacy_block_time`` (the fixed
+    Eq. 16 constant, for the oracle comparison — equal at f=0, byz=0) and
+    ``honest_stake_share`` (stake share retained by honest BSs after
+    ``n_rounds`` of verification rewards)."""
+    fn = functools.partial(_consensus_one, cfg, ccfg, n_rounds)
+    byz, qf, sb = _batch_consensus(batch, ccfg, cfg.lat)
+    return jax.vmap(fn)(batch.key, batch.data_min, batch.data_max,
+                        batch.skew, byz, qf, sb)
+
+
+def run_consensus_sharded(ts: TwinSharding, cfg: EnvConfig,
+                          ccfg: ConsensusConfig, batch: ScenarioBatch,
+                          n_rounds: int = 10) -> dict:
+    """``run_consensus`` with each scenario's twin population sharded over
+    the mesh — the chain state and PBFT term are (M,)-replicated, so the
+    only cross-shard traffic is the stake-init / occupancy segment psum
+    (bit-parity with the single-device runner; gated at 8 forced host
+    devices in ``bench_scale --sharded-gate``). ``n_shards == 1`` is the
+    no-op fast path."""
+    byz, qf, sb = _batch_consensus(batch, ccfg, cfg.lat)
+    return _sharded_runner(ts, cfg, _consensus_one, ccfg, n_rounds,
+                           n_mapped=7)(batch.key, batch.data_min,
+                                       batch.data_max, batch.skew, byz, qf,
+                                       sb)
+
+
+def consensus_row(batch: ScenarioBatch, i: int):
+    """Host-side view of scenario row ``i``'s consensus axes: the FL bridge
+    (``repro.fl.server`` folds these into its ConsensusConfig so the host
+    ledger and the device runners price the same knobs).
+
+    Returns ``(byzantine_frac float | None, quorum_f int | None,
+    block_size_bits float | None)`` — None wherever the batch carries no
+    such axis."""
+    byz = None if batch.byzantine is None else float(batch.byzantine[i])
+    qf = None if batch.quorum is None else int(round(float(batch.quorum[i])))
+    sb = None if batch.block_size is None else float(batch.block_size[i])
+    return byz, qf, sb
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_steps", "policy"))

@@ -497,34 +497,42 @@ def sharded_t_broadcast(ts: TwinSharding, params: latency.LatencyParams,
 
 
 def sharded_round_time(ts: TwinSharding, params: latency.LatencyParams,
-                       assoc, b, data_sizes, freqs, uplink,
-                       downlink) -> jnp.ndarray:
+                       assoc, b, data_sizes, freqs, uplink, downlink,
+                       consensus=None) -> jnp.ndarray:
     """Eq. 17 system round time over the mesh (scalar, replicated). The
     per-BS partial sums travel as one (M,)-sized psum per reduction; the
-    max compositions run on the replicated (M,) results."""
+    max compositions run on the replicated (M,) results. ``consensus``
+    (a static ``ConsensusConfig``) swaps the Eq. 16 constant for the PBFT
+    term — computed on replicated (M,) link rates, so it needs no extra
+    collectives."""
     m = freqs.shape[0]
-    return _shard_call(ts, functools.partial(latency.round_time, params),
-                       "tttrrr", (m, 0, 0, None, None, None),
-                       assoc, b, data_sizes, freqs, uplink, downlink)
+    return _shard_call(
+        ts, functools.partial(latency.round_time, params,
+                              consensus=consensus),
+        "tttrrr", (m, 0, 0, None, None, None),
+        assoc, b, data_sizes, freqs, uplink, downlink)
 
 
 def sharded_round_time_per_bs(ts: TwinSharding,
                               params: latency.LatencyParams, assoc, b,
-                              data_sizes, freqs, uplink,
-                              downlink) -> jnp.ndarray:
+                              data_sizes, freqs, uplink, downlink,
+                              consensus=None) -> jnp.ndarray:
     """Per-BS T_i (the MARL reward term) over the mesh, (M,) replicated."""
     m = freqs.shape[0]
     return _shard_call(
-        ts, functools.partial(latency.round_time_per_bs, params), "tttrrr",
+        ts, functools.partial(latency.round_time_per_bs, params,
+                              consensus=consensus), "tttrrr",
         (m, 0, 0, None, None, None), assoc, b, data_sizes, freqs, uplink,
         downlink)
 
 
 def sharded_total_time(ts: TwinSharding, params: latency.LatencyParams,
-                       assoc, b, data_sizes, freqs, uplink,
-                       downlink) -> jnp.ndarray:
+                       assoc, b, data_sizes, freqs, uplink, downlink,
+                       consensus=None) -> jnp.ndarray:
     """Problem (18) objective over the mesh (scalar, replicated)."""
     m = freqs.shape[0]
-    return _shard_call(ts, functools.partial(latency.total_time, params),
-                       "tttrrr", (m, 0, 0, None, None, None),
-                       assoc, b, data_sizes, freqs, uplink, downlink)
+    return _shard_call(
+        ts, functools.partial(latency.total_time, params,
+                              consensus=consensus),
+        "tttrrr", (m, 0, 0, None, None, None),
+        assoc, b, data_sizes, freqs, uplink, downlink)

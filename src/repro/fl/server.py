@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core import association as assoc_mod
 from repro.core import blockchain as bc
-from repro.core import comms, faults as faults_mod, hierarchy, latency
+from repro.core import comms, consensus as consensus_mod
+from repro.core import faults as faults_mod, hierarchy, latency
 from repro.models import cnn
 
 
@@ -54,6 +55,12 @@ class FLConfig:
     attack_boost: float = 5.0    # model-replacement update scaling
     faults: Optional[faults_mod.FaultConfig] = None  # straggler/outage
     #                              injection into the Eq. 12-17 accounting
+    # consensus axis (repro.core.consensus): swap the fixed Eq. 16 block
+    # term for the PBFT latency model inside the Eq. 17 round budget and
+    # share the chain knobs (stake, reward, tolerance) with the host
+    # DPoSChain ledger. A scenario row's byzantine/quorum/block-size axes
+    # override the config's scalars.
+    consensus: Optional[consensus_mod.ConsensusConfig] = None
 
 
 class DTWNSystem:
@@ -86,7 +93,8 @@ class DTWNSystem:
         self._row_outage: Optional[float] = None
         self.malicious = np.zeros(cfg.n_users, bool)
         if scenario is not None:
-            from repro.core.scenario import fault_row, population_row
+            from repro.core.scenario import (consensus_row, fault_row,
+                                             population_row)
 
             batch, row = scenario
             sizes, alpha = population_row(batch, row, cfg.n_users)
@@ -99,6 +107,19 @@ class DTWNSystem:
             if mal is not None:
                 self.malicious = mal
             self._row_straggler, self._row_outage = s_rate, o_rate
+            if cfg.consensus is not None:
+                # the row's byzantine/quorum/block-size axes override the
+                # config scalars — the SAME values the vmapped
+                # ``scenario.run_consensus`` scores for this row
+                byz, qf, blk = consensus_row(batch, row)
+                over = {k: v for k, v in (("byzantine_frac", byz),
+                                          ("quorum_f", qf),
+                                          ("block_size_bits", blk))
+                        if v is not None}
+                if over:
+                    self.cfg = cfg = dataclasses.replace(
+                        cfg, consensus=dataclasses.replace(cfg.consensus,
+                                                           **over))
         elif cfg.partition == "dirichlet":
             self.shards = dirichlet_partition(
                 self.y, cfg.n_users,
@@ -122,10 +143,16 @@ class DTWNSystem:
         self._fault_key = jax.random.PRNGKey(seed + 17)
         self.wireless = comms.WirelessConfig(n_bs=cfg.n_bs)
         self.lat = latency.LatencyParams()
+        # host audit-trail ledger shares its knobs with the vectorized
+        # consensus core when the workload is on — one source of truth for
+        # stake init / reward / tolerance across both representations
+        chain_kw = {} if cfg.consensus is None else dict(
+            s_ini=cfg.consensus.s_ini, reward=cfg.consensus.reward,
+            tolerance=cfg.consensus.tolerance)
         self.chain = bc.DPoSChain(
             cfg.n_bs,
             twin_data_per_node=[1.0] * cfg.n_bs,  # re-staked after association
-            n_producers=min(3, cfg.n_bs))
+            n_producers=min(3, cfg.n_bs), **chain_kw)
         key = jax.random.PRNGKey(seed)
         self.params = cnn.init_params(key)
         self._round = 0
@@ -230,12 +257,16 @@ class DTWNSystem:
                 jnp.asarray(assoc), jnp.asarray(b),
                 jnp.asarray(self.data_sizes), jnp.asarray(self.freqs),
                 up, down, straggler_rate=self._row_straggler,
-                outage_rate=self._row_outage))
+                outage_rate=self._row_outage, consensus=cfg.consensus))
         else:
             t_round = float(latency.round_time(
                 self.lat, jnp.asarray(assoc), jnp.asarray(b),
                 jnp.asarray(self.data_sizes), jnp.asarray(self.freqs),
-                up, down))
+                up, down, consensus=cfg.consensus))
+        # the block term inside t_round: Eq. 16 oracle when consensus is
+        # None, the PBFT pre-prepare/prepare/commit model otherwise
+        t_consensus = float(latency.consensus_term(
+            self.lat, down, jnp.asarray(self.freqs), cfg.consensus))
 
         # --- local training on a sample of twins ---
         chosen = self._rng.choice(cfg.n_users,
@@ -325,6 +356,7 @@ class DTWNSystem:
         return {
             "round": self._round,
             "round_time_s": t_round,
+            "consensus_time_s": t_consensus,
             "loss": self.holdout_loss(self.params),
             "n_verified": sum(verdicts.values()) if verdicts else 0,
             "n_submitted": len(verdicts),

@@ -433,6 +433,41 @@ def segment_min(values, assoc, num_segments: int, *,
                             axis_name=axis_name)
 
 
+def segment_median(values, assoc, num_segments: int) -> jnp.ndarray:
+    """Per-segment median, numpy semantics (middle-two average), fp32.
+
+    Sort-backend by-product like :func:`sort_groups`: one lexicographic sort
+    (segment id primary, value secondary) makes every segment a contiguous
+    *value-sorted* slice, then two gathers pick the middle elements.
+    Out-of-range ids are dropped — the consensus verifier
+    (``repro.core.consensus.verify_metas``) routes non-submitters to id M so
+    they never move a committee's median. Empty segments return 0.
+
+    Order-statistic, not a sum — there is no sharded combining rule, so this
+    is sort-path-only: under an active twin scope the inputs must be
+    replicated (M-sized per-BS rows), not twin-sharded.
+    """
+    v = jnp.asarray(values, jnp.float32)
+    a = jnp.asarray(assoc)
+    order = jnp.lexsort((v, a))
+    sa = jnp.take(a, order)
+    sv = jnp.take(v, order)
+    # method="compare_all" (dense comparisons, O(n * num_segments)) keeps
+    # the boundary search free of lax.scan AND of sorting the constant
+    # query — both break the shard_map replication checker when the median
+    # feeds a scan carry (the consensus chain under run_consensus_sharded);
+    # num_segments is the BS/committee count here, so dense is cheap
+    bounds = jnp.searchsorted(sa, jnp.arange(num_segments + 1), side="left",
+                              method="compare_all").astype(jnp.int32)
+    cnt = bounds[1:] - bounds[:-1]
+    c = jnp.maximum(cnt, 1)
+    last = v.shape[0] - 1
+    lo = jnp.clip(bounds[:-1] + (c - 1) // 2, 0, last)
+    hi = jnp.clip(bounds[:-1] + c // 2, 0, last)
+    med = 0.5 * (jnp.take(sv, lo) + jnp.take(sv, hi))
+    return jnp.where(cnt > 0, med, 0.0)
+
+
 def segment_std(values, assoc, num_segments: int, *, backend: str = "auto"
                 ) -> jnp.ndarray:
     """Per-segment population std (ddof=0) via two moment sums.

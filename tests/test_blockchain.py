@@ -125,6 +125,133 @@ def test_same_loss_models_distinct_hashes_round_trip():
     assert chain.verify_round() == {0: True, 1: True}
 
 
+def test_verified_senders_excludes_rejected_sender():
+    # regression: verified_senders used to return every train_model sender
+    # of the round — including ones verify_round REJECTED.  Verdicts are
+    # now stamped on-chain and filtered.
+    chain = bc.DPoSChain(3, [1.0, 1.0, 1.0], tolerance=0.5)
+    chain.submit_model(0, _params(0.1), round_=0, holdout_loss=0.40)
+    chain.submit_model(1, _params(0.2), round_=0, holdout_loss=0.50)
+    chain.submit_model(2, _params(9.9), round_=0, holdout_loss=5.00)
+    verdicts = chain.verify_round()
+    chain.produce_block()
+    assert verdicts[2] is False
+    assert sorted(chain.verified_senders(0)) == [0, 1]  # 2 excluded
+
+
+def test_verified_senders_excludes_never_verified_submission():
+    # a block produced WITHOUT a verify_round carries no verdict meta;
+    # its senders must not count as verified
+    chain = bc.DPoSChain(2, [1.0, 1.0])
+    chain.submit_model(0, _params(1.0), round_=0, holdout_loss=0.2)
+    chain.produce_block()
+    assert chain.verified_senders(0) == []
+
+
+def test_validate_chain_rejects_forged_producer_with_valid_hashes():
+    # a forger who rewrites a block's producer AND consistently recomputes
+    # the downstream hash chain still fails the audit: the stake-trajectory
+    # replay re-derives the eligible producer at every height
+    chain = bc.DPoSChain(3, [3.0, 2.0, 1.0], n_producers=2)
+    for r in range(3):
+        chain.submit_model(0, _params(float(r)), round_=r, holdout_loss=0.1)
+        chain.verify_round()
+        chain.produce_block()
+    assert chain.validate_chain()
+    forged = dataclasses.replace(chain.blocks[1], producer=2)  # not eligible
+    forged = dataclasses.replace(forged, hash=forged.compute_hash())
+    chain.blocks[1] = forged
+    prev = forged.hash
+    for i in range(2, len(chain.blocks)):
+        blk = dataclasses.replace(chain.blocks[i], prev_hash=prev)
+        blk = dataclasses.replace(blk, hash=blk.compute_hash())
+        chain.blocks[i] = blk
+        prev = blk.hash
+    assert not chain.validate_chain()
+
+
+def test_validate_chain_rejects_stripped_verdict_meta():
+    # stripping a verdict flips the replayed stake trajectory; since the tx
+    # digests feed the block hash, the naive strip also breaks the hashes —
+    # and a recomputed hash chain then fails the producer replay whenever
+    # the forged trajectory changes an election
+    chain = bc.DPoSChain(2, [1.0, 1.1], n_producers=1, reward=5.0)
+    for r in range(4):
+        chain.submit_model(0, _params(float(r)), round_=r, holdout_loss=0.1)
+        chain.verify_round()
+        chain.produce_block()
+    assert chain.validate_chain()
+    blk = chain.blocks[0]
+    tx = blk.transactions[0]
+    stripped = dataclasses.replace(
+        tx, meta=tuple(kv for kv in tx.meta if kv[0] != "verified"))
+    chain.blocks[0] = dataclasses.replace(blk, transactions=(stripped,))
+    assert not chain.validate_chain()
+
+
+# ---------------------------------------------------------------------------
+# two-tier ledger (committees + cross-tier checkpoints)
+# ---------------------------------------------------------------------------
+
+
+def test_two_tier_round_trip_and_global_stakes():
+    chain = bc.TwoTierChain(5, [5.0, 4.0, 3.0, 2.0, 1.0], n_groups=2,
+                            reward=1.0, tolerance=0.5)
+    # committees are round-robin: {0,2,4} and {1,3}
+    assert chain.members == [[0, 2, 4], [1, 3]]
+    for s in range(5):
+        chain.submit_model(s, _params(float(s)), round_=0,
+                           holdout_loss=0.2 + 0.01 * s)
+    stakes0 = chain.stakes
+    verdicts = chain.verify_round()
+    assert verdicts == {s: True for s in range(5)}
+    anchor = chain.produce_round()
+    assert chain.validate()
+    # every verified BS earned its committee's reward in the GLOBAL view
+    assert all(chain.stakes[s] == stakes0[s] + 1.0 for s in range(5))
+    assert len(anchor.transactions) == 2  # one checkpoint per committee
+
+
+def test_two_tier_committee_local_median_gate():
+    # committee {1,3}: one poisoned member is gated against its OWN
+    # committee's median, not the global one
+    chain = bc.TwoTierChain(4, [1.0, 1.0, 1.0, 1.0], n_groups=2,
+                            tolerance=0.5)
+    chain.submit_model(0, _params(0.0), round_=0, holdout_loss=0.40)
+    chain.submit_model(2, _params(0.1), round_=0, holdout_loss=0.50)
+    chain.submit_model(1, _params(0.2), round_=0, holdout_loss=0.30)
+    chain.submit_model(3, _params(9.9), round_=0, holdout_loss=6.00)
+    verdicts = chain.verify_round()
+    assert verdicts == {0: True, 2: True, 1: True, 3: False}
+
+
+def test_two_tier_tamper_breaks_cross_tier_checkpoint():
+    chain = bc.TwoTierChain(4, [4.0, 3.0, 2.0, 1.0], n_groups=2)
+    for r in range(2):
+        for s in range(4):
+            chain.submit_model(s, _params(float(r * 4 + s)), round_=r,
+                               holdout_loss=0.2)
+        chain.verify_round()
+        chain.produce_round()
+    assert chain.validate()
+    # consistently rewrite committee 0's chain (hashes recomputed) — the
+    # tier-2 checkpoint no longer matches
+    c0 = chain.tier1[0]
+    blk = c0.blocks[0]
+    forged_tx = dataclasses.replace(blk.transactions[0],
+                                    payload_hash="e" * 64)
+    blk = dataclasses.replace(blk, transactions=(forged_tx,))
+    blk = dataclasses.replace(blk, hash=blk.compute_hash())
+    c0.blocks[0] = blk
+    prev = blk.hash
+    for i in range(1, len(c0.blocks)):
+        b = dataclasses.replace(c0.blocks[i], prev_hash=prev)
+        b = dataclasses.replace(b, hash=b.compute_hash())
+        c0.blocks[i] = b
+        prev = b.hash
+    assert not chain.validate()
+
+
 # ---------------------------------------------------------------------------
 # suspect-aware verification (repro.core.faults robust-aggregation meta)
 # ---------------------------------------------------------------------------

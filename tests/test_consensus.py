@@ -1,0 +1,463 @@
+"""Consensus workload tests (repro.core.consensus).
+
+Fast tests pin: the segment-median kernel against numpy, the vectorized
+election/verification against the host DPoSChain ledger (bit-parity on
+fuzzed metas — deterministic grid always, hypothesis when installed), the
+PBFT latency model's contract (zero-byzantine parity with the Eq. 16
+oracle <= 1e-6, quorum monotonicity, BS-permutation invariance, two-tier
+G=1 degeneracy), the multi-round ChainState vs host stake trajectory, and
+the scenario/env wiring (legacy identity at f=0, byz=0). The 8-forced-
+host-device bit-parity suite runs as a slow subprocess test (the
+test_sharding.py pattern) and inside ``bench_scale --sharded-gate``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import blockchain as bc
+from repro.core import consensus, latency, scenario
+from repro.core.consensus import ChainState, ConsensusConfig
+from repro.core.marl.env import EnvConfig
+from repro.kernels.segment_reduce import segment_median
+
+KEY = jax.random.PRNGKey(0)
+LP = latency.LatencyParams()
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _rates(m, seed=0, lo=1e6, hi=2e7):
+    k = jax.random.fold_in(KEY, seed)
+    kd, kf = jax.random.split(k)
+    down = jax.random.uniform(kd, (m,), minval=lo, maxval=hi)
+    freqs = jax.random.uniform(kf, (m,), minval=1e9, maxval=4e9)
+    return down, freqs
+
+
+# ---------------------------------------------------------------------------
+# segment_median kernel
+# ---------------------------------------------------------------------------
+
+
+def test_segment_median_matches_numpy_grouped():
+    rng = np.random.RandomState(3)
+    for trial in range(30):
+        n = rng.randint(1, 40)
+        g = rng.randint(1, 6)
+        vals = rng.uniform(-5, 5, size=n).astype(np.float32)
+        seg = rng.randint(0, g + 1, size=n)  # g = out-of-range (dropped)
+        got = np.asarray(segment_median(jnp.asarray(vals),
+                                        jnp.asarray(seg), g))
+        for s in range(g):
+            sel = vals[seg == s]
+            want = np.median(sel.astype(np.float32)) if sel.size else 0.0
+            assert got[s] == np.float32(want), (trial, s, sel)
+
+
+def test_segment_median_empty_and_singleton():
+    got = np.asarray(segment_median(jnp.asarray([2.0, 7.0], jnp.float32),
+                                    jnp.asarray([1, 1]), 3))
+    np.testing.assert_array_equal(got, [0.0, 4.5, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# election parity with the host ledger
+# ---------------------------------------------------------------------------
+
+
+def _host_elect(stakes, k):
+    return sorted(range(len(stakes)),
+                  key=lambda i: (-stakes[i], i))[:k]
+
+
+def test_elect_producers_matches_host_tie_rule():
+    rng = np.random.RandomState(11)
+    for trial in range(50):
+        m = rng.randint(2, 12)
+        # quantized stakes force frequent exact ties
+        stakes = (rng.randint(0, 4, size=m) * 10.0).astype(np.float32)
+        k = rng.randint(1, m + 1)
+        got = list(np.asarray(consensus.elect_producers(
+            jnp.asarray(stakes), k)))
+        assert got == _host_elect(list(stakes), k), (trial, stakes, k)
+
+
+# ---------------------------------------------------------------------------
+# PBFT latency model contract
+# ---------------------------------------------------------------------------
+
+
+def test_zero_byzantine_parity_with_eq16_oracle():
+    down, freqs = _rates(6)
+    ccfg = ConsensusConfig(quorum_f=0, byzantine_frac=0.0)
+    t = consensus.t_consensus(LP, ccfg, down, freqs)
+    ref = latency.t_block_validation(LP, down, freqs)
+    assert abs(float(t) - float(ref)) <= 1e-6
+
+
+def test_round_time_consensus_mode_zero_byz_identical_to_legacy():
+    n, m = 24, 4
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    assoc = jax.random.randint(k1, (n,), 0, m)
+    b = jax.random.uniform(k2, (n,), minval=0.2, maxval=1.0)
+    data = jax.random.uniform(k3, (n,), minval=100, maxval=900)
+    down, freqs = _rates(m, seed=5)
+    up = down * 0.5  # (M,) per-BS uplink rates
+    legacy = latency.round_time(LP, assoc, b, data, freqs, up, down)
+    cons = latency.round_time(
+        LP, assoc, b, data, freqs, up, down,
+        consensus=ConsensusConfig(quorum_f=0, byzantine_frac=0.0))
+    assert abs(float(legacy) - float(cons)) <= 1e-6
+
+
+def test_quorum_wait_monotone_in_f():
+    down, freqs = _rates(7, seed=1)
+    prev = -1.0
+    for f in range(4):
+        t = float(consensus.t_consensus(
+            LP, ConsensusConfig(quorum_f=f), down, freqs))
+        assert t >= prev, (f, t, prev)
+        prev = t
+    # f >= 1 strictly exceeds the f=0 oracle
+    t0 = float(consensus.t_consensus(LP, ConsensusConfig(quorum_f=0),
+                                     down, freqs))
+    t1 = float(consensus.t_consensus(LP, ConsensusConfig(quorum_f=1),
+                                     down, freqs))
+    assert t1 > t0
+
+
+def test_byzantine_fraction_inflates_view_changes():
+    down, freqs = _rates(5, seed=2)
+    ts = [float(consensus.t_consensus(
+        LP, ConsensusConfig(quorum_f=1, byzantine_frac=p), down, freqs))
+        for p in (0.0, 0.2, 0.4)]
+    assert ts[0] < ts[1] < ts[2]
+
+
+def test_t_consensus_invariant_under_bs_permutation():
+    down, freqs = _rates(8, seed=3)
+    perm = jax.random.permutation(jax.random.fold_in(KEY, 9), 8)
+    ccfg = ConsensusConfig(quorum_f=2, byzantine_frac=0.1)
+    a = float(consensus.t_consensus(LP, ccfg, down, freqs))
+    b = float(consensus.t_consensus(LP, ccfg, down[perm], freqs[perm]))
+    assert a == b
+
+
+def test_two_tier_single_group_degenerates_to_flat():
+    down, freqs = _rates(6, seed=4)
+    ccfg = ConsensusConfig(quorum_f=1, byzantine_frac=0.15, n_groups=1)
+    flat = consensus.t_consensus(LP, ccfg, down, freqs)
+    two = consensus.t_consensus_two_tier(LP, ccfg, down, freqs, n_groups=1)
+    assert float(flat) == float(two)
+
+
+def test_two_tier_finite_and_dispatched():
+    down, freqs = _rates(9, seed=6)
+    ccfg = ConsensusConfig(quorum_f=1, n_groups=3)
+    t = float(consensus.consensus_time(LP, ccfg, down, freqs))
+    assert np.isfinite(t) and t > 0.0
+    # dispatch: n_groups=1 config routes to the flat model
+    flat_cfg = ConsensusConfig(quorum_f=1, n_groups=1)
+    assert float(consensus.consensus_time(LP, flat_cfg, down, freqs)) == \
+        float(consensus.t_consensus(LP, flat_cfg, down, freqs))
+
+
+# ---------------------------------------------------------------------------
+# vectorized verification vs host ledger (fuzzed metas)
+# ---------------------------------------------------------------------------
+
+
+def _np_verify_reference(losses, n_clients, n_suspect, tolerance):
+    """Independent float32 numpy re-statement of the original host
+    predicate: loss <= median + tolerance, cohort not majority-suspect."""
+    losses = np.asarray(losses, np.float32)
+    med = np.median(losses).astype(np.float32)
+    out = {}
+    for i, l in enumerate(losses):
+        ok = l <= med + np.float32(tolerance)
+        if n_clients[i] is not None and n_suspect[i] is not None:
+            ok = ok and not (n_suspect[i] * 2 > n_clients[i])
+        out[i] = bool(ok)
+    return out
+
+
+def _fuzz_case(rng):
+    m = rng.randint(1, 9)
+    losses = rng.choice(
+        [0.1, 0.25, 0.5, 0.5, 0.75, 1.0, 5.0], size=m).astype(np.float32)
+    with_meta = rng.rand() < 0.5
+    if with_meta:
+        n_cli = rng.randint(1, 9, size=m)
+        n_sus = np.minimum(rng.randint(0, 9, size=m), n_cli)
+        n_cli_l = [int(c) for c in n_cli]
+        n_sus_l = [int(s) for s in n_sus]
+    else:
+        n_cli_l = [None] * m
+        n_sus_l = [None] * m
+    tol = float(rng.choice([0.0, 0.25, 0.5]))
+    return losses, n_cli_l, n_sus_l, tol
+
+
+def _check_triple_parity(losses, n_cli, n_sus, tol):
+    m = len(losses)
+    want = _np_verify_reference(losses, n_cli, n_sus, tol)
+    got = consensus.verify_metas(
+        jnp.asarray(losses), jnp.ones((m,), bool), tolerance=tol,
+        n_clients=jnp.asarray([0 if c is None else c for c in n_cli],
+                              jnp.float32),
+        n_suspect=jnp.asarray([0 if s is None else s for s in n_sus],
+                              jnp.float32))
+    assert {i: bool(v) for i, v in enumerate(np.asarray(got))} == want
+    chain = bc.DPoSChain(m, [1.0] * m, tolerance=tol)
+    for i in range(m):
+        kw = {} if n_cli[i] is None else dict(n_clients=n_cli[i],
+                                              n_suspect=n_sus[i])
+        chain.submit_model(i, {"w": jnp.full((2,), float(i))}, round_=0,
+                           holdout_loss=float(losses[i]), **kw)
+    assert chain.verify_round() == want
+
+
+def test_verify_metas_matches_host_and_numpy_reference_grid():
+    rng = np.random.RandomState(23)
+    for _ in range(60):
+        _check_triple_parity(*_fuzz_case(rng))
+
+
+def test_verify_metas_hypothesis_fuzz():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.floats(0.0, 8.0, width=32), min_size=1,
+                        max_size=8),
+               st.integers(0, 3))
+    @hyp.settings(max_examples=60, deadline=None)
+    def inner(losses, tol_q):
+        losses = np.asarray(losses, np.float32)
+        m = len(losses)
+        _check_triple_parity(losses, [None] * m, [None] * m, tol_q * 0.25)
+
+    inner()
+
+
+def test_verify_metas_nonsubmitters_excluded_from_median():
+    # the median is over SUBMITTED losses only; non-submitters get False
+    losses = jnp.asarray([0.4, 0.5, 99.0, 5.0], jnp.float32)
+    sub = jnp.asarray([True, True, False, True])
+    v = np.asarray(consensus.verify_metas(losses, sub, tolerance=0.5))
+    # submitted median = 5.0's cohort median([0.4, 0.5, 5.0]) = 0.5
+    np.testing.assert_array_equal(v, [True, True, False, False])
+
+
+def test_verify_metas_committee_local_medians():
+    # two committees gate against their own medians (two-tier host twin)
+    losses = jnp.asarray([0.4, 5.0, 0.5, 5.2], jnp.float32)
+    group = jnp.asarray([0, 1, 0, 1])
+    v = np.asarray(consensus.verify_metas(
+        losses, jnp.ones((4,), bool), tolerance=0.5, group=group,
+        n_groups=2))
+    # committee 1's median is 5.1 — its big losses pass their OWN gate
+    np.testing.assert_array_equal(v, [True, True, True, True])
+    v_flat = np.asarray(consensus.verify_metas(
+        losses, jnp.ones((4,), bool), tolerance=0.5))
+    np.testing.assert_array_equal(v_flat, [True, False, True, False])
+
+
+# ---------------------------------------------------------------------------
+# multi-round chain trajectory vs host ledger
+# ---------------------------------------------------------------------------
+
+
+def test_chain_state_stake_trajectory_matches_host_ledger():
+    m, rounds = 5, 6
+    data = [50.0, 125.0, 75.0, 100.0, 150.0]
+    ccfg = ConsensusConfig(quorum_f=1, reward=2.0, tolerance=0.5,
+                           s_ini=100.0)
+    state = consensus.chain_init(ccfg, jnp.asarray(data))
+    chain = bc.DPoSChain(m, data, s_ini=100.0, reward=2.0, tolerance=0.5,
+                         n_producers=3)
+    np.testing.assert_allclose(np.asarray(state.stakes), chain.stakes,
+                               rtol=1e-6)
+    rng = np.random.RandomState(5)
+    for r in range(rounds):
+        losses = rng.uniform(0.1, 1.2, size=m).astype(np.float32)
+        losses[rng.randint(m)] += 4.0  # one outlier per round
+        # host producer schedule must match the device election each height
+        assert int(consensus.current_producer(state, 3)) == \
+            chain.current_producer()
+        state, v = consensus.apply_round(ccfg, state,
+                                         jnp.asarray(losses),
+                                         jnp.ones((m,), bool))
+        for i in range(m):
+            chain.submit_model(i, {"w": jnp.full((2,), float(i))},
+                               round_=r, holdout_loss=float(losses[i]))
+        verdicts = chain.verify_round()
+        chain.produce_block()
+        assert {i: bool(x) for i, x in enumerate(np.asarray(v))} == verdicts
+        np.testing.assert_allclose(np.asarray(state.stakes), chain.stakes,
+                                   rtol=1e-6)
+    assert chain.validate_chain()
+    assert int(state.round) == len(chain.blocks)
+
+
+def test_chain_round_rejects_byzantine_submitters():
+    ccfg = ConsensusConfig(quorum_f=1, byzantine_frac=0.4)
+    m = 6
+    state = consensus.chain_init(ccfg, jnp.full((m,), 100.0))
+    byz = jnp.asarray([False, True, False, False, True, False])
+    occ = jnp.ones((m,))
+    share0 = float(consensus.honest_stake_share(state, byz))
+    for r in range(4):
+        state, v, frac = consensus.chain_round(
+            ccfg, state, jax.random.fold_in(KEY, r), byz, occ)
+        v = np.asarray(v)
+        assert not v[1] and not v[4]          # +2.0 loss offset > tolerance
+        assert v[[0, 2, 3, 5]].all()
+        assert abs(float(frac) - 4.0 / 6.0) < 1e-6
+    # honest BSs accrue all rewards: their stake share strictly grows
+    assert float(consensus.honest_stake_share(state, byz)) > share0
+
+
+def test_accept_rate_and_stake_share_observation_features():
+    ccfg = ConsensusConfig(history=4)
+    state = consensus.chain_init(ccfg, jnp.asarray([100.0, 300.0]))
+    np.testing.assert_allclose(np.asarray(consensus.accept_rate(state)),
+                               [1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(consensus.stake_share(state)),
+                               [0.25, 0.75])
+    state, _ = consensus.apply_round(ccfg, state,
+                                     jnp.asarray([0.1, 9.0]),
+                                     jnp.ones((2,), bool))
+    assert float(consensus.accept_rate(state)[1]) == 0.75  # 3 prior + reject
+
+
+# ---------------------------------------------------------------------------
+# scenario + env wiring
+# ---------------------------------------------------------------------------
+
+
+def test_run_consensus_shapes_and_zero_byz_identity():
+    cfg = EnvConfig(n_twins=18, n_bs=4)
+    batch = scenario.make_batch(jax.random.PRNGKey(4), 3)
+    ccfg = ConsensusConfig(quorum_f=0, byzantine_frac=0.0)
+    out = scenario.run_consensus(cfg, ccfg, batch, n_rounds=5)
+    assert out["round_times"].shape == (3, 5)
+    assert out["accept_frac"].shape == (3, 5)
+    for k in ("consensus_time", "legacy_block_time", "honest_stake_share"):
+        assert out[k].shape == (3,)
+    # f=0, byz=0: the PBFT term IS the Eq. 16 oracle, per scenario
+    np.testing.assert_allclose(np.asarray(out["consensus_time"]),
+                               np.asarray(out["legacy_block_time"]),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out["honest_stake_share"]), 1.0)
+
+
+def test_run_consensus_batch_axes_drive_latency():
+    cfg = EnvConfig(n_twins=12, n_bs=3)
+    key = jax.random.PRNGKey(8)
+    lo = scenario.make_batch(key, 2, byzantine=(0.0, 0.0), quorum=(0, 0))
+    hi = scenario.make_batch(key, 2, byzantine=(0.3, 0.3), quorum=(2, 2))
+    ccfg = ConsensusConfig()
+    t_lo = np.asarray(scenario.run_consensus(cfg, ccfg, lo,
+                                             n_rounds=2)["consensus_time"])
+    t_hi = np.asarray(scenario.run_consensus(cfg, ccfg, hi,
+                                             n_rounds=2)["consensus_time"])
+    assert (t_hi > t_lo).all()
+
+
+def test_consensus_row_none_and_values():
+    clean = scenario.make_batch(jax.random.PRNGKey(1), 2)
+    assert scenario.consensus_row(clean, 0) == (None, None, None)
+    batch = scenario.make_batch(jax.random.PRNGKey(1), 2,
+                                byzantine=(0.1, 0.2), quorum=(1, 1),
+                                block_size=(2e6, 2e6))
+    byz, qf, sb = scenario.consensus_row(batch, 1)
+    assert 0.1 <= byz <= 0.2 and qf == 1 and sb == 2e6
+
+
+def test_clean_batch_draws_unchanged_by_consensus_axes():
+    # the consensus axes ride folded side streams: a clean batch draws
+    # exactly what it drew before the axes existed
+    a = scenario.make_batch(jax.random.PRNGKey(6), 3)
+    b = scenario.make_batch(jax.random.PRNGKey(6), 3,
+                            byzantine=(0.1, 0.3), quorum=(0, 2))
+    for f in ("key", "data_min", "data_max", "skew"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)))
+    assert a.byzantine is None and b.byzantine is not None
+
+
+def test_env_step_consensus_reduces_to_legacy_at_f0():
+    from repro.core.marl import env as env_mod
+
+    cfg0 = EnvConfig(n_twins=10, n_bs=3)
+    cfg1 = EnvConfig(n_twins=10, n_bs=3,
+                     consensus=ConsensusConfig(quorum_f=0,
+                                               byzantine_frac=0.0))
+    key = jax.random.PRNGKey(12)
+    st0 = env_mod.env_reset(cfg0, key)
+    st1 = env_mod.env_reset(cfg1, key)
+    from repro.core.marl.spaces import zeros_action
+    a = zeros_action(cfg1)
+    n0, r0, i0 = env_mod.env_step(cfg0, st0, a, key)
+    n1, r1, i1 = env_mod.env_step(cfg1, st1, a, key)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1), atol=1e-6)
+    np.testing.assert_allclose(float(i0["system_time"]),
+                               float(i1["system_time"]), atol=1e-6)
+    assert float(i1["consensus_time"]) > 0.0
+    assert "consensus_time" not in i0
+    assert n1.chain is not None and int(n1.chain.round) == 1
+    assert "accept_frac" in i1
+
+
+@pytest.mark.slow
+def test_run_consensus_sharded_bit_parity_8_devices():
+    """Single-device vs 8-forced-host-device consensus runner parity —
+    chain trajectories, PBFT terms, accept fractions — on divisible and
+    ragged twin populations (the test_migration.py subprocess pattern)."""
+    code = """
+        import jax, numpy as np
+        from repro.core import scenario
+        from repro.core.consensus import ConsensusConfig
+        from repro.core.marl.env import EnvConfig
+        from repro.core.sharding import TwinSharding
+
+        ts = TwinSharding.make()
+        assert ts.n_shards == 8, ts.n_shards
+        ccfg = ConsensusConfig(quorum_f=1, byzantine_frac=0.2)
+        for n, m in [(64, 5), (37, 4)]:
+            cfg = EnvConfig(n_twins=n, n_bs=m)
+            batch = scenario.make_batch(jax.random.PRNGKey(3), 3,
+                                        byzantine=(0.0, 0.4),
+                                        quorum=(0, 2),
+                                        block_size=(1e6, 8e6))
+            out = scenario.run_consensus_sharded(ts, cfg, ccfg, batch,
+                                                 n_rounds=4)
+            ref = scenario.run_consensus(cfg, ccfg, batch, n_rounds=4)
+            # chain trajectory + PBFT terms are BIT-equal (replicated
+            # draws, identical verdict arithmetic); outputs that cross
+            # the twin axis (psum'd stake/occupancy sums) are allclose
+            # under cross-shard summation reordering (the
+            # test_migration.py precedent)
+            exact = ("accept_frac", "consensus_time", "legacy_block_time")
+            for k in ref:
+                a, b = np.asarray(out[k]), np.asarray(ref[k])
+                if k in exact:
+                    np.testing.assert_array_equal(a, b, err_msg=k)
+                else:
+                    np.testing.assert_allclose(a, b, rtol=1e-6, err_msg=k)
+        print("SHARDED_CONSENSUS_BIT_PARITY_OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=560,
+                         env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "SHARDED_CONSENSUS_BIT_PARITY_OK" in out.stdout
