@@ -41,6 +41,13 @@ A fault/adversary sweep (merged into ``scale.json: faults``):
     is accuracy retention at 30% poisoners (robust rules must hold >= 0.9
     of the clean FedAvg accuracy where plain FedAvg collapses).
 
+A streaming-service sweep (merged into ``scale.json: streaming``):
+  * ``--serve`` — the always-on serving loop (``repro.core.serve``) at
+    N=10^5: rounds/s of the donated device-resident streaming step
+    (pipelined vs block-every-round) against the batch scan runner on the
+    same scenario row, plus a churn-rate sweep (>= 20 rounds of live
+    join/leave per rate, population accounting recorded).
+
 A consensus sweep (merged into ``scale.json: consensus``):
   * ``--consensus`` — the PBFT grid: byzantine fraction x quorum f x block
     size through ``scenario.run_consensus`` (every cell rides the
@@ -83,6 +90,10 @@ scan-train run, the scenario runner, the migration step/env/runner,
 the fault-injection draws/round-time/runner, and the consensus chain
 runner
 must match the single-device path on ragged and empty-shard populations),
+plus the streaming-service gate (``--serve-gate`` in the same 8-device
+subprocess: K sharded serve rounds at fixed population must match the
+batch runners per axis, and churned rounds must keep the mask accounting
+and padding convention),
 exiting nonzero on mismatch — kernel, policy, sharding, or migration
 regressions fail fast without waiting for the full bench.
 """
@@ -114,9 +125,10 @@ _FLAT_MAX_TWINS = 2000
 # sections whose sub-keys are owned by DIFFERENT entry points (e.g.
 # "heterogeneity" collects --alpha population/partition stats and the
 # --migration sweep; "faults" collects the --faults attack grid;
-# "consensus" collects the --consensus PBFT grid and FL pair) — merged
+# "consensus" collects the --consensus PBFT grid and FL pair;
+# "streaming" collects the --serve throughput/churn sweep) — merged
 # one level deep instead of replaced wholesale
-_DEEP_MERGE_KEYS = ("heterogeneity", "faults", "consensus")
+_DEEP_MERGE_KEYS = ("heterogeneity", "faults", "consensus", "streaming")
 
 
 def merge_into_scale(sections: dict) -> None:
@@ -1059,6 +1071,176 @@ def consensus_sweep(n_scenarios: int = 4, n_rounds: int = 8,
     }
 
 
+def serve_gate() -> None:
+    """The streaming-service parity gate (CI, 8 forced host devices):
+    K rounds of the sharded ``repro.core.serve`` loop at a fixed full
+    population must match the batch runners on the same scenario row —
+    divisible (N=64 migration), ragged (N=37 faults), and empty-shard
+    (N=5 consensus) populations — plus quick churn invariants (per-round
+    mask accounting and the padding convention on the final state).
+    Raises on any mismatch."""
+    import numpy as np
+
+    from repro.core import scenario, serve
+    from repro.core.consensus import ConsensusConfig
+    from repro.core.faults import FaultConfig
+    from repro.core.migration import MigrationConfig
+    from repro.core.sharding import TwinSharding
+
+    ts = TwinSharding.make()
+    batch = scenario.make_batch(jax.random.PRNGKey(0), 2,
+                                straggler=(0.1, 0.4), outage=(0.05, 0.3),
+                                byzantine=(0.0, 0.4), quorum=(0.0, 2.0),
+                                block_size=(1e6, 8e6))
+    k_rounds, i = 4, 1
+    cases = [
+        ("faults", EnvConfig(n_twins=37, n_bs=5,
+                             faults=FaultConfig(0.3, 0.2, 0.25))),
+        ("migration", EnvConfig(n_twins=64, n_bs=5,
+                                migration=MigrationConfig(0.4, 1.5, 0.8))),
+        ("consensus", EnvConfig(n_twins=5, n_bs=5,
+                                consensus=ConsensusConfig(quorum_f=1))),
+    ]
+    for name, cfg in cases:
+        scfg = serve.ServeConfig(capacity=cfg.n_twins)
+        knobs = scenario.stream_knobs(batch, fcfg=cfg.faults,
+                                      ccfg=cfg.consensus, lat=cfg.lat)
+        row = scenario.knob_row(knobs, i)
+        init = serve.make_serve_init(cfg, scfg, ts=ts)
+        state = init(batch.key[i], row)
+        step = serve.make_round_step(cfg, scfg, ts=ts)
+        keys = serve.stream_keys(batch.key[i], k_rounds)
+        state, m = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                      step=step, overlap=False)
+        m = serve.stack_metrics(m)
+        if name == "faults":
+            ref = scenario.run_faults(cfg, cfg.faults, batch,
+                                      n_rounds=k_rounds)
+        elif name == "migration":
+            ref = scenario.run_migration(cfg, cfg.migration, batch,
+                                         n_rounds=k_rounds)
+        else:
+            ref = scenario.run_consensus(cfg, cfg.consensus, batch,
+                                         n_rounds=k_rounds)
+        np.testing.assert_allclose(
+            m["round_time"], np.asarray(ref["round_times"])[i], rtol=1e-6,
+            err_msg=f"serve-vs-batch round_time, axis={name} "
+                    f"N={cfg.n_twins} shards={ts.n_shards}")
+        assert int(m["n_active"][-1]) == cfg.n_twins, (name, m["n_active"])
+    print(f"serve parity ok on {ts.n_shards} shards "
+          "(divisible/ragged/empty-shard populations)")
+
+    # --- churn invariants under the sharded step ---
+    cfg = EnvConfig(n_twins=64, n_bs=5)
+    scfg = serve.ServeConfig(capacity=64, join_rate=0.15, leave_rate=0.15)
+    knobs = scenario.stream_knobs(batch)
+    row = scenario.knob_row(knobs, 0)
+    init = serve.make_serve_init(cfg, scfg, ts=ts, n_live=48)
+    state = init(batch.key[0], row)
+    step = serve.make_round_step(cfg, scfg, ts=ts)
+    keys = serve.stream_keys(batch.key[0], 6)
+    pop = 48
+    for t in range(6):
+        state, m = step(state, serve.round_keys(keys, t), row)
+        m = {k: np.asarray(v) for k, v in m.items()}
+        pop = pop + int(m["n_joined"]) - int(m["n_left"])
+        assert int(m["n_active"]) == pop, (t, m)
+        assert np.isfinite(m["round_time"]) and m["round_time"] > 0
+    act = np.asarray(state.active)
+    assoc = np.asarray(state.env.assoc)
+    data = np.asarray(state.env.data_sizes)
+    assert (assoc[~act] == 5).all() and (data[~act] == 0.0).all()
+    assert (assoc[act] < 5).all()
+    print(f"serve churn ok on {ts.n_shards} shards "
+          f"(population 48 -> {pop} over 6 rounds)")
+
+
+def serve_sweep(n: int = 100_000, n_rounds: int = 24,
+                churn_rates=(0.0, 0.01, 0.05)) -> dict:
+    """Streaming-service throughput at N=10^5: rounds/s of the donated
+    streaming step (pipelined and blocking) vs the batch scan runner on
+    the same scenario row, plus a churn-rate sweep (>= 20 rounds of live
+    join/leave per rate). Merged into ``scale.json: streaming``."""
+    import numpy as np
+
+    from repro.core import scenario, serve
+    from repro.core.faults import FaultConfig
+
+    cfg = EnvConfig(n_twins=n, n_bs=10, faults=FaultConfig())
+    batch = scenario.make_batch(jax.random.PRNGKey(0), 1,
+                                straggler=(0.1, 0.3), outage=(0.05, 0.2))
+    knobs = scenario.stream_knobs(batch, fcfg=cfg.faults)
+    row = scenario.knob_row(knobs, 0)
+    row_key = batch.key[0]
+
+    # batch reference: the scan runner, timed post-compile
+    ref = scenario.run_faults(cfg, cfg.faults, batch, n_rounds=n_rounds)
+    jax.block_until_ready(ref["round_times"])
+    t0 = time.time()
+    ref = scenario.run_faults(cfg, cfg.faults, batch, n_rounds=n_rounds)
+    jax.block_until_ready(ref["round_times"])
+    batch_rps = n_rounds / max(time.time() - t0, 1e-9)
+
+    def run(scfg, overlap):
+        step = serve.make_round_step(cfg, scfg)
+        keys = serve.stream_keys(row_key, n_rounds)
+        # warm the compile AND the allocator/thread-pool steady state off
+        # the clock (several rounds — the first executions after a compile
+        # run well below steady-state throughput on XLA-CPU); donation
+        # consumes the state, so warm on a throwaway one
+        state = serve.serve_init(cfg, scfg, row_key, row)
+        serve.serve_rounds(cfg, scfg, state, serve.stream_keys(
+            jax.random.fold_in(row_key, 99), 6), row, step=step,
+            overlap=overlap)
+        best, m = 0.0, None
+        for _ in range(2):  # best-of-2: host/worker thread contention on
+            # shared CPUs makes single timings of the async path erratic
+            state = serve.serve_init(cfg, scfg, row_key, row)
+            t0 = time.time()
+            state, m = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                          step=step, overlap=overlap)
+            m = serve.stack_metrics(m)  # blocks: end of the pipeline
+            best = max(best, n_rounds / max(time.time() - t0, 1e-9))
+        return best, m
+
+    fixed = serve.ServeConfig(capacity=n)
+    stream_rps, m_fixed = run(fixed, overlap=True)
+    blocking_rps, _ = run(fixed, overlap=False)
+    np.testing.assert_allclose(m_fixed["round_time"],
+                               np.asarray(ref["round_times"])[0], rtol=1e-6)
+
+    churn = {}
+    for rate in churn_rates:
+        scfg = serve.ServeConfig(capacity=n, join_rate=rate,
+                                 leave_rate=rate)
+        rps, m = run(scfg, overlap=True)
+        churn[str(rate)] = {
+            "rounds_per_s": rps,
+            "final_population": int(m["n_active"][-1]),
+            "joined": int(m["n_joined"].sum()),
+            "left": int(m["n_left"].sum()),
+            "mean_round_time_s": float(np.mean(m["round_time"])),
+        }
+        assert np.isfinite(m["round_time"]).all()
+
+    out = {
+        "n_twins": n, "n_rounds": n_rounds, "n_bs": 10,
+        "batch_rounds_per_s": batch_rps,
+        "stream_rounds_per_s": stream_rps,
+        "stream_blocking_rounds_per_s": blocking_rps,
+        "overlap_speedup_vs_blocking": stream_rps / max(blocking_rps, 1e-9),
+        "stream_vs_batch": stream_rps / max(batch_rps, 1e-9),
+        "churn_sweep": churn,
+    }
+    print(f"streaming N={n}: batch {batch_rps:.1f} rounds/s, stream "
+          f"{stream_rps:.1f} (pipelined) / {blocking_rps:.1f} (blocking)")
+    for rate, rowd in churn.items():
+        print(f"  churn={rate}: {rowd['rounds_per_s']:.1f} rounds/s, "
+              f"population {n} -> {rowd['final_population']} "
+              f"(+{rowd['joined']}/-{rowd['left']})")
+    return out
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -1150,6 +1332,12 @@ def smoke() -> None:
     print("scale --smoke: sharded parity gate ok on "
           f"{_SHARDED_DEVICES} host devices")
 
+    # --- streaming-service gate (subprocess, same forced device count):
+    # sharded serve loop vs batch runners + churn invariants ---
+    print(_spawn_sharded("--serve-gate").strip())
+    print("scale --smoke: serve gate ok on "
+          f"{_SHARDED_DEVICES} host devices")
+
 
 def main(reduced: bool = True):
     with Timer() as t:
@@ -1235,6 +1423,14 @@ if __name__ == "__main__":
                          "results/bench/scale.json as 'sharded_scaling')")
     ap.add_argument("--sharded-gate", action="store_true",
                     help="[subprocess child] 8-device sharded parity gate")
+    ap.add_argument("--serve", action="store_true",
+                    help="streaming-service throughput sweep at N=10^5: "
+                         "donated streaming step (pipelined/blocking) vs "
+                         "the batch scan runner, plus a churn-rate sweep "
+                         "(merged into scale.json: streaming)")
+    ap.add_argument("--serve-gate", action="store_true",
+                    help="[subprocess child] 8-device streaming-vs-batch "
+                         "parity + churn invariant gate")
     ap.add_argument("--sharded-child", action="store_true",
                     help="[subprocess child] sharded sweep body; prints "
                          "JSON on the last stdout line")
@@ -1264,6 +1460,11 @@ if __name__ == "__main__":
         smoke()
     elif args.sharded_gate:
         sharded_gate()
+    elif args.serve_gate:
+        serve_gate()
+    elif args.serve:
+        merge_into_scale({"streaming": serve_sweep()})
+        print("streaming sweep merged into results/bench/scale.json")
     elif args.sharded_child:
         import json
 

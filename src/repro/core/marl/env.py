@@ -244,6 +244,22 @@ def env_soft_reset(cfg: EnvConfig, st: EnvState, key) -> EnvState:
     )
 
 
+def env_evolve(cfg: EnvConfig, st: EnvState, key) -> EnvState:
+    """Action-free network dynamics: advance the Gauss-Markov channels and
+    jitter the CPU frequencies exactly as :func:`env_step`'s dynamics block
+    does (``split(key, 3)`` — same draws, same clip), leaving population,
+    association, distances, and chain untouched. ``env_step`` routes
+    through this, and the streaming serve loop (``repro.core.serve``) uses
+    it directly for between-round drift where no agent acts."""
+    ks = jax.random.split(key, 3)
+    freqs = st.freqs * (1.0 + cfg.freq_jitter
+                        * jax.random.normal(ks[0], st.freqs.shape))
+    return st._replace(
+        freqs=jnp.clip(freqs, 0.5e9, 4.0e9),
+        h_up=comms.evolve_channel(cfg.wl, st.h_up, ks[1]),
+        h_down=comms.evolve_channel(cfg.wl, st.h_down, ks[2]))
+
+
 def _b_for_assoc(cfg: EnvConfig, actions: Action, assoc) -> jnp.ndarray:
     """Each twin takes its BS's projected (18d) batch control, (N,). The
     single source of the gather for both the decoded and the
@@ -387,20 +403,8 @@ def env_step(cfg: EnvConfig, st: EnvState, actions, key):
     else:
         reward = -per_bs * cfg.reward_scale  # per-agent variant (ablation)
 
-    ks = jax.random.split(key, 3)
-    freqs = st.freqs * (1.0 + cfg.freq_jitter
-                        * jax.random.normal(ks[0], st.freqs.shape))
-    freqs = jnp.clip(freqs, 0.5e9, 4.0e9)
-    nxt = EnvState(
-        freqs=freqs,
-        data_sizes=st.data_sizes,
-        h_up=comms.evolve_channel(cfg.wl, st.h_up, ks[1]),
-        h_down=comms.evolve_channel(cfg.wl, st.h_down, ks[2]),
-        dist=st.dist,
-        assoc=assoc,
-        t=st.t + 1,
-        chain=chain,
-    )
+    nxt = env_evolve(cfg, st, key)._replace(assoc=assoc, t=st.t + 1,
+                                            chain=chain)
     info = {"system_time": system_t, "assoc": assoc, "b": b, "tau": tau,
             "uplink": up}
     if cfg.migration is not None:

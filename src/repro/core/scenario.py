@@ -585,6 +585,55 @@ def run_consensus_sharded(ts: TwinSharding, cfg: EnvConfig,
                                        sb)
 
 
+class StreamKnobs(NamedTuple):
+    """Per-round scenario knobs for the streaming serve loop
+    (``repro.core.serve``): every field (S,) fp32 — one ScenarioBatch row
+    consumed per round, with the exact fallback broadcasting the batch
+    runners apply (:func:`_batch_rates` / :func:`_batch_consensus`), so a
+    streamed round prices the same knobs the vmapped runner scores for the
+    same row."""
+    data_min: jnp.ndarray    # (S,) population range lo
+    data_max: jnp.ndarray    # (S,) population range hi
+    skew: jnp.ndarray        # (S,) population tail exponent
+    straggler: jnp.ndarray   # (S,) straggler rate (0 when the axis is off)
+    outage: jnp.ndarray      # (S,) outage rate (0 when the axis is off)
+    byzantine: jnp.ndarray   # (S,) byzantine BS fraction (0 when off)
+    quorum: jnp.ndarray      # (S,) PBFT fault budget f, float-coded
+    block_size: jnp.ndarray  # (S,) block size S_B in bits
+
+
+def stream_knobs(batch: ScenarioBatch, *, fcfg: FaultConfig = None,
+                 ccfg: ConsensusConfig = None,
+                 lat: latency.LatencyParams = None) -> StreamKnobs:
+    """The :class:`StreamKnobs` view of a batch: fault knobs fall back to
+    ``fcfg``'s scalars exactly as :func:`run_faults` does (zero when no
+    FaultConfig rides the run), consensus knobs to ``ccfg``/``lat`` exactly
+    as :func:`run_consensus` does. Index round t's row with
+    :func:`knob_row`."""
+    s = batch.key.shape[0]
+    zeros = jnp.zeros((s,), jnp.float32)
+    if fcfg is not None:
+        s_rate, o_rate = _batch_rates(batch, fcfg)
+    else:
+        s_rate = zeros if batch.straggler is None else batch.straggler
+        o_rate = zeros if batch.outage is None else batch.outage
+    if ccfg is not None:
+        lat = latency.LatencyParams() if lat is None else lat
+        byz, qf, sb = _batch_consensus(batch, ccfg, lat)
+    else:
+        byz = zeros if batch.byzantine is None else batch.byzantine
+        qf = zeros if batch.quorum is None else batch.quorum
+        sb = zeros if batch.block_size is None else batch.block_size
+    return StreamKnobs(data_min=batch.data_min, data_max=batch.data_max,
+                       skew=batch.skew, straggler=s_rate, outage=o_rate,
+                       byzantine=byz, quorum=qf, block_size=sb)
+
+
+def knob_row(knobs: StreamKnobs, i: int) -> StreamKnobs:
+    """Scenario row ``i``'s scalar knob tuple out of a (S,) knob stack."""
+    return jax.tree_util.tree_map(lambda x: x[i], knobs)
+
+
 def consensus_row(batch: ScenarioBatch, i: int):
     """Host-side view of scenario row ``i``'s consensus axes: the FL bridge
     (``repro.fl.server`` folds these into its ConsensusConfig so the host

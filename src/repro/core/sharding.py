@@ -70,7 +70,8 @@ from repro.launch.mesh import make_twin_mesh
 
 __all__ = [
     "TWIN_AXIS", "TwinSharding", "in_scope", "twin_scope", "localize",
-    "slice_local", "mask_twins", "twin_sum", "twin_mean", "twin_max",
+    "slice_local", "mask_twins", "twin_sum", "twin_count", "twin_mean",
+    "twin_max",
     "twin_min", "twin_std", "twin_softmax_pool", "local_twin_count",
     "global_twin_count", "pmean_in_scope", "sharded_t_cmp",
     "sharded_t_local_agg", "sharded_t_broadcast", "sharded_round_time",
@@ -207,6 +208,14 @@ def twin_sum(x, axis: int = 0):
         return jnp.sum(x, axis=axis)
     return jax.lax.psum(jnp.sum(mask_twins(x, 0, axis=axis), axis=axis),
                         s.axis)
+
+
+def twin_count(mask, axis: int = 0) -> jnp.ndarray:
+    """Global count of True rows of a boolean twin mask (padding rows
+    excluded), int32 — the live-population accounting primitive of the
+    serve loop's churn masks (``repro.core.serve``). Replicated (psum'd)
+    under a scope, a plain sum outside."""
+    return twin_sum(jnp.asarray(mask).astype(jnp.int32), axis=axis)
 
 
 def twin_mean(x, axis: int = 0):

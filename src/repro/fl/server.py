@@ -231,11 +231,20 @@ class DTWNSystem:
     # ------------------------------------------------------------------
     def run_round(self, assoc: np.ndarray, b: Optional[np.ndarray] = None,
                   tau: Optional[np.ndarray] = None,
-                  participating_users: int = 10) -> Dict:
+                  participating_users: int = 10,
+                  active: Optional[np.ndarray] = None) -> Dict:
         """One federated round under a given edge association.
 
         ``participating_users``: twins actually trained this round (sampled);
-        latency is accounted for the full association as in the paper."""
+        latency is accounted for the full association as in the paper.
+
+        ``active``: optional (n_users,) bool live-twin mask — the streaming
+        serve loop's churn bridge (``repro.core.serve``). Inactive twins
+        are restamped to the out-of-range association id before latency
+        accounting (they vanish from every Eq. 12-17 segment reduction)
+        and are never sampled for local training, so departed twins
+        contribute to no Eq. 4 aggregation weight. ``active=None`` is the
+        exact pre-churn round (no extra host RNG consumed)."""
         cfg = self.cfg
         M = cfg.n_bs
         if b is None:
@@ -243,6 +252,10 @@ class DTWNSystem:
         if tau is None:
             tau = np.full((M, self.wireless.n_subchannels), 1.0 / M,
                           np.float32)
+        if active is not None:
+            active = np.asarray(active, bool)
+            assoc = np.where(active, assoc, M)
+            b = np.where(active, b, 0.0).astype(np.float32)
 
         # --- wireless + latency accounting (Eqs. 7-17) ---
         up = comms.uplink_rate(self.wireless, jnp.asarray(tau), self.h_up,
@@ -269,9 +282,15 @@ class DTWNSystem:
             self.lat, down, jnp.asarray(self.freqs), cfg.consensus))
 
         # --- local training on a sample of twins ---
-        chosen = self._rng.choice(cfg.n_users,
-                                  size=min(participating_users, cfg.n_users),
-                                  replace=False)
+        if active is None:
+            chosen = self._rng.choice(
+                cfg.n_users, size=min(participating_users, cfg.n_users),
+                replace=False)
+        else:
+            pool = np.flatnonzero(active)
+            chosen = self._rng.choice(
+                pool, size=min(participating_users, pool.size),
+                replace=False)
         twin_models, twin_sizes, twin_bs = [], [], []
         for u in chosen:
             shard = self.shards[u]
@@ -355,6 +374,7 @@ class DTWNSystem:
         self._round += 1
         return {
             "round": self._round,
+            "chosen": [int(u) for u in chosen],
             "round_time_s": t_round,
             "consensus_time_s": t_consensus,
             "loss": self.holdout_loss(self.params),

@@ -1,0 +1,460 @@
+"""Always-on serving tests (repro.core.serve): churn invariants
+(hypothesis-fuzzed when installed; a deterministic grid always runs),
+streaming-vs-batch bit parity per workload axis, donation regressions
+(donated buffers die, live-buffer census stays flat), the FL-substrate
+churn bridge (``run_round(active=...)``), and the slow battery — the
+8-device ``bench_scale --serve-gate`` subprocess and a >= 20-round churn
+soak with per-round mask accounting.
+"""
+import gc
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import association, scenario, serve, sharding
+from repro.core.consensus import ConsensusConfig
+from repro.core.faults import FaultConfig
+from repro.core.marl import env as env_mod
+from repro.core.marl.env import EnvConfig
+from repro.core.migration import MigrationConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+    SET = settings(max_examples=25, deadline=None)
+except ImportError:  # hypothesis is optional in this environment
+    HAS_HYPOTHESIS = False
+
+KEY = jax.random.PRNGKey(0)
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+SRC = os.path.join(ROOT, "src")
+
+
+def _batch(n=3, **axes):
+    return scenario.make_batch(KEY, n, **axes)
+
+
+def _stream(cfg, scfg, row_key, row, k, *, n_live=None, overlap=False):
+    state = serve.serve_init(cfg, scfg, row_key, row, n_live=n_live)
+    keys = serve.stream_keys(row_key, k)
+    state, m = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                  overlap=overlap)
+    return state, serve.stack_metrics(m)
+
+
+# ---------------------------------------------------------------------------
+# churn primitives: admit / evict invariants
+# ---------------------------------------------------------------------------
+
+
+def _rand_churn_case(seed: int, n: int, m: int):
+    rng = np.random.default_rng(seed)
+    active = rng.random(n) < 0.6
+    data = np.where(active, rng.uniform(100.0, 1500.0, n), 0.0)
+    data = data.astype(np.float32)
+    assoc = np.where(active, rng.integers(0, m, n), m).astype(np.int32)
+    leave = rng.random(n) < 0.3
+    join = rng.random(n) < 0.3
+    new_data = rng.uniform(100.0, 1500.0, n).astype(np.float32)
+    new_assoc = rng.integers(0, m, n).astype(np.int32)
+    return active, data, assoc, leave, join, new_data, new_assoc
+
+
+def _check_churn_case(active, data, assoc, leave, join, new_data, new_assoc,
+                      m: int):
+    a1, d1, s1 = serve.evict(jnp.asarray(active), jnp.asarray(data),
+                             jnp.asarray(assoc), jnp.asarray(leave), m)
+    left = np.asarray(leave) & np.asarray(active)
+    # conservation: evict removes exactly the live departures
+    assert int(np.sum(np.asarray(a1))) == int(active.sum() - left.sum())
+    # padding convention on departed rows: out of every segment reduction
+    np.testing.assert_array_equal(np.asarray(d1)[left], 0.0)
+    np.testing.assert_array_equal(np.asarray(s1)[left], m)
+    # survivors untouched
+    keep = np.asarray(active) & ~left
+    np.testing.assert_array_equal(np.asarray(d1)[keep], data[keep])
+    np.testing.assert_array_equal(np.asarray(s1)[keep], assoc[keep])
+
+    a2, d2, s2 = serve.admit(a1, d1, s1, jnp.asarray(join),
+                             jnp.asarray(new_data), jnp.asarray(new_assoc))
+    joined = np.asarray(join) & ~np.asarray(a1)
+    assert int(np.sum(np.asarray(a2))) == \
+        int(np.sum(np.asarray(a1)) + joined.sum())
+    np.testing.assert_array_equal(np.asarray(d2)[joined], new_data[joined])
+    np.testing.assert_array_equal(np.asarray(s2)[joined], new_assoc[joined])
+    # every live row has an in-range association; every dead row is padded
+    a2_np, s2_np, d2_np = map(np.asarray, (a2, s2, d2))
+    assert (s2_np[a2_np] < m).all() and (s2_np[a2_np] >= 0).all()
+    np.testing.assert_array_equal(s2_np[~a2_np], m)
+    np.testing.assert_array_equal(d2_np[~a2_np], 0.0)
+
+
+def test_admit_evict_invariants_grid():
+    for seed in range(8):
+        _check_churn_case(*_rand_churn_case(seed, 64, 5), m=5)
+    # degenerate cases: everyone leaves / everyone joins / no-ops
+    n, m = 16, 3
+    active = np.ones(n, bool)
+    data = np.full(n, 500.0, np.float32)
+    assoc = (np.arange(n) % m).astype(np.int32)
+    _check_churn_case(active, data, assoc, np.ones(n, bool),
+                      np.zeros(n, bool), data, assoc, m=m)
+    _check_churn_case(~active, np.zeros(n, np.float32),
+                      np.full(n, m, np.int32),
+                      np.zeros(n, bool), np.ones(n, bool), data, assoc, m=m)
+
+
+if HAS_HYPOTHESIS:
+
+    @SET
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 200),
+           m=st.integers(1, 8))
+    def test_admit_evict_invariants_fuzz(seed, n, m):
+        _check_churn_case(*_rand_churn_case(seed, n, m), m=m)
+
+
+def test_evicted_rows_vanish_from_reductions():
+    """An evicted row contributes zero to bs_sum / twin_sum / Eq. 4 weight
+    denominators — numerically identical to a population that never held
+    the twin."""
+    active, data, assoc, leave, *_ = _rand_churn_case(3, 128, 5)
+    a1, d1, s1 = serve.evict(jnp.asarray(active), jnp.asarray(data),
+                             jnp.asarray(assoc), jnp.asarray(leave), 5)
+    alive = np.asarray(a1)
+    # Eq. 4 weight mass per BS == the sum over surviving twins only
+    got = np.asarray(association.bs_loads(s1, d1, 5)["loads"])
+    want = np.zeros(5)
+    for j, (s, d) in enumerate(zip(np.asarray(s1), np.asarray(d1))):
+        if alive[j]:
+            want[int(s)] += d
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert float(jnp.sum(d1)) == pytest.approx(float(data[alive].sum()))
+
+
+def test_churn_step_accounting_and_determinism():
+    cfg = EnvConfig(n_twins=64, n_bs=5)
+    scfg = serve.ServeConfig(capacity=64, join_rate=0.3, leave_rate=0.3)
+    row = scenario.knob_row(scenario.stream_knobs(_batch()), 0)
+    rng = np.random.default_rng(0)
+    active = jnp.asarray(rng.random(64) < 0.5)
+    data = jnp.where(active, 500.0, 0.0)
+    assoc = jnp.where(active, jnp.arange(64) % 5, 5)
+    out1 = serve.churn_step(cfg, scfg, jax.random.fold_in(KEY, 1), active,
+                            data, assoc, row)
+    out2 = serve.churn_step(cfg, scfg, jax.random.fold_in(KEY, 1), active,
+                            data, assoc, row)
+    for x, y in zip(out1, out2):  # same key -> bit-identical churn
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    a2, d2, s2, nj, nl = out1
+    assert int(jnp.sum(a2)) == int(jnp.sum(active)) + int(nj) - int(nl)
+    # admitted populations follow the round's scenario knobs
+    joined = np.asarray(a2) & ~np.asarray(active)
+    if joined.any():
+        d = np.asarray(d2)[joined]
+        assert (d >= float(row.data_min) - 1e-6).all()
+        assert (d <= float(row.data_max) + 1e-6).all()
+
+
+def test_admitted_twins_enter_next_round_association():
+    """A twin admitted in round t carries a live in-range association and
+    is scored by round t+1's latency pass (n_active reflects it)."""
+    cfg = EnvConfig(n_twins=64, n_bs=5)
+    scfg = serve.ServeConfig(capacity=64, join_rate=1.0, leave_rate=0.0)
+    batch = _batch()
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row, n_live=16)
+    keys = serve.stream_keys(batch.key[0], 2)
+    step = serve.make_round_step(cfg, scfg)
+    state, m0 = step(state, serve.round_keys(keys, 0), row)
+    # join_rate=1 fills every empty slot in one round
+    assert int(m0["n_active"]) == 64 and int(m0["n_joined"]) == 48
+    assoc = np.asarray(state.env.assoc)
+    act = np.asarray(state.active)
+    assert act.all() and (assoc >= 0).all() and (assoc < 5).all()
+    _, m1 = step(state, serve.round_keys(keys, 1), row)
+    assert int(m1["n_active"]) == 64
+    assert np.isfinite(float(m1["round_time"]))
+
+
+def test_departed_twins_vanish_from_observation_and_replay_row():
+    """Compact observations (the replay's sampling substrate) flow through
+    masked segment reductions, so a post-evict state encodes identically
+    to one where the departed twins never existed."""
+    cfg = EnvConfig(n_twins=32, n_bs=4)
+    batch = _batch()
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    scfg = serve.ServeConfig(capacity=32)
+    full = serve.serve_init(cfg, scfg, batch.key[0], row)
+    # evict the tail [20, 32) from the full state ...
+    leave = jnp.arange(32) >= 20
+    a1, d1, s1 = serve.evict(full.active, full.env.data_sizes,
+                             full.env.assoc, leave, 4)
+    evicted_env = full.env._replace(data_sizes=d1, assoc=s1)
+    # ... versus a state initialized with the tail never live
+    fresh = serve.serve_init(cfg, scfg, batch.key[0], row, n_live=20)
+    from repro.core.marl import spaces
+
+    row_evicted = spaces.compact_obs(env_mod.observe(cfg, evicted_env))
+    row_fresh = spaces.compact_obs(env_mod.observe(cfg, fresh.env))
+    np.testing.assert_allclose(np.asarray(row_evicted),
+                               np.asarray(row_fresh), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming-vs-batch parity (fixed full population, churn off)
+# ---------------------------------------------------------------------------
+
+_PARITY_AXES = ["baseline", "faults", "migration", "consensus"]
+
+
+def _axis_cfg(axis: str, n: int = 64, m: int = 5) -> EnvConfig:
+    return EnvConfig(
+        n_twins=n, n_bs=m,
+        faults=FaultConfig(0.3, 0.2, 0.25) if axis == "faults" else None,
+        migration=MigrationConfig(0.4, 1.5, 0.8)
+        if axis == "migration" else None,
+        consensus=ConsensusConfig(quorum_f=1) if axis == "consensus"
+        else None)
+
+
+@pytest.mark.parametrize("axis", _PARITY_AXES)
+def test_streaming_matches_batch_bitwise(axis):
+    """K streamed rounds at fixed population == the batch runner on the
+    same scenario row, bit for bit (same folds, same composition)."""
+    k, i = 5, 1
+    batch = _batch(straggler=(0.1, 0.4), outage=(0.05, 0.3),
+                   byzantine=(0.0, 0.4), quorum=(0.0, 2.0),
+                   block_size=(1e6, 8e6))
+    cfg = _axis_cfg(axis)
+    knobs = scenario.stream_knobs(batch, fcfg=cfg.faults, ccfg=cfg.consensus,
+                                  lat=cfg.lat)
+    row = scenario.knob_row(knobs, i)
+    _, m = _stream(cfg, serve.ServeConfig(capacity=64), batch.key[i], row, k)
+
+    if axis == "baseline":
+        ref = scenario.run_baselines(cfg, batch)
+        np.testing.assert_array_equal(
+            m["round_time"], np.full(k, np.asarray(ref["average"])[i]))
+    elif axis == "faults":
+        ref = scenario.run_faults(cfg, cfg.faults, batch, n_rounds=k)
+        np.testing.assert_array_equal(m["round_time"],
+                                      np.asarray(ref["round_times"])[i])
+        np.testing.assert_array_equal(m["straggler_frac"],
+                                      np.asarray(ref["straggler_frac"])[i])
+        np.testing.assert_array_equal(m["outage_frac"],
+                                      np.asarray(ref["outage_frac"])[i])
+    elif axis == "migration":
+        ref = scenario.run_migration(cfg, cfg.migration, batch, n_rounds=k)
+        np.testing.assert_array_equal(m["round_time"],
+                                      np.asarray(ref["round_times"])[i])
+        np.testing.assert_array_equal(m["migration_rate"],
+                                      np.asarray(ref["migration_rates"])[i])
+        # imbalance crosses a vmap-vs-streaming segment-reduction boundary
+        # (different summation order, same draws) — tight tolerance, not
+        # bitwise, matching the repo's cross-program float precedent
+        np.testing.assert_allclose(m["imbalance"],
+                                   np.asarray(ref["imbalance"])[i],
+                                   rtol=1e-6)
+    else:
+        ref = scenario.run_consensus(cfg, cfg.consensus, batch, n_rounds=k)
+        np.testing.assert_array_equal(m["round_time"],
+                                      np.asarray(ref["round_times"])[i])
+        np.testing.assert_array_equal(m["accept_frac"],
+                                      np.asarray(ref["accept_frac"])[i])
+        np.testing.assert_array_equal(
+            m["consensus_time"],
+            np.full(k, np.asarray(ref["consensus_time"])[i]))
+        np.testing.assert_array_equal(
+            m["honest_stake_share"][-1],
+            np.asarray(ref["honest_stake_share"])[i])
+
+
+def test_overlap_matches_blocking_oracle():
+    """Pipelined dispatch (overlap=True) is a scheduling change only —
+    values are bit-identical to the block-every-round oracle."""
+    batch = _batch(straggler=(0.1, 0.4), outage=(0.05, 0.3))
+    cfg = _axis_cfg("faults")
+    scfg = serve.ServeConfig(capacity=64, join_rate=0.1, leave_rate=0.1)
+    knobs = scenario.stream_knobs(batch, fcfg=cfg.faults)
+    row = scenario.knob_row(knobs, 1)
+    _, m_pipe = _stream(cfg, scfg, batch.key[1], row, 6, overlap=True)
+    _, m_block = _stream(cfg, scfg, batch.key[1], row, 6, overlap=False)
+    assert m_pipe.keys() == m_block.keys()
+    for key in m_pipe:
+        np.testing.assert_array_equal(m_pipe[key], m_block[key])
+
+
+def test_stream_knobs_match_batch_axes():
+    """StreamKnobs are the batch's per-scenario axes verbatim (config
+    defaults filled exactly the way the batch runners fill them)."""
+    batch = _batch(straggler=(0.1, 0.4), outage=(0.05, 0.3))
+    fcfg = FaultConfig(0.3, 0.2, 0.25)
+    knobs = scenario.stream_knobs(batch, fcfg=fcfg)
+    np.testing.assert_array_equal(np.asarray(knobs.straggler),
+                                  np.asarray(batch.straggler))
+    np.testing.assert_array_equal(np.asarray(knobs.data_min),
+                                  np.asarray(batch.data_min))
+    clean = _batch()
+    k2 = scenario.stream_knobs(clean, fcfg=fcfg)
+    np.testing.assert_array_equal(np.asarray(k2.straggler),
+                                  np.full(3, fcfg.straggler_rate,
+                                          np.float32))
+    k3 = scenario.stream_knobs(clean)
+    np.testing.assert_array_equal(np.asarray(k3.straggler), np.zeros(3))
+
+
+# ---------------------------------------------------------------------------
+# donation regressions
+# ---------------------------------------------------------------------------
+
+
+def test_step_donates_state():
+    """The compiled round step consumes its state argument: the donated
+    buffers are deleted and any host read raises."""
+    batch = _batch()
+    cfg = _axis_cfg("baseline")
+    scfg = serve.ServeConfig(capacity=64)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row)
+    step = serve.make_round_step(cfg, scfg)
+    keys = serve.stream_keys(batch.key[0], 1)
+    state2, _ = step(state, serve.round_keys(keys, 0), row)
+    assert state.env.h_up.is_deleted()
+    assert state.env.data_sizes.is_deleted()
+    with pytest.raises(RuntimeError, match="deleted"):
+        np.asarray(state.env.h_up)
+    assert not state2.env.h_up.is_deleted()
+
+
+def test_streaming_live_buffer_census_flat():
+    """No device-buffer leak across rounds: with metrics materialized each
+    round, the live-array census after round 3 equals the census after
+    round 12 — the donated state reuses its buffers instead of allocating
+    a fresh N-sized set per round."""
+    batch = _batch()
+    cfg = _axis_cfg("baseline")
+    scfg = serve.ServeConfig(capacity=64, join_rate=0.1, leave_rate=0.1)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row)
+    step = serve.make_round_step(cfg, scfg)
+    keys = serve.stream_keys(batch.key[0], 12)
+
+    def census():
+        gc.collect()
+        return len(jax.live_arrays())
+
+    counts = []
+    for t in range(12):
+        state, m = step(state, serve.round_keys(keys, t), row)
+        _ = {k: np.asarray(v) for k, v in m.items()}  # materialize + drop
+        del m
+        if t >= 3:
+            counts.append(census())
+    assert len(set(counts)) == 1, counts
+
+
+def test_round_step_rejects_reuse_of_donated_state():
+    """Feeding an already-donated state back into the step raises — the
+    canonical misuse the serve_rounds driver makes impossible."""
+    batch = _batch()
+    cfg = _axis_cfg("baseline")
+    scfg = serve.ServeConfig(capacity=64)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row)
+    step = serve.make_round_step(cfg, scfg)
+    keys = serve.stream_keys(batch.key[0], 1)
+    step(state, serve.round_keys(keys, 0), row)
+    with pytest.raises((RuntimeError, ValueError), match="delet|donat"):
+        jax.block_until_ready(step(state, serve.round_keys(keys, 0), row))
+
+
+# ---------------------------------------------------------------------------
+# FL-substrate churn bridge
+# ---------------------------------------------------------------------------
+
+
+def test_run_round_active_mask_excludes_departed():
+    from repro.data import cifar10
+    from repro.fl.server import DTWNSystem, FLConfig
+
+    data = cifar10.load(max_train=1000, max_test=256)
+    cfg = FLConfig(n_users=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=1, batch_size=16)
+    system = DTWNSystem(cfg, data, seed=0)
+    active = np.ones(12, bool)
+    active[7:] = False
+    assoc = np.arange(12) % 3
+    out = system.run_round(assoc, participating_users=8, active=active)
+    # only live twins can be sampled for Eq. 4 training
+    assert set(out["chosen"]) <= set(range(7))
+    # latency accounting at a reduced population is finite and cheaper
+    # than (or equal to) the full-population round with the same draws
+    system2 = DTWNSystem(cfg, data, seed=0)
+    out_full = system2.run_round(assoc, participating_users=8)
+    assert 0.0 < out["round_time_s"] <= out_full["round_time_s"] + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# slow battery: 8-device subprocess gate + churn soak
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_serve_gate_8_devices():
+    """Streaming-vs-batch parity under a real 8-shard twin scope (ragged
+    and empty-shard populations) plus quick churn invariants — the same
+    gate CI runs via bench_scale --smoke."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scale", "--serve-gate"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "serve parity ok" in out.stdout, out.stdout
+    assert "serve churn ok" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_churn_soak_20_rounds():
+    """>= 20 streamed rounds with live churn on the full workload stack:
+    finite losses/stakes, per-round mask accounting, and the padding
+    invariant on every round's final state."""
+    n_rounds = 24
+    batch = _batch(straggler=(0.05, 0.2), outage=(0.02, 0.1),
+                   byzantine=(0.0, 0.3), quorum=(1.0, 2.0))
+    cfg = EnvConfig(n_twins=256, n_bs=8,
+                    migration=MigrationConfig(0.2, 1.0, 0.5),
+                    faults=FaultConfig(0.1, 0.2, 0.1),
+                    consensus=ConsensusConfig(quorum_f=1))
+    scfg = serve.ServeConfig(capacity=256, join_rate=0.05, leave_rate=0.05)
+    knobs = scenario.stream_knobs(batch, fcfg=cfg.faults, ccfg=cfg.consensus,
+                                  lat=cfg.lat)
+    row = scenario.knob_row(knobs, 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row, n_live=200)
+    step = serve.make_round_step(cfg, scfg)
+    keys = serve.stream_keys(batch.key[0], n_rounds)
+    pop = 200
+    for t in range(n_rounds):
+        state, m = step(state, serve.round_keys(keys, t), row)
+        m = {k: np.asarray(v) for k, v in m.items()}
+        pop = pop + int(m["n_joined"]) - int(m["n_left"])
+        assert int(m["n_active"]) == pop  # mask accounting, every round
+        assert 0 <= pop <= 256
+        assert np.isfinite(m["round_time"]) and m["round_time"] > 0
+        assert np.isfinite(m["honest_stake_share"])
+        assert 0.0 <= m["accept_frac"] <= 1.0
+        act = np.asarray(state.active)
+        assoc = np.asarray(state.env.assoc)
+        data = np.asarray(state.env.data_sizes)
+        assert (assoc[~act] == 8).all() and (data[~act] == 0.0).all()
+        assert (assoc[act] < 8).all()
+        assert int(act.sum()) == pop
+    assert pop != 200 or n_rounds < 5  # churn actually churned

@@ -5,7 +5,7 @@ import numpy as np
 
 
 @jax.jit
-def round_step(x):
+def jit_entry(x):
     # the jit entry: everything it mentions is traced-reachable
     return _accumulate(x)
 

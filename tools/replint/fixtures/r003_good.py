@@ -5,7 +5,7 @@ import jax.numpy as jnp
 
 
 @jax.jit
-def round_step(x):
+def jit_entry(x):
     return _accumulate(x)
 
 

@@ -1,0 +1,25 @@
+"""R006 fixture: jits of streaming round steps that fail to donate."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_step(cfg, state, keys):
+    return state + jnp.tanh(keys), {"round_time": jnp.sum(state)}
+
+
+step = jax.jit(_round_step, static_argnames=("cfg",))  # expect: R006
+
+partial_step = jax.jit(  # expect: R006
+    functools.partial(_round_step, None))
+
+
+@jax.jit  # expect: R006
+def round_step_decorated(state):
+    return state * 2.0
+
+
+@jax.jit(static_argnames=("cfg",))  # expect: R006
+def serve_round_step(cfg, state):
+    return state + 1.0

@@ -1,0 +1,34 @@
+"""R006 fixture: donating round-step jits and out-of-scope jits stay clean."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_step(cfg, state, keys):
+    return state + jnp.tanh(keys), {"round_time": jnp.sum(state)}
+
+
+# the serve idiom: state (arg 1 after the static cfg) is donated
+step = jax.jit(_round_step, static_argnames=("cfg",), donate_argnums=(1,))
+
+partial_step = jax.jit(functools.partial(_round_step, None),
+                       donate_argnums=(0,))
+
+
+@jax.jit(donate_argnames=("state",))
+def round_step_decorated(state):
+    return state * 2.0
+
+
+def train_step(params, batch):
+    return params
+
+
+# non-round-step jits keep their own donation policy — out of scope
+plain = jax.jit(train_step)
+
+
+@jax.jit
+def update_step(x):
+    return x + 1.0

@@ -7,5 +7,5 @@ fixture pair under ``tools/replint/fixtures/`` (the selftest fails any
 registered rule that never fires on a fixture).
 """
 from tools.replint.rules import (r001_onehot, r002_prng, r003_hostsync,
-                                 r004_sharding_scope,
-                                 r005_scan_carry)  # noqa: F401
+                                 r004_sharding_scope, r005_scan_carry,
+                                 r006_donate_round_step)  # noqa: F401

@@ -1,0 +1,87 @@
+"""R006 round-step-must-donate: every jit of a streaming round step donates.
+
+The always-on serve loop's memory story rests on
+``jax.jit(_round_step, donate_argnums=...)`` (``repro.core.serve``):
+donation lets XLA alias round t+1's ServeState into round t's buffers, so
+the N-sized twin arrays live on device once. A jit of a round step WITHOUT
+``donate_argnums`` silently doubles the service's device footprint — every
+round allocates a fresh N-sized state next to the old one — and nothing
+fails; the regression only shows up as an OOM at the N=10^6 scale the
+streaming path exists for.
+
+Scope is deliberately narrow: only ``jax.jit`` applications (call form,
+``functools.partial`` wrapping, or decorator form) of a function whose
+name contains ``round_step`` — the streaming-step naming convention. Batch
+train/update steps and bench jits keep their own donation policies and are
+not flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.replint.callgraph import dotted, last_name, unwrap_partial
+from tools.replint.engine import Project, Rule, SourceFile, register
+
+_NEEDLE = "round_step"
+
+
+def _is_jit(func: ast.AST) -> bool:
+    path = dotted(func)
+    return path == "jax.jit" or (path is None and last_name(func) == "jit") \
+        or path == "jit"
+
+
+def _target_name(node: ast.AST) -> str:
+    """Best-effort name of the function a jit call wraps."""
+    node = unwrap_partial(node)
+    if isinstance(node, ast.Call):  # e.g. ts.shard_map(local, ...)
+        for arg in node.args:
+            name = last_name(unwrap_partial(arg))
+            if name:
+                return name
+        return ""
+    return last_name(node) or ""
+
+
+def _donates(call: ast.Call) -> bool:
+    return any(kw.arg == "donate_argnums" or kw.arg == "donate_argnames"
+               for kw in call.keywords)
+
+
+@register
+class RoundStepMustDonate(Rule):
+    id = "R006"
+    name = "round-step-must-donate"
+    description = ("jax.jit of a *round_step* function without "
+                   "donate_argnums — the streaming state must be donated "
+                   "or every round allocates a second N-sized ServeState")
+
+    def check(self, sf: SourceFile, project: Project):
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Call) and _is_jit(node.func):
+                if not node.args:
+                    continue
+                if _NEEDLE in _target_name(node.args[0]) \
+                        and not _donates(node):
+                    yield self.finding(
+                        sf, node,
+                        f"jax.jit({_target_name(node.args[0])}, ...) "
+                        "without donate_argnums — a streaming round step "
+                        "must donate its state argument (see "
+                        "repro.core.serve)")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and _NEEDLE in node.name:
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call) and _is_jit(dec.func) \
+                            and not _donates(dec):
+                        yield self.finding(
+                            sf, dec,
+                            f"@jax.jit on {node.name!r} without "
+                            "donate_argnums — a streaming round step must "
+                            "donate its state argument")
+                    elif not isinstance(dec, ast.Call) and _is_jit(dec):
+                        yield self.finding(
+                            sf, dec,
+                            f"bare @jax.jit on {node.name!r} cannot donate "
+                            "— use jax.jit(fn, donate_argnums=...) for a "
+                            "streaming round step")
