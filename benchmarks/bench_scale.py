@@ -94,6 +94,11 @@ plus the streaming-service gate (``--serve-gate`` in the same 8-device
 subprocess: K sharded serve rounds at fixed population must match the
 batch runners per axis, and churned rounds must keep the mask accounting
 and padding convention),
+plus the streamed-FL gate (``--serve-fl-gate`` in the same 8-device
+subprocess: the serve loop with the FL workload attached — per-twin model
+buffers, vmapped local SGD, on-device Eq. 4/5 — must match the
+single-device path on a ragged population, and churned FL rounds must
+keep evicted model rows zeroed),
 exiting nonzero on mismatch — kernel, policy, sharding, or migration
 regressions fail fast without waiting for the full bench.
 """
@@ -126,9 +131,11 @@ _FLAT_MAX_TWINS = 2000
 # "heterogeneity" collects --alpha population/partition stats and the
 # --migration sweep; "faults" collects the --faults attack grid;
 # "consensus" collects the --consensus PBFT grid and FL pair;
-# "streaming" collects the --serve throughput/churn sweep) — merged
+# "streaming" collects the --serve throughput/churn sweep;
+# "streaming_fl" collects the --streaming-fl streamed-FL sweep) — merged
 # one level deep instead of replaced wholesale
-_DEEP_MERGE_KEYS = ("heterogeneity", "faults", "consensus", "streaming")
+_DEEP_MERGE_KEYS = ("heterogeneity", "faults", "consensus", "streaming",
+                    "streaming_fl")
 
 
 def merge_into_scale(sections: dict) -> None:
@@ -1241,6 +1248,175 @@ def serve_sweep(n: int = 100_000, n_rounds: int = 24,
     return out
 
 
+def serve_fl_gate() -> None:
+    """Streamed-FL parity gate (CI, 8 forced host devices): K rounds of
+    the serve loop with the real FL workload attached — per-twin model
+    buffers, vmapped local SGD, on-device Eq. 4/5 aggregation, chain
+    verify — sharded over 8 devices must match the single-device path:
+    bit-equal integer telemetry (participants, accept counts, Eq. 4 BS
+    weights) and float-tolerance loss/accuracy/model trees, on a ragged
+    population (N=37 pads to 40). Plus churned FL rounds: finite loss and
+    evicted rows zeroed in the model buffers. Raises on any mismatch."""
+    import numpy as np
+
+    from repro.core import scenario, serve
+    from repro.core.sharding import TwinSharding
+    from repro.data import cifar10
+    from repro.fl import stream as fls
+    from repro.fl.partition import iid_partition
+
+    ts = TwinSharding.make()
+    n, m, k_rounds = 37, 5, 3
+    fcfg = fls.FLServeConfig(model="tiny", participants=6, local_iters=2,
+                             batch_size=8, verify=True, tolerance=25.0)
+    cfg = EnvConfig(n_twins=n, n_bs=m)
+    scfg = serve.ServeConfig(capacity=n, fl=fcfg)
+    batch = scenario.make_batch(jax.random.PRNGKey(0), 2)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 1)
+    data = cifar10.load(max_train=2000, max_test=300)
+    plan = fls.stream_fl_plan(fcfg, iid_partition(2000, n, seed=3),
+                              k_rounds, seed=0)
+    keys = serve.stream_keys(batch.key[1], k_rounds)
+
+    def run(scfg, ts, n_live=None):
+        init = serve.make_serve_init(cfg, scfg, ts=ts, n_live=n_live)
+        state = init(batch.key[1], row)
+        fl = fls.fl_init(fcfg, jax.random.PRNGKey(7), data,
+                         np.asarray(state.active, bool))
+        state = state._replace(fl=fl)
+        step = serve.make_round_step(cfg, scfg, ts=ts)
+        state, mtr = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                        step=step, overlap=False, plan=plan)
+        return state, serve.stack_metrics(mtr)
+
+    s1, m1 = run(scfg, None)
+    s8, m8 = run(scfg, ts)
+    for k in ("fl_n_participants", "fl_accept_frac", "fl_bs_weight",
+              "round_time"):
+        np.testing.assert_array_equal(m1[k], m8[k],
+                                      err_msg=f"serve-fl parity: {k}")
+    for k in ("fl_loss", "fl_accuracy"):
+        np.testing.assert_allclose(m1[k], m8[k], rtol=1e-5,
+                                   err_msg=f"serve-fl parity: {k}")
+    for k in s1.fl.params:
+        np.testing.assert_allclose(np.asarray(s1.fl.params[k]),
+                                   np.asarray(s8.fl.params[k]), atol=2e-6,
+                                   err_msg=f"global model: {k}")
+        # sharded twin buffers are capacity-padded — compare the real rows
+        np.testing.assert_allclose(np.asarray(s1.fl.twin_params[k]),
+                                   np.asarray(s8.fl.twin_params[k])[:n],
+                                   atol=2e-6, err_msg=f"twin buffer: {k}")
+    print(f"serve fl parity ok on {ts.n_shards} shards "
+          f"(ragged N={n}, {k_rounds} rounds, tiny model)")
+
+    # --- churned FL rounds under the sharded step ---
+    scfg_c = serve.ServeConfig(capacity=n, join_rate=0.2, leave_rate=0.2,
+                               fl=fcfg)
+    state, mtr = run(scfg_c, ts, n_live=28)
+    assert np.isfinite(mtr["fl_loss"]).all(), mtr["fl_loss"]
+    act = np.array(state.active)  # copy: the buffers were donated
+    for k, tp in state.fl.twin_params.items():
+        dead = np.array(tp)[~act]
+        assert (dead == 0.0).all(), f"evicted rows not zeroed in {k}"
+    print(f"serve fl churn ok on {ts.n_shards} shards "
+          f"(population 28 -> {int(mtr['n_active'][-1])})")
+
+
+def streaming_fl_sweep(n: int = 10_000, n_rounds: int = 12,
+                       churn_rates=(0.0, 0.01, 0.05)) -> dict:
+    """Streamed-FL throughput at N=10^4: rounds/s of the donated FL round
+    step (vmapped local SGD + on-device Eq. 4/5) with pipelined vs
+    blocking dispatch, plus a churn-rate sweep where evicted twins drop
+    out of the aggregation and admitted twins warm-start from the live
+    global model. Merged into ``scale.json: streaming_fl``."""
+    import numpy as np
+
+    from repro.core import scenario, serve
+    from repro.data import cifar10
+    from repro.fl import stream as fls
+
+    train_n, shard_size = 4096, 128
+    fcfg = fls.FLServeConfig(model="tiny", participants=16, local_iters=2,
+                             batch_size=8)
+    cfg = EnvConfig(n_twins=n, n_bs=10)
+    batch = scenario.make_batch(jax.random.PRNGKey(0), 1)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    row_key = batch.key[0]
+    data = cifar10.load(max_train=train_n, max_test=512)
+    plan = fls.stream_fl_plan(fcfg, fls.cyclic_shards(train_n, n, shard_size),
+                              n_rounds, seed=0)
+    plan1 = jax.tree_util.tree_map(lambda x: x[:1], plan)
+
+    def run(scfg, overlap):
+        step = serve.make_round_step(cfg, scfg)
+        keys = serve.stream_keys(row_key, n_rounds)
+
+        def fresh():
+            st = serve.serve_init(cfg, scfg, row_key, row)
+            fl = fls.fl_init(fcfg, jax.random.PRNGKey(2), data,
+                             np.asarray(st.active, bool))
+            return st._replace(fl=fl)
+
+        # warm the compile off the clock (donation consumes the state)
+        serve.serve_rounds(cfg, scfg, fresh(), serve.stream_keys(
+            jax.random.fold_in(row_key, 99), 1), row, step=step,
+            overlap=False, plan=plan1)
+        best, m = 0.0, None
+        for _ in range(2):  # best-of-2: the async path is timing-noisy
+            state = fresh()
+            t0 = time.time()
+            state, m = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                          step=step, overlap=overlap,
+                                          plan=plan)
+            m = serve.stack_metrics(m)  # blocks: end of the pipeline
+            best = max(best, n_rounds / max(time.time() - t0, 1e-9))
+        assert np.isfinite(m["fl_loss"]).all()
+        return best, m
+
+    fixed = serve.ServeConfig(capacity=n, fl=fcfg)
+    stream_rps, m_fixed = run(fixed, overlap=True)
+    blocking_rps, _ = run(fixed, overlap=False)
+
+    churn = {}
+    for rate in churn_rates:
+        scfg = serve.ServeConfig(capacity=n, join_rate=rate,
+                                 leave_rate=rate, fl=fcfg)
+        rps, m = run(scfg, overlap=True)
+        churn[str(rate)] = {
+            "rounds_per_s": rps,
+            "final_population": int(m["n_active"][-1]),
+            "joined": int(m["n_joined"].sum()),
+            "left": int(m["n_left"].sum()),
+            "fl_loss_first": float(m["fl_loss"][0]),
+            "fl_loss_last": float(m["fl_loss"][-1]),
+            "fl_accuracy_last": float(m["fl_accuracy"][-1]),
+            "mean_accept_frac": float(np.mean(m["fl_accept_frac"])),
+        }
+
+    out = {
+        "n_twins": n, "n_rounds": n_rounds, "n_bs": 10,
+        "model": fcfg.model, "participants": fcfg.participants,
+        "local_iters": fcfg.local_iters, "batch_size": fcfg.batch_size,
+        "train_n": train_n, "shard_size": shard_size,
+        "stream_rounds_per_s": stream_rps,
+        "stream_blocking_rounds_per_s": blocking_rps,
+        "overlap_speedup_vs_blocking": stream_rps / max(blocking_rps, 1e-9),
+        "fl_loss_first": float(m_fixed["fl_loss"][0]),
+        "fl_loss_last": float(m_fixed["fl_loss"][-1]),
+        "fl_accuracy_last": float(m_fixed["fl_accuracy"][-1]),
+        "churn_sweep": churn,
+    }
+    print(f"streaming_fl N={n}: {stream_rps:.1f} rounds/s (pipelined) / "
+          f"{blocking_rps:.1f} (blocking), loss "
+          f"{out['fl_loss_first']:.3f} -> {out['fl_loss_last']:.3f}")
+    for rate, rowd in churn.items():
+        print(f"  churn={rate}: {rowd['rounds_per_s']:.1f} rounds/s, "
+              f"population {n} -> {rowd['final_population']} "
+              f"(+{rowd['joined']}/-{rowd['left']}), loss -> "
+              f"{rowd['fl_loss_last']:.3f}")
+    return out
+
+
 def smoke() -> None:
     """CI gate: tiny sweep through every backend + oracle parity. Raises
     (and exits nonzero) on any backend disagreeing with the dense oracle."""
@@ -1338,6 +1514,12 @@ def smoke() -> None:
     print("scale --smoke: serve gate ok on "
           f"{_SHARDED_DEVICES} host devices")
 
+    # --- streamed-FL gate (subprocess, same forced device count): the FL
+    # workload through the sharded serve loop vs single-device, + churn ---
+    print(_spawn_sharded("--serve-fl-gate").strip())
+    print("scale --smoke: serve fl gate ok on "
+          f"{_SHARDED_DEVICES} host devices")
+
 
 def main(reduced: bool = True):
     with Timer() as t:
@@ -1431,6 +1613,15 @@ if __name__ == "__main__":
     ap.add_argument("--serve-gate", action="store_true",
                     help="[subprocess child] 8-device streaming-vs-batch "
                          "parity + churn invariant gate")
+    ap.add_argument("--serve-fl-gate", action="store_true",
+                    help="[subprocess child] 8-device streamed-FL parity "
+                         "(sharded vs single-device serve loop with the "
+                         "FL workload) + churned-FL invariant gate")
+    ap.add_argument("--streaming-fl", action="store_true",
+                    help="streamed-FL throughput sweep at N=10^4: the "
+                         "donated FL round step pipelined vs blocking, "
+                         "plus a churn-rate sweep (merged into "
+                         "scale.json: streaming_fl)")
     ap.add_argument("--sharded-child", action="store_true",
                     help="[subprocess child] sharded sweep body; prints "
                          "JSON on the last stdout line")
@@ -1462,6 +1653,11 @@ if __name__ == "__main__":
         sharded_gate()
     elif args.serve_gate:
         serve_gate()
+    elif args.serve_fl_gate:
+        serve_fl_gate()
+    elif args.streaming_fl:
+        merge_into_scale({"streaming_fl": streaming_fl_sweep()})
+        print("streaming_fl sweep merged into results/bench/scale.json")
     elif args.serve:
         merge_into_scale({"streaming": serve_sweep()})
         print("streaming sweep merged into results/bench/scale.json")

@@ -112,6 +112,35 @@ def bs_aggregate_stacked(stacked, data_sizes, assoc, n_bs: int, *,
     return jax.tree_util.tree_map(leaf, stacked), bs_w
 
 
+def global_aggregate_stacked(per_bs_tree, bs_w, accept=None, *,
+                             weighted_global: bool = False) -> object:
+    """Eq. 5 over *stacked* per-BS aggregates, entirely on device.
+
+    ``per_bs_tree`` has leading axis M (a :func:`bs_aggregate_stacked`
+    output); ``bs_w`` (M,) marks occupied BSs (> 0). ``accept`` (M,) bool
+    optionally restricts the outer mean to chain-verified BSs — the
+    streamed form of the host sequence ``verify_round(); global_aggregate``.
+    Unweighted by default (the paper's Eq. 5), data-weighted with
+    ``weighted_global``. Rejected/empty rows enter the sums as exact zeros,
+    so the result matches the host list path (which enumerates accepted
+    BSs in ascending id order) term for term. When nothing is accepted the
+    result is the all-zeros tree — callers keep the previous global model
+    (``run_round`` behavior)."""
+    bs_w = jnp.asarray(bs_w, jnp.float32)
+    acc = bs_w > 0.0
+    if accept is not None:
+        acc = acc & jnp.asarray(accept, bool)
+    w = jnp.where(acc, bs_w if weighted_global else 1.0, 0.0
+                  ).astype(jnp.float32)
+    tot = jnp.maximum(jnp.sum(w), 1e-12)
+
+    def leaf(x):
+        xw = x * w.reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(xw, axis=0) / tot
+
+    return jax.tree_util.tree_map(leaf, per_bs_tree)
+
+
 def hierarchical_fedavg_stacked(stacked, data_sizes, assoc, n_bs: int, *,
                                 weighted_global: bool = False,
                                 backend: str = "auto") -> object:

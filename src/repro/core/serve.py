@@ -87,12 +87,19 @@ class ServeConfig:
                      (:func:`repro.core.marl.env.env_evolve`, dedicated
                      fold 12). Off by default: the batch runners hold
                      channels fixed, and parity mode must too.
+    ``fl``         — :class:`repro.fl.stream.FLServeConfig` to stream the
+                     real FL workload through the round step (per-twin
+                     model buffers in ``ServeState.fl``, vmapped local
+                     SGD + Eq. 4/5 on device); requires a per-round
+                     :class:`~repro.fl.stream.FLPlan`. None streams the
+                     latency/env/chain simulation only.
     """
     capacity: int
     join_rate: float = 0.0
     leave_rate: float = 0.0
     policy: Optional[str] = None
     evolve_channels: bool = False
+    fl: Optional[Any] = None
 
     @property
     def churns(self) -> bool:
@@ -112,6 +119,7 @@ class ServeState(NamedTuple):
     byz: jnp.ndarray         # (M,) bool stationary byzantine mask
     agent: Any = None        # optional MADDPGState (policy mode)
     buf: Any = None          # optional marl.replay.Replay (policy mode)
+    fl: Any = None           # optional fl.stream.FLState (streamed FL)
     round: Any = 0           # int32 rounds served (set by serve_init)
 
 
@@ -287,11 +295,12 @@ def make_serve_init(cfg: EnvConfig, scfg: ServeConfig,
 
 
 def _round_step(cfg: EnvConfig, scfg: ServeConfig, state: ServeState,
-                keys: RoundKeys, row: StreamKnobs):
+                keys: RoundKeys, row: StreamKnobs, plan=None):
     """One streamed round. Axis-for-axis this reproduces the batch runners'
     bodies bitwise at a fixed full population (see module docstring):
-    migration -> faults -> Eq. 17 scoring -> chain round -> churn ->
-    (optional) dynamics. Returns ``(state', metrics)``."""
+    migration -> faults -> Eq. 17 scoring -> chain round -> FL round
+    (``scfg.fl``; ``plan`` is that round's :class:`~repro.fl.stream.FLPlan`
+    row) -> churn -> (optional) dynamics. Returns ``(state', metrics)``."""
     st = state.env
     m = cfg.n_bs
     active = state.active
@@ -361,14 +370,35 @@ def _round_step(cfg: EnvConfig, scfg: ServeConfig, state: ServeState,
                                                      keys.chain, state.byz,
                                                      occ)
 
+    # --- streamed FL round (``scfg.fl``): vmapped local SGD over the
+    # planned participants, Eq. 4/5 + verify gate on device — trains the
+    # round's PRE-churn population with the post-migration association,
+    # exactly the state the latency terms above priced ---
+    fl_state = state.fl
+    fl_metrics = {}
+    if scfg.fl is not None:
+        from repro.fl import stream as fl_stream
+
+        fl_state, fl_metrics = fl_stream.fl_round(
+            scfg.fl, state.fl, plan, active=active,
+            data_sizes=st.data_sizes, assoc=assoc, n_bs=m)
+
     # --- churn (fold-11 round key — a fresh stream, so churn-off serving
     # consumes exactly the batch runners' draws and nothing else) ---
+    pre_active = active
     data = st.data_sizes
     assoc_next = assoc
     n_joined = n_left = jnp.int32(0)
     if scfg.churns:
         active, data, assoc_next, n_joined, n_left = churn_step(
             cfg, scfg, keys.churn, active, data, assoc, row)
+        if scfg.fl is not None:
+            from repro.fl import stream as fl_stream
+
+            # model-buffer churn contract: admitted rows warm-start from
+            # the round's NEW global model, evicted rows go to padding
+            fl_state = fl_stream.fl_churn_update(
+                fl_state, active & ~pre_active, pre_active & ~active)
 
     # --- optional between-round dynamics (fold-12 round key) ---
     env2 = st._replace(data_sizes=data, assoc=assoc_next, chain=chain,
@@ -377,7 +407,7 @@ def _round_step(cfg: EnvConfig, scfg: ServeConfig, state: ServeState,
         env2 = env_mod.env_evolve(cfg, env2, keys.dyn)
 
     state2 = ServeState(env=env2, active=active, bad=bad, byz=state.byz,
-                        agent=state.agent, buf=state.buf,
+                        agent=state.agent, buf=state.buf, fl=fl_state,
                         round=state.round + 1)
 
     # --- replay (policy mode): compact encodings flow through masked
@@ -394,6 +424,7 @@ def _round_step(cfg: EnvConfig, scfg: ServeConfig, state: ServeState,
     metrics = {"round_time": t_round,
                "n_active": sharding.twin_count(state2.active),
                "n_joined": n_joined, "n_left": n_left}
+    metrics.update(fl_metrics)
     if cfg.faults is not None:
         metrics["straggler_frac"] = faults_mod.straggler_frac(slow)
         metrics["outage_frac"] = jnp.mean(bad.astype(jnp.float32))
@@ -418,14 +449,24 @@ _round_step_jit = jax.jit(_round_step, static_argnames=("cfg", "scfg"),
                           donate_argnums=(2,))
 
 
-def serve_specs(cfg: EnvConfig) -> ServeState:
+def serve_specs(cfg: EnvConfig,
+                scfg: Optional[ServeConfig] = None) -> ServeState:
     """Partition specs for the ServeState pytree: env per
     :func:`repro.core.marl.env.env_specs`, the active mask twin-sharded,
     everything else (fault chain, byzantine mask, agent params, replay
     rows, round counter) replicated — the PR 3 compact-encoding invariant
-    is what keeps the policy-mode subtrees M-sized."""
+    is what keeps the policy-mode subtrees M-sized. With an FL-enabled
+    ``scfg`` the model buffers are twin-sharded on their capacity axis
+    (``fl.stream.fl_specs``); the global model and datasets replicate."""
+    if scfg is not None and scfg.fl is not None:
+        from repro.fl.stream import fl_specs
+
+        fl = fl_specs(scfg.fl)
+    else:
+        fl = P()
     return ServeState(env=env_mod.env_specs(cfg), active=P(TWIN_AXIS),
-                      bad=P(), byz=P(), agent=P(), buf=P(), round=P())
+                      bad=P(), byz=P(), agent=P(), buf=P(), fl=fl,
+                      round=P())
 
 
 def make_round_step(cfg: EnvConfig, scfg: ServeConfig,
@@ -437,15 +478,20 @@ def make_round_step(cfg: EnvConfig, scfg: ServeConfig,
     if ts is None or ts.n_shards == 1:
         return functools.partial(_round_step_jit, cfg, scfg)
 
-    specs = serve_specs(cfg)
+    specs = serve_specs(cfg, scfg)
 
-    def local(state, keys, row):
+    def local(state, keys, row, plan=None):
         with ts.scope(cfg.n_twins):
-            return _round_step(cfg, scfg, state, keys, row)
+            return _round_step(cfg, scfg, state, keys, row, plan)
 
-    sm = ts.shard_map(local, in_specs=(specs, P(), P()),
+    sm = ts.shard_map(local, in_specs=(specs, P(), P(), P()),
                       out_specs=(specs, P()))
-    return jax.jit(sm, donate_argnums=(0,))
+    jitted = jax.jit(sm, donate_argnums=(0,))
+
+    def step(state, keys, row, plan=None):
+        return jitted(state, keys, row, plan)
+
+    return step
 
 
 # ---------------------------------------------------------------------------
@@ -462,21 +508,34 @@ def _row_t(rows: StreamKnobs, t: int) -> StreamKnobs:
 
 def serve_rounds(cfg: EnvConfig, scfg: ServeConfig, state: ServeState,
                  keys: RoundKeys, rows: StreamKnobs, *, step=None,
-                 overlap: bool = True, ts: Optional[TwinSharding] = None):
+                 overlap: bool = True, ts: Optional[TwinSharding] = None,
+                 plan=None):
     """Stream ``n_rounds = keys.fault.shape[0]`` rounds from ``state``.
 
     ``overlap=True`` (the service mode) never blocks between rounds: the
     donated step for round t+1 is dispatched while round t still executes,
-    so aggregation/scoring of consecutive rounds pipeline on device and the
-    host only materializes metrics at the end. ``overlap=False`` is the
-    oracle that blocks every round — bit-identical results, no pipelining.
-    Returns ``(final_state, metrics)`` with metrics stacked (n_rounds,)
-    device arrays (see :func:`stack_metrics` for host conversion)."""
+    so FL aggregation of round t pipelines with latency scoring /
+    association of round t+1 on device and the host only materializes
+    metrics at the end. ``overlap=False`` is the oracle that blocks every
+    round — bit-identical results, no pipelining. ``plan`` is a stacked
+    :class:`~repro.fl.stream.FLPlan` (required when ``scfg.fl`` is set),
+    consumed one row per round like ``keys``/``rows``. Returns
+    ``(final_state, metrics)`` with metrics stacked (n_rounds,) device
+    arrays (see :func:`stack_metrics` for host conversion)."""
     if step is None:
         step = make_round_step(cfg, scfg, ts)
+    if scfg.fl is not None and plan is None:
+        raise ValueError("ServeConfig.fl is set — serve_rounds needs the "
+                         "stream's FLPlan (see fl.stream.stream_fl_plan)")
     out = []
     for t in range(keys.fault.shape[0]):
-        state, m = step(state, round_keys(keys, t), _row_t(rows, t))
+        if plan is None:
+            state, m = step(state, round_keys(keys, t), _row_t(rows, t))
+        else:
+            from repro.fl.stream import plan_row
+
+            state, m = step(state, round_keys(keys, t), _row_t(rows, t),
+                            plan_row(plan, t))
         if not overlap:
             state = jax.block_until_ready(state)
             m = jax.block_until_ready(m)

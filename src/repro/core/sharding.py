@@ -70,7 +70,8 @@ from repro.launch.mesh import make_twin_mesh
 
 __all__ = [
     "TWIN_AXIS", "TwinSharding", "in_scope", "twin_scope", "localize",
-    "slice_local", "mask_twins", "twin_sum", "twin_count", "twin_mean",
+    "slice_local", "mask_twins", "twin_gather", "twin_scatter_rows",
+    "model_buffer_specs", "twin_sum", "twin_count", "twin_mean",
     "twin_max",
     "twin_min", "twin_std", "twin_softmax_pool", "local_twin_count",
     "global_twin_count", "pmean_in_scope", "sharded_t_cmp",
@@ -355,6 +356,63 @@ def localize(x, *, axis: int = 0, fill=None):
     if in_scope() is None:
         return x
     return slice_local(x, axis=axis, fill=fill)
+
+
+# ---------------------------------------------------------------------------
+# global-id row access on twin buffers — the streamed-FL scatter/gather
+# ---------------------------------------------------------------------------
+
+
+def twin_gather(x, idx, *, fill=0):
+    """Rows ``idx`` (global twin ids, any shape) of a twin array ``x``.
+
+    Out-of-range ids (negative, >= N, or a shard's padding rows) return
+    ``fill`` — the sentinel the streamed-FL plan uses for dropped
+    participants. Under a scope each id is owned by exactly one shard, so
+    the masked local gather psums to the single owner's row and the result
+    is replicated (every shard sees the full participant slate)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    s = in_scope()
+    if s is None:
+        return jnp.take(x, idx, axis=0, mode="fill", fill_value=fill)
+    li = idx - jax.lax.axis_index(s.axis) * s.n_local
+    own = (li >= 0) & (li < s.n_local) & (idx >= 0) & (idx < s.n_global)
+    vals = jnp.take(x, jnp.clip(li, 0, s.n_local - 1), axis=0)
+    zero = jnp.zeros((), vals.dtype)
+    shape = own.shape + (1,) * (vals.ndim - own.ndim)
+    picked = jnp.where(own.reshape(shape), vals, zero)
+    # bool/int rows survive the psum as int32, then cast back
+    summed = jax.lax.psum(picked.astype(jnp.int32), s.axis) \
+        if vals.dtype == jnp.bool_ else jax.lax.psum(picked, s.axis)
+    out = summed.astype(vals.dtype)
+    miss = (idx < 0) | (idx >= s.n_global)
+    return jnp.where(miss.reshape(shape), jnp.asarray(fill, vals.dtype), out)
+
+
+def twin_scatter_rows(x, idx, rows):
+    """Write ``rows`` (K, ...) at global twin ids ``idx`` (K,) into twin
+    array ``x``; out-of-range ids (the dropped-participant sentinel ``-1``,
+    or another shard's rows under a scope) are silently dropped — each
+    shard writes only the rows it owns, so the sharded buffer stays the
+    row-for-row image of the single-device one. Duplicate ids are not
+    supported (participants are sampled without replacement)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    s = in_scope()
+    if s is None:
+        n = x.shape[0]
+        safe = jnp.where((idx >= 0) & (idx < n), idx, n)
+        return x.at[safe].set(rows, mode="drop")
+    li = idx - jax.lax.axis_index(s.axis) * s.n_local
+    own = (li >= 0) & (li < s.n_local) & (idx >= 0) & (idx < s.n_global)
+    safe = jnp.where(own, li, s.n_local)
+    return x.at[safe].set(rows, mode="drop")
+
+
+def model_buffer_specs(tree) -> object:
+    """Partition specs for a ``(capacity, ...)``-leading model/optimizer
+    buffer pytree (the streamed-FL twin buffers): every leaf twin-sharded
+    on its leading axis, trailing parameter dims replicated."""
+    return jax.tree_util.tree_map(lambda _: P(TWIN_AXIS), tree)
 
 
 # ---------------------------------------------------------------------------

@@ -21,15 +21,46 @@ import numpy as np
 from repro.optim import make_optimizer
 
 
+def sgd_step(loss_fn: Callable, opt, params, opt_state, batch):
+    """The one local SGD step every twin trainer shares: value_and_grad on
+    ``loss_fn`` then one optimizer update. Pure — the host ``train_local``
+    loop jits it directly, and the streamed serve loop scans it under vmap
+    (``repro.fl.stream``), so both paths apply bit-identical update math."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+    params, opt_state = opt.update(params, grads, opt_state)
+    return params, opt_state, loss
+
+
+def local_sgd(loss_fn: Callable, opt, params, xs, ys):
+    """``local_iters`` SGD steps over pre-gathered batches, as one scan.
+
+    ``xs``/``ys`` are (local_iters, batch, ...) stacks (the streamed FL
+    plan gathers them up front — host RNG draws cannot happen in traced
+    code). Fresh optimizer state per call, matching ``train_local``'s
+    per-round ``opt.init``. Returns ``(params, opt_state, losses)``."""
+    from repro.core import sharding
+
+    def step(carry, batch):
+        p, s = carry
+        p, s, loss = sgd_step(loss_fn, opt, p, s, batch)
+        return (p, s), loss
+
+    # under a twin scope the zero-initialized optimizer state needs a
+    # value-preserving replication stamp or the scan-carry checker rejects
+    # the (replicated-in, psum-derived-out) momentum; no-op elsewhere
+    (params, opt_state), losses = jax.lax.scan(
+        step, (params, sharding.stamp_replicated(opt.init(params))),
+        {"images": xs, "labels": ys})
+    return params, opt_state, losses
+
+
 def make_local_trainer(loss_fn: Callable, lr: float = 0.05,
                        momentum: float = 0.9):
     opt = make_optimizer("sgd", lr=lr, momentum=momentum)
 
     @jax.jit
     def one_step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        params, opt_state = opt.update(params, grads, opt_state)
-        return params, opt_state, loss
+        return sgd_step(loss_fn, opt, params, opt_state, batch)
 
     def train_local(params, data_x, data_y, *, batch_size: int,
                     local_iters: int, seed: int):

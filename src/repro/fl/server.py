@@ -130,7 +130,12 @@ class DTWNSystem:
             self.shards = iid_partition(n_samples, cfg.n_users, seed=seed)
             self.data_sizes = np.asarray([s.size for s in self.shards],
                                          np.float32)
-        self.freqs = np.asarray(cfg.bs_freqs_ghz, np.float32)[: cfg.n_bs] * 1e9
+        # BS compute frequencies follow the env's cycling law (PR 3): the
+        # table wraps when n_bs exceeds its length instead of truncating —
+        # a short (M,) freqs array misbroadcasts Eqs. 12-17 at n_bs > 5
+        from repro.core.marl.env import bs_frequencies
+
+        self.freqs = np.asarray(bs_frequencies(cfg), np.float32)
         self.trainer = make_local_trainer(cnn.loss_fn, lr=cfg.lr)
         # Bernoulli attacker draw only when requested — a zero-frac config
         # consumes no extra host RNG, preserving pre-fault sequences
@@ -157,6 +162,11 @@ class DTWNSystem:
         self.params = cnn.init_params(key)
         self._round = 0
         self._rng = np.random.RandomState(seed + 1)
+        # evaluation draws its holdout batches from a DEDICATED stream:
+        # holdout_loss/test_accuracy used to consume self._rng, so the
+        # number of eval calls (which varies with how many BSs are
+        # occupied) silently changed which twins train in later rounds
+        self._eval_rng = np.random.RandomState(seed + 31)
         kd = jax.random.split(key, 3)
         self.dist = comms.sample_distances(self.wireless, kd[0])
         self.h_up = comms.sample_channel(self.wireless, kd[1])
@@ -176,14 +186,16 @@ class DTWNSystem:
 
     def holdout_loss(self, params, n: int = 512) -> float:
         n = min(n, self.x_test.shape[0])
-        idx = self._rng.choice(self.x_test.shape[0], size=n, replace=False)
+        idx = self._eval_rng.choice(self.x_test.shape[0], size=n,
+                                    replace=False)
         batch = {"images": jnp.asarray(self.x_test[idx]),
                  "labels": jnp.asarray(self.y_test[idx])}
         return float(cnn.loss_fn(params, batch))
 
     def test_accuracy(self, n: int = 1000) -> float:
         n = min(n, self.x_test.shape[0])
-        idx = self._rng.choice(self.x_test.shape[0], size=n, replace=False)
+        idx = self._eval_rng.choice(self.x_test.shape[0], size=n,
+                                    replace=False)
         batch = {"images": jnp.asarray(self.x_test[idx]),
                  "labels": jnp.asarray(self.y_test[idx])}
         return float(cnn.accuracy(self.params, batch))
@@ -294,7 +306,10 @@ class DTWNSystem:
         twin_models, twin_sizes, twin_bs = [], [], []
         for u in chosen:
             shard = self.shards[u]
-            n_use = max(8, int(b[u] * shard.size))
+            # clamp to the shard: b[u]*D_j can round past shard.size (and
+            # the floor of 8 can exceed tiny shards), which trained on a
+            # different batch than the b*D_j the Eq. 12 accounting charges
+            n_use = min(shard.size, max(8, int(b[u] * shard.size)))
             use = shard[: n_use]
             trainer = self.attacker if self.malicious[u] else self.trainer
             p_u, _ = trainer(

@@ -12,6 +12,8 @@ Examples:
       --rounds 20 --join 0.01 --leave 0.01 --no-overlap
   PYTHONPATH=src python -m repro.launch.serve_dtwn --capacity 64 \
       --rounds 30 --policy factorized --consensus --shards 8
+  PYTHONPATH=src python -m repro.launch.serve_dtwn --capacity 10000 \
+      --rounds 20 --fl --fl-model tiny --join 0.01 --leave 0.01
 """
 import argparse
 import os
@@ -42,6 +44,23 @@ def main(argv=None):
                          "(e.g. factorized); default streams round-robin")
     ap.add_argument("--evolve", action="store_true",
                     help="advance channel/frequency dynamics each round")
+    ap.add_argument("--fl", action="store_true",
+                    help="stream the real FL workload through the round "
+                         "step (per-twin model buffers + Eq. 4/5 on device)")
+    ap.add_argument("--fl-model", default="tiny",
+                    help="model to train: tiny (N=10^4+ scale) or cnn")
+    ap.add_argument("--fl-participants", type=int, default=10,
+                    help="twins trained per round")
+    ap.add_argument("--fl-iters", type=int, default=5,
+                    help="local SGD iterations per participant per round")
+    ap.add_argument("--fl-batch", type=int, default=8)
+    ap.add_argument("--fl-aggregator", default="fedavg",
+                    help="fedavg | trimmed_mean | krum")
+    ap.add_argument("--fl-shard-size", type=int, default=128,
+                    help="per-twin cyclic shard size over the dataset")
+    ap.add_argument("--fl-train", type=int, default=4096,
+                    help="training samples to load (CIFAR-10 or the "
+                         "deterministic synthetic fallback)")
     ap.add_argument("--no-overlap", action="store_true",
                     help="oracle mode: block every round (no pipelining)")
     ap.add_argument("--shards", type=int, default=0,
@@ -71,9 +90,19 @@ def main(argv=None):
         faults=FaultConfig() if args.faults else None,
         consensus=ConsensusConfig() if args.consensus else None,
     )
+    fcfg = None
+    if args.fl:
+        from repro.fl.stream import FLServeConfig
+
+        fcfg = FLServeConfig(model=args.fl_model,
+                             participants=args.fl_participants,
+                             local_iters=args.fl_iters,
+                             batch_size=args.fl_batch,
+                             aggregator=args.fl_aggregator,
+                             verify=args.consensus)
     scfg = serve.ServeConfig(capacity=args.capacity, join_rate=args.join,
                              leave_rate=args.leave, policy=args.policy,
-                             evolve_channels=args.evolve)
+                             evolve_channels=args.evolve, fl=fcfg)
 
     batch = scenario.make_batch(
         jax.random.PRNGKey(args.seed), 1,
@@ -90,10 +119,30 @@ def main(argv=None):
     sharded = ts.n_shards > 1
     init = serve.make_serve_init(cfg, scfg, ts=ts if sharded else None,
                                  n_live=args.live or None)
-    state = init(row_key, row)
-    if args.policy is not None:
-        state = serve.attach_policy(cfg, state,
-                                    jax.random.PRNGKey(args.seed + 1))
+
+    plan = data = None
+    if args.fl:
+        from repro.data import cifar10
+        from repro.fl import stream as fl_stream
+
+        data = cifar10.load(max_train=args.fl_train, max_test=512)
+        shards = fl_stream.cyclic_shards(data[0][0].shape[0], args.capacity,
+                                         args.fl_shard_size)
+        plan = fl_stream.stream_fl_plan(fcfg, shards, args.rounds,
+                                        seed=args.seed)
+
+    def fresh_state():
+        st = init(row_key, row)
+        if args.policy is not None:
+            st = serve.attach_policy(cfg, st,
+                                     jax.random.PRNGKey(args.seed + 1))
+        if args.fl:
+            fl = fl_stream.fl_init(fcfg, jax.random.PRNGKey(args.seed + 2),
+                                   data, np.asarray(st.active, bool))
+            st = st._replace(fl=fl)
+        return st
+
+    state = fresh_state()
     step = serve.make_round_step(cfg, scfg, ts=ts if sharded else None)
     keys = serve.stream_keys(row_key, args.rounds)
 
@@ -101,22 +150,29 @@ def main(argv=None):
           f" bs={args.n_bs} shards={ts.n_shards}"
           f" churn=({args.join},{args.leave}) policy={args.policy or 'static'}"
           f" axes=[{'M' if args.migration else ''}"
-          f"{'F' if args.faults else ''}{'C' if args.consensus else ''}]"
+          f"{'F' if args.faults else ''}{'C' if args.consensus else ''}"
+          f"{'L' if args.fl else ''}]"
           f" overlap={not args.no_overlap}")
+    if args.fl:
+        print(f"fl model={args.fl_model} participants="
+              f"{args.fl_participants} iters={args.fl_iters} "
+              f"batch={args.fl_batch} agg={args.fl_aggregator} "
+              f"data={data[2]}[{data[0][0].shape[0]}]")
 
     # warm up the compiled step off the clock (donation needs a throwaway
     # state — the donated argument is consumed)
+    plan1 = (None if plan is None else
+             jax.tree_util.tree_map(lambda x: x[:1], plan))
     warm, _ = serve.serve_rounds(cfg, scfg, state, serve.stream_keys(
-        jax.random.fold_in(row_key, 99), 1), row, step=step, overlap=False)
-    state = init(row_key, row)
-    if args.policy is not None:
-        state = serve.attach_policy(cfg, state,
-                                    jax.random.PRNGKey(args.seed + 1))
+        jax.random.fold_in(row_key, 99), 1), row, step=step, overlap=False,
+        plan=plan1)
+    state = fresh_state()
 
     t0 = time.time()
     state, metrics = serve.serve_rounds(cfg, scfg, state, keys, row,
                                         step=step,
-                                        overlap=not args.no_overlap)
+                                        overlap=not args.no_overlap,
+                                        plan=plan)
     metrics = serve.stack_metrics(metrics)  # blocks: end of the pipeline
     dt = time.time() - t0
 
@@ -133,6 +189,17 @@ def main(argv=None):
               "accept_frac", "consensus_time", "honest_stake_share"):
         if k in metrics:
             print(f"{k:18s} mean={float(np.mean(metrics[k])):.4f}")
+    if args.fl:
+        fll, fla = metrics["fl_loss"], metrics["fl_accuracy"]
+        print(f"fl_loss     {float(fll[0]):.4f} -> {float(fll[-1]):.4f}   "
+              f"fl_accuracy {float(fla[0]):.4f} -> {float(fla[-1]):.4f}")
+        print(f"fl_rounds   participants/round mean="
+              f"{float(np.mean(metrics['fl_n_participants'])):.1f}  "
+              f"accept_frac mean="
+              f"{float(np.mean(metrics['fl_accept_frac'])):.3f}")
+        if not (np.isfinite(fll).all() and np.isfinite(fla).all()):
+            print("ERROR: non-finite FL metrics", file=sys.stderr)
+            return 1
     if not np.isfinite(rt).all():
         print("ERROR: non-finite round times", file=sys.stderr)
         return 1

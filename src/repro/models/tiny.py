@@ -1,0 +1,53 @@
+"""A deliberately small FL model for population-scale streaming sweeps.
+
+The paper's CNN (``repro.models.cnn``) holds ~2.1M parameters — fine for
+one global model, impossible as a per-twin device buffer at N=10^4+ (the
+streamed-FL serve state keeps a ``(capacity, ...)`` model + momentum row
+per twin, ``repro.fl.stream``). This model keeps the same interface
+(``init_params`` / ``forward`` / ``loss_fn`` / ``accuracy`` over
+``{"images", "labels"}`` batches) and the same (32, 32, 3) inputs, but
+mean-pools to 8x8 patches and classifies through one small hidden layer:
+~3.3k parameters, so 10^4 twins cost ~260 MB of buffers instead of ~170 GB.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_POOL = 4            # 32 -> 8 spatial via 4x4 mean pooling
+_FEATS = 8 * 8 * 3   # flattened pooled features
+_HIDDEN = 16
+
+
+def init_params(key, num_classes: int = 10, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    he = lambda k, shape, fan_in: (
+        jax.random.normal(k, shape) * (2.0 / fan_in) ** 0.5
+    ).astype(dtype)
+    return {
+        "w1": he(k1, (_FEATS, _HIDDEN), _FEATS),
+        "b1": jnp.zeros((_HIDDEN,), dtype),
+        "w2": he(k2, (_HIDDEN, num_classes), _HIDDEN),
+        "b2": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def forward(params, images):
+    """images: (B, 32, 32, 3) float -> logits (B, 10)."""
+    b, h, w, c = images.shape
+    x = images.reshape(b, h // _POOL, _POOL, w // _POOL, _POOL, c)
+    x = x.mean(axis=(2, 4)).reshape(b, -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return x @ params["w2"] + params["b2"]
+
+
+def loss_fn(params, batch):
+    logits = forward(params, batch["images"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy(params, batch):
+    logits = forward(params, batch["images"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["labels"])

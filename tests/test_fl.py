@@ -69,3 +69,86 @@ def test_dtwn_loss_decreases_over_rounds(small_system):
     for _ in range(4):
         losses.append(sys.run_round(assoc, participating_users=8)["loss"])
     assert losses[-1] < losses[0], losses
+
+
+# ---------------------------------------------------------------------------
+# driver bugfix regressions: freq-table cycling, eval RNG separation,
+# and the n_use shard clamp
+
+
+def test_bs_freq_table_cycles_past_its_length():
+    """n_bs > len(bs_freqs_ghz) used to silently truncate the frequency
+    table (``bs_freqs_ghz[:n_bs]`` is a no-op), misbroadcasting every
+    Eq. 12-17 reduction over BSs. The table must cycle instead."""
+    from repro.core import association as assoc_mod
+
+    data = cifar10.load(max_train=400, max_test=128)
+    cfg = FLConfig(n_users=16, n_bs=8, local_iters=1, batch_size=8)
+    sys = DTWNSystem(cfg, data, seed=0)
+    table = np.asarray(cfg.bs_freqs_ghz, np.float32)  # 5 entries
+    assert sys.freqs.shape == (8,)
+    np.testing.assert_array_equal(sys.freqs,
+                                  table[np.arange(8) % table.size] * 1e9)
+    assoc = np.asarray(assoc_mod.average_association(16, 8))
+    info = sys.run_round(assoc, participating_users=4)
+    assert np.isfinite(info["round_time_s"]) and info["round_time_s"] > 0
+    assert np.isfinite(info["loss"])
+
+
+def test_eval_calls_do_not_perturb_participant_draws():
+    """holdout_loss/test_accuracy used to consume the participant RNG, so
+    the NUMBER of eval calls (which varies with BS occupancy) silently
+    changed which twins train in later rounds. Eval draws now come from a
+    dedicated stream: two same-seed systems that differ only in how often
+    they are evaluated must pick identical participants every round."""
+    from repro.core import association as assoc_mod
+
+    data = cifar10.load(max_train=400, max_test=128)
+    cfg = FLConfig(n_users=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=1, batch_size=8)
+    a = DTWNSystem(cfg, data, seed=5)
+    b = DTWNSystem(cfg, data, seed=5)
+    assoc = np.asarray(assoc_mod.average_association(12, 3))
+    for t in range(3):
+        ia = a.run_round(assoc, participating_users=4)
+        # extra evals between rounds — must not shift b's participant draws
+        b.test_accuracy(n=64)
+        ib = b.run_round(assoc, participating_users=4)
+        b.holdout_loss(b.params, n=64)
+        b.holdout_loss(b.params, n=32)
+        assert ia["chosen"] == ib["chosen"], (t, ia["chosen"], ib["chosen"])
+
+
+def test_n_use_clamped_to_tiny_shards():
+    """The training-batch floor of 8 can exceed a tiny shard, and
+    ``int(b*D_j)`` can round past it — either way the round used to train
+    on a different batch than the b*D_j the Eq. 12 accounting charges.
+    ``n_use`` is now clamped to the shard, and the streamed plan applies
+    the identical law, so accounted == trained on both paths."""
+    from repro.core import association as assoc_mod
+    from repro.fl import stream as fls
+
+    data = cifar10.load(max_train=60, max_test=128)
+    cfg = FLConfig(n_users=12, n_bs=3, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=1, batch_size=4)
+    sys = DTWNSystem(cfg, data, seed=0)
+    b = np.full(12, 0.5, np.float32)
+    sizes = np.asarray([s.size for s in sys.shards])
+    assert (sizes < 8).any(), sizes  # the floor would overrun these shards
+    assoc = np.asarray(assoc_mod.average_association(12, 3))
+    info = sys.run_round(assoc, b=b, participating_users=6)
+    assert np.isfinite(info["loss"]) and info["round_time_s"] > 0
+    # streamed plan mirrors the clamp: every gathered index lives inside
+    # the clamped prefix shard[:n_use] of its twin's shard
+    fcfg = fls.FLServeConfig(model="tiny", participants=6, local_iters=2,
+                             batch_size=1)
+    plan = fls.stream_fl_plan(fcfg, sys.shards, 2, seed=0, b=0.5)
+    users = np.asarray(plan.users)
+    batch = np.asarray(plan.batch)
+    for t in range(users.shape[0]):
+        for k, u in enumerate(users[t]):
+            shard = sys.shards[int(u)]
+            n_use = min(shard.size, max(8, int(0.5 * shard.size)))
+            allowed = set(shard[:n_use].tolist())
+            got = set(batch[t, k].reshape(-1).tolist())
+            assert got <= allowed, (t, int(u), got - allowed)

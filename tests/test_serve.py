@@ -402,6 +402,238 @@ def test_run_round_active_mask_excludes_departed():
 
 
 # ---------------------------------------------------------------------------
+# streamed-FL battery: batch parity, churn contract, donation
+# ---------------------------------------------------------------------------
+
+
+def _fl_batch_system(fcfg, data, n=16, m=3, seed=0):
+    """The batch-mode reference: a DTWNSystem whose knobs mirror ``fcfg``
+    (chain gate tolerance included — both gates must accept the same
+    honest submissions for trajectory parity)."""
+    from repro.fl.server import DTWNSystem, FLConfig
+
+    cfg = FLConfig(n_users=n, n_bs=m, bs_freqs_ghz=(2.6, 1.8, 3.6),
+                   local_iters=fcfg.local_iters, batch_size=fcfg.batch_size,
+                   lr=fcfg.lr, weighted_global=fcfg.weighted_global,
+                   consensus=ConsensusConfig(tolerance=fcfg.tolerance))
+    return DTWNSystem(cfg, data, seed=seed)
+
+
+def _fl_streamed(fcfg, system, data, assoc, rounds, *, overlap=False,
+                 join=0.0, leave=0.0, n_live=None, seed_key=None):
+    """K streamed FL rounds on the SAME realization the batch system
+    trains (attach_fl bridges model init, shards, D_j, association)."""
+    from repro.fl import stream as fls
+
+    n, m = system.cfg.n_users, system.cfg.n_bs
+    cfg = EnvConfig(n_twins=n, n_bs=m)
+    scfg = serve.ServeConfig(capacity=n, join_rate=join, leave_rate=leave,
+                             fl=fcfg)
+    key = KEY if seed_key is None else seed_key
+    batch = scenario.make_batch(key, 2)
+    row = scenario.knob_row(scenario.stream_knobs(batch), 0)
+    state = serve.serve_init(cfg, scfg, batch.key[0], row, n_live=n_live)
+    state = fls.attach_fl(scfg, state, system, data, assoc=assoc)
+    plan = fls.stream_fl_plan(fcfg, system.shards, rounds, seed=0)
+    keys = serve.stream_keys(batch.key[0], rounds)
+    state, metrics = serve.serve_rounds(cfg, scfg, state, keys, row,
+                                        overlap=overlap, plan=plan)
+    return state, serve.stack_metrics(metrics), plan
+
+
+def test_streamed_fl_matches_batch_rounds():
+    """Fixed full population, churn off: the streamed FL rounds ARE the
+    batch ``run_round`` trajectory — same participants, bit-identical
+    Eq. 4 weights (integer-valued D_j), and the loss/params trajectory
+    equal up to vmap conv-batching float error."""
+    from repro.data import cifar10
+    from repro.fl import stream as fls
+    from repro.models import cnn
+
+    n, m, rounds = 16, 3, 3
+    data = cifar10.load(max_train=2000, max_test=512)
+    fcfg = fls.FLServeConfig(model="cnn", participants=5, local_iters=2,
+                             batch_size=8, tolerance=25.0)
+    system = _fl_batch_system(fcfg, data, n=n, m=m)
+    assoc = np.arange(n) % m
+    _, mtr, plan = _fl_streamed(fcfg, system, data, assoc, rounds)
+
+    eval_batch = {"images": jnp.asarray(system.x_test[:fcfg.n_eval]),
+                  "labels": jnp.asarray(system.y_test[:fcfg.n_eval])}
+    users = np.asarray(plan.users)
+    for t in range(rounds):
+        info = system.run_round(assoc,
+                                participating_users=fcfg.participants)
+        # same participants, in the same draw order
+        np.testing.assert_array_equal(users[t], np.asarray(info["chosen"]))
+        # bit-identical Eq. 4 weights: integer-valued D_j sum exactly
+        w_ref = np.zeros(m, np.float32)
+        for u in info["chosen"]:
+            w_ref[assoc[u]] += np.float32(system.data_sizes[u])
+        np.testing.assert_array_equal(mtr["fl_bs_weight"][t], w_ref)
+        # both gates accept every honest submission
+        assert info["n_verified"] == info["n_submitted"]
+        assert mtr["fl_accept_frac"][t] == 1.0
+        # loss trajectory on the shared fixed holdout slice (allclose, not
+        # bitwise: vmap lowers the P local trainings to grouped convs)
+        loss_ref = float(cnn.loss_fn(system.params, eval_batch))
+        np.testing.assert_allclose(mtr["fl_loss"][t], loss_ref, rtol=1e-5)
+    assert mtr["fl_loss"][-1] < mtr["fl_loss"][0]
+
+
+def _fl_tiny_setup(fcfg, n, m, rounds, *, join=0.0, leave=0.0, n_live=None,
+                   row_i=0, max_train=1000, malicious=None):
+    """Streamed-FL fixture on the ``tiny`` model (no batch pairing): serve
+    state + warm-started FL state + plan over IID shards."""
+    from repro.data import cifar10
+    from repro.fl import stream as fls
+    from repro.fl.partition import iid_partition
+
+    data = cifar10.load(max_train=max_train, max_test=256)
+    cfg = EnvConfig(n_twins=n, n_bs=m)
+    scfg = serve.ServeConfig(capacity=n, join_rate=join, leave_rate=leave,
+                             fl=fcfg)
+    batch = scenario.make_batch(KEY, 2)
+    row = scenario.knob_row(scenario.stream_knobs(batch), row_i)
+    state = serve.serve_init(cfg, scfg, batch.key[row_i], row,
+                             n_live=n_live)
+    fl = fls.fl_init(fcfg, jax.random.PRNGKey(7), data,
+                     np.asarray(state.active, bool), malicious=malicious)
+    state = state._replace(fl=fl)
+    plan = fls.stream_fl_plan(fcfg, iid_partition(max_train, n, seed=3),
+                              rounds, seed=0)
+    keys = serve.stream_keys(batch.key[row_i], rounds)
+    return cfg, scfg, state, row, plan, keys
+
+
+def test_streamed_fl_churn_contract():
+    """Churn on: evicted twins' model rows go to the padding convention
+    (all-zero, never re-aggregated), admitted twins warm-start from the
+    round's new global model with zero momentum, and idle live rows are
+    untouched. Overlap mode changes none of it."""
+    from repro.fl import stream as fls
+
+    n, m, rounds = 16, 3, 6
+    fcfg = fls.FLServeConfig(model="tiny", participants=4, local_iters=1,
+                             batch_size=8, verify=False)
+    cfg, scfg, state, row, plan, keys = _fl_tiny_setup(
+        fcfg, n, m, rounds, join=0.4, leave=0.3, n_live=10, row_i=1)
+    step = serve.make_round_step(cfg, scfg)
+
+    prev_active = np.asarray(state.active, bool)
+    for t in range(rounds):
+        prev_tp = np.array(state.fl.twin_params["w1"])
+        state, mtr = step(state, serve.round_keys(keys, t), row,
+                          fls.plan_row(plan, t))
+        state = jax.block_until_ready(state)
+        act = np.asarray(state.active, bool)
+        g = np.array(state.fl.params["w1"])
+        tp = np.array(state.fl.twin_params["w1"])
+        mom = np.array(state.fl.twin_mom["w1"])
+        joined = act & ~prev_active
+        # padding convention on every dead row (evicted or never-admitted)
+        assert (tp[~act] == 0.0).all() and (mom[~act] == 0.0).all()
+        # admitted rows warm-start from the round's NEW global model
+        np.testing.assert_array_equal(
+            tp[joined], np.broadcast_to(g, (int(joined.sum()),) + g.shape))
+        assert (mom[joined] == 0.0).all()
+        # surviving idle rows untouched
+        part = set(np.asarray(fls.plan_row(plan, t).users).tolist())
+        idle = act & prev_active & ~np.isin(np.arange(n), list(part))
+        np.testing.assert_array_equal(tp[idle], prev_tp[idle])
+        assert np.isfinite(float(mtr["fl_loss"]))
+        prev_active = act
+
+    # overlap is a scheduling change only, FL metrics included
+    def rerun(overlap):
+        cfg2, scfg2, st, row2, plan2, keys2 = _fl_tiny_setup(
+            fcfg, n, m, 4, join=0.2, leave=0.2, n_live=12, row_i=1)
+        _, mtr = serve.serve_rounds(cfg2, scfg2, st, keys2, row2,
+                                    overlap=overlap, plan=plan2)
+        return serve.stack_metrics(mtr)
+
+    m_pipe, m_block = rerun(True), rerun(False)
+    assert m_pipe.keys() == m_block.keys()
+    for key in m_pipe:
+        np.testing.assert_array_equal(m_pipe[key], m_block[key])
+
+
+def test_fl_step_donates_model_buffers():
+    """The donation census extends to the FL model buffers: per-twin
+    params/momentum, the global model, and the datasets all ride the
+    donated ServeState."""
+    from repro.fl import stream as fls
+
+    fcfg = fls.FLServeConfig(model="tiny", participants=4, local_iters=1,
+                             batch_size=8, verify=False)
+    cfg, scfg, state, row, plan, keys = _fl_tiny_setup(fcfg, 16, 3, 1,
+                                                       max_train=500)
+    step = serve.make_round_step(cfg, scfg)
+    state2, _ = step(state, serve.round_keys(keys, 0), row,
+                     fls.plan_row(plan, 0))
+    jax.block_until_ready(state2)
+    assert state.fl.twin_params["w1"].is_deleted()
+    assert state.fl.twin_mom["w1"].is_deleted()
+    assert state.fl.params["w1"].is_deleted()
+    assert state.fl.x.is_deleted()
+    assert not state2.fl.twin_params["w1"].is_deleted()
+
+
+def test_fl_streaming_census_flat():
+    """No device-buffer leak with the FL workload on: the live-array
+    census is flat from round 3 on — model buffers reuse their donated
+    storage instead of allocating a fresh capacity-sized set per round."""
+    from repro.fl import stream as fls
+
+    rounds = 10
+    fcfg = fls.FLServeConfig(model="tiny", participants=4, local_iters=1,
+                             batch_size=8, verify=False)
+    cfg, scfg, state, row, plan, keys = _fl_tiny_setup(
+        fcfg, 16, 3, rounds, join=0.1, leave=0.1, max_train=500)
+    step = serve.make_round_step(cfg, scfg)
+
+    def census():
+        gc.collect()
+        return len(jax.live_arrays())
+
+    counts = []
+    for t in range(rounds):
+        state, mtr = step(state, serve.round_keys(keys, t), row,
+                          fls.plan_row(plan, t))
+        _ = {k: np.array(v) for k, v in mtr.items()}
+        del mtr
+        if t >= 3:
+            counts.append(census())
+    assert len(set(counts)) == 1, counts
+
+
+def test_fl_verify_gate_rejects_poisoned_bs():
+    """A boosted model-replacement cohort saturating one BS fails the
+    on-device loss gate (Eq. 4 verify): its submission is rejected while
+    the honest BSs keep aggregating."""
+    from repro.fl import stream as fls
+
+    n, m, rounds = 16, 3, 4
+    fcfg = fls.FLServeConfig(model="tiny", participants=8, local_iters=2,
+                             batch_size=8, attack="model_replacement",
+                             attack_boost=50.0, verify=True, tolerance=0.5)
+    cfg, scfg, state, row, plan, keys = _fl_tiny_setup(fcfg, n, m, rounds)
+    assoc = np.asarray(state.env.assoc)
+    mal = assoc == assoc[0]  # one BS's whole cohort is hostile
+    assert 0 < mal.sum() < n
+    state = state._replace(fl=state.fl._replace(
+        malicious=jnp.asarray(mal)))
+    _, mtr = serve.serve_rounds(cfg, scfg, state, keys, row, overlap=False,
+                                plan=plan)
+    mtr = serve.stack_metrics(mtr)
+    assert np.isfinite(mtr["fl_loss"]).all()
+    # the gate fires: some round rejects a submission
+    assert (mtr["fl_accept_frac"] < 1.0).any(), mtr["fl_accept_frac"]
+    # and the surviving global model is not the boosted garbage
+    assert mtr["fl_loss"][-1] < 10.0
+
+
+# ---------------------------------------------------------------------------
 # slow battery: 8-device subprocess gate + churn soak
 # ---------------------------------------------------------------------------
 
@@ -420,6 +652,24 @@ def test_serve_gate_8_devices():
     assert out.returncode == 0, out.stderr[-4000:]
     assert "serve parity ok" in out.stdout, out.stdout
     assert "serve churn ok" in out.stdout, out.stdout
+
+
+@pytest.mark.slow
+def test_serve_fl_gate_8_devices():
+    """Streamed-FL parity under a real 8-shard twin scope: the serve loop
+    with the FL workload attached (vmapped local SGD, on-device Eq. 4/5,
+    chain verify) must match the single-device path on a ragged N=37
+    population, and churned FL rounds must keep evicted model rows zeroed
+    — the same gate CI runs via bench_scale --smoke."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_scale", "--serve-fl-gate"],
+        capture_output=True, text=True, timeout=560, env=env, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "serve fl parity ok" in out.stdout, out.stdout
+    assert "serve fl churn ok" in out.stdout, out.stdout
 
 
 @pytest.mark.slow

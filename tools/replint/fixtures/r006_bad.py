@@ -23,3 +23,24 @@ def round_step_decorated(state):
 @jax.jit(static_argnames=("cfg",))  # expect: R006
 def serve_round_step(cfg, state):
     return state + 1.0
+
+
+# the FL-workload round step: the (state, keys, row, plan) signature of
+# repro.core.serve once model buffers ride in the ServeState — the plan
+# row is fresh host data each round, but the state must still be donated
+def _fl_round_step(fcfg, state, keys, plan):
+    return state + jnp.tanh(keys) * plan, {"fl_loss": jnp.tanh(state)}
+
+
+fl_step = jax.jit(_fl_round_step, static_argnames=("fcfg",))  # expect: R006
+
+
+class _Shard:
+    def shard_map(self, fn, specs):
+        return fn
+
+
+# sharded serve idiom: jit of a shard_map-wrapped round step still owes
+# the donation — the twin-sharded model buffers double all the same
+sharded_step = jax.jit(  # expect: R006
+    _Shard().shard_map(_fl_round_step, specs=None))

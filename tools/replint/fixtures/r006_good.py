@@ -21,6 +21,27 @@ def round_step_decorated(state):
     return state * 2.0
 
 
+def _fl_round_step(fcfg, state, keys, plan):
+    return state + jnp.tanh(keys) * plan, {"fl_loss": jnp.tanh(state)}
+
+
+# the FL serve idiom (repro.core.serve with model buffers in ServeState):
+# cfg/scfg static, state donated, keys/plan-row passed fresh each round
+fl_step = jax.jit(_fl_round_step, static_argnames=("fcfg",),
+                  donate_argnums=(1,))
+
+
+class _Shard:
+    def shard_map(self, fn, specs):
+        return fn
+
+
+# sharded FL serve idiom: the shard_map wrapper's first positional arg is
+# the donated state, so donate_argnums=(0,) on the jit
+sharded_fl_step = jax.jit(_Shard().shard_map(_fl_round_step, specs=None),
+                          donate_argnums=(0,))
+
+
 def train_step(params, batch):
     return params
 
